@@ -1,0 +1,292 @@
+"""One function per paper table/figure. Results cached to experiments/results/.
+
+Figures:
+  fig01a  ED2P opportunity vs DVFS epoch duration
+  fig01b  prediction accuracy vs epoch duration
+  fig07   consecutive-epoch sensitivity variation (1us + epoch sweep)
+  fig10   same-PC iteration variation at WF/CU/64CU granularity
+  fig11b  PC-table index offset sweep
+  fig14   prediction accuracy by mechanism
+  fig15   ED2P by workload, normalized to static 1.7 GHz
+  fig16   frequency time-share under PCSTALL
+  fig17   EDP vs epoch duration
+  fig18a  energy savings at 5%/10% perf-degradation caps
+  fig18b  ED2P vs V/f-domain granularity
+  tab01   hardware table overhead
+"""
+from __future__ import annotations
+
+import dataclasses
+import json
+from pathlib import Path
+from typing import Dict, List
+
+import numpy as np
+
+from repro.core.simulate import (MECHANISMS, SimConfig, ednp,
+                                 prediction_accuracy, run_sim, run_workload)
+from repro.core.workloads import WORKLOAD_TABLE, all_workloads, get_workload
+
+RESULTS = Path(__file__).resolve().parents[1] / "experiments" / "results"
+RESULTS.mkdir(parents=True, exist_ok=True)
+
+CORE_MECHS = ("static13", "static17", "static22", "stall", "lead", "crit",
+              "crisp", "accreac", "pcstall", "accpc", "oracle")
+FAST_MECHS = ("static13", "static17", "static22", "crisp", "accreac",
+              "pcstall", "accpc", "oracle")
+N_EPOCHS = 800
+
+
+def _cache(name: str, fn):
+    f = RESULTS / f"{name}.json"
+    if f.exists():
+        return json.loads(f.read_text())
+    out = fn()
+    f.write_text(json.dumps(out, indent=1))
+    return out
+
+
+def _consec_var(s: np.ndarray) -> float:
+    sbar = np.maximum(np.mean(s, axis=0, keepdims=True), 1e-6)
+    return float(np.mean(np.abs(np.diff(s, axis=0)) / sbar))
+
+
+WORKLOADS_FAST = ["comd", "hpgmg", "lulesh", "xsbench", "hacc", "quickS",
+                  "dgemm", "BwdBN", "BwdPool", "FwdSoft"]
+
+
+def fig14_accuracy() -> Dict:
+    """Prediction accuracy by mechanism (paper Fig 14)."""
+    def run():
+        sim = SimConfig(n_epochs=N_EPOCHS)
+        out = {}
+        for wl in WORKLOADS_FAST:
+            prog = get_workload(wl)
+            out[wl] = {m: prediction_accuracy(run_sim(prog, sim, m))
+                       for m in CORE_MECHS if not m.startswith("static")}
+        out["MEAN"] = {m: float(np.mean([out[w][m] for w in WORKLOADS_FAST]))
+                       for m in out[WORKLOADS_FAST[0]]}
+        return out
+    return _cache("fig14_accuracy", run)
+
+
+def fig15_ed2p() -> Dict:
+    """ED2P by workload normalized to static 1.7 GHz (paper Fig 15)."""
+    def run():
+        out = {}
+        for wl in WORKLOADS_FAST:
+            r = run_workload(get_workload(wl), SimConfig(n_epochs=N_EPOCHS),
+                             mechanisms=FAST_MECHS, n=2)
+            out[wl] = {m: float(d["ednp_norm"]) for m, d in r.items()}
+        out["GEOMEAN"] = {m: float(np.exp(np.mean([np.log(out[w][m])
+                          for w in WORKLOADS_FAST]))) for m in FAST_MECHS}
+        return out
+    return _cache("fig15_ed2p", run)
+
+
+def fig01_epoch_sweep() -> Dict:
+    """ED2P opportunity + accuracy vs epoch duration (paper Fig 1a/1b, 17)."""
+    def run():
+        mechs = ("static17", "crisp", "pcstall", "oracle")
+        out = {}
+        for T in (1.0, 10.0, 50.0, 100.0):
+            n_ep = max(200, int(1200 / max(T / 4, 1)))
+            sim = SimConfig(epoch_us=T, n_epochs=n_ep)
+            acc = {m: [] for m in mechs if m != "static17"}
+            e2 = {m: [] for m in mechs}
+            e1 = {m: [] for m in mechs}
+            for wl in ("comd", "hacc", "lulesh", "dgemm", "xsbench", "BwdBN"):
+                r2 = run_workload(get_workload(wl), sim, mechanisms=mechs, n=2)
+                r1 = run_workload(get_workload(wl), sim, mechanisms=mechs, n=1)
+                for m in mechs:
+                    e2[m].append(np.log(r2[m]["ednp_norm"]))
+                    e1[m].append(np.log(r1[m]["ednp_norm"]))
+                    if m != "static17":
+                        acc[m].append(r2[m]["accuracy"])
+            out[str(T)] = {
+                "ed2p": {m: float(np.exp(np.mean(v))) for m, v in e2.items()},
+                "edp": {m: float(np.exp(np.mean(v))) for m, v in e1.items()},
+                "accuracy": {m: float(np.mean(v)) for m, v in acc.items()},
+            }
+        return out
+    return _cache("fig01_epoch_sweep", run)
+
+
+def fig07_variation() -> Dict:
+    """Sensitivity variation across consecutive epochs (paper Fig 7a/7b)."""
+    def run():
+        out = {"per_workload_1us": {}, "epoch_sweep": {}}
+        for wl in WORKLOADS_FAST:
+            tr = run_sim(get_workload(wl), SimConfig(n_epochs=400), "accreac")
+            out["per_workload_1us"][wl] = _consec_var(tr["true_sens"][50:])
+        for T in (1.0, 10.0, 50.0, 100.0):
+            vs = []
+            for wl in ("comd", "hacc", "dgemm", "xsbench"):
+                tr = run_sim(get_workload(wl), SimConfig(epoch_us=T, n_epochs=300),
+                             "accreac")
+                vs.append(_consec_var(tr["true_sens"][30:]))
+            out["epoch_sweep"][str(T)] = float(np.mean(vs))
+        return out
+    return _cache("fig07_variation", run)
+
+
+def fig10_pc_stability() -> Dict:
+    """Same-start-PC iteration variation (paper Fig 10) at WF granularity."""
+    def run():
+        out = {}
+        for wl in ("comd", "hacc", "dgemm", "xsbench", "lulesh"):
+            tr = run_sim(get_workload(wl), SimConfig(n_epochs=500, record_wf=True),
+                         "accreac")
+            ws, wb = tr["wf_sens"][50:], tr["wf_blk"][50:]
+            vals = []
+            for cu in range(0, 64, 16):
+                for wf in range(0, 40, 13):
+                    sv, bv = ws[:, cu, wf], wb[:, cu, wf]
+                    sm = max(float(np.mean(np.abs(sv))), 1e-6)
+                    for b in np.unique(bv)[:15]:
+                        x = sv[bv == b]
+                        if len(x) > 2:
+                            vals.append(np.mean(np.abs(np.diff(x)) / sm))
+            out[wl] = float(np.mean(vals))
+        out["MEAN"] = float(np.mean(list(out.values())))
+        return out
+    return _cache("fig10_pc_stability", run)
+
+
+def fig11b_offset_sweep() -> Dict:
+    """PC-table index offset sweep (paper Fig 11b)."""
+    def run():
+        out = {}
+        for off in (1, 2, 4, 8, 16, 32, 64):
+            accs = []
+            for wl in ("comd", "hacc", "lulesh", "BwdBN"):
+                sim = SimConfig(n_epochs=500, offset_blocks=off)
+                accs.append(prediction_accuracy(
+                    run_sim(get_workload(wl), sim, "pcstall")))
+            out[str(off * 4) + "_instr"] = float(np.mean(accs))
+        return out
+    return _cache("fig11b_offset_sweep", run)
+
+
+def fig16_timeshare() -> Dict:
+    """Frequency time-share per workload under PCSTALL/ED2P (paper Fig 16)."""
+    def run():
+        out = {}
+        for wl in WORKLOADS_FAST:
+            tr = run_sim(get_workload(wl), SimConfig(n_epochs=N_EPOCHS), "pcstall")
+            h = np.bincount(tr["fidx"].ravel(), minlength=10) / tr["fidx"].size
+            out[wl] = [round(float(x), 4) for x in h]
+        return out
+    return _cache("fig16_timeshare", run)
+
+
+def fig18a_energy_caps() -> Dict:
+    """Energy savings at perf-degradation caps (paper Fig 18a)."""
+    def run():
+        out = {}
+        for obj in ("perfcap05", "perfcap10"):
+            sub = {}
+            for m in ("crisp", "pcstall", "accpc", "oracle"):
+                savings = []
+                for wl in ("comd", "hacc", "lulesh", "dgemm", "xsbench", "BwdBN"):
+                    prog = get_workload(wl)
+                    sim = SimConfig(n_epochs=N_EPOCHS, objective=obj)
+                    base = run_sim(prog, dataclasses.replace(sim, objective="ed2p"),
+                                   "static22")
+                    tr = run_sim(prog, sim, m)
+                    budget = 0.9 * base["work"].sum()
+                    E0, D0, _ = ednp(base, budget, sim.epoch_us)
+                    E, D, _ = ednp(tr, budget, sim.epoch_us)
+                    savings.append(1.0 - E / E0)
+                sub[m] = float(np.mean(savings))
+            out[obj] = sub
+        return out
+    return _cache("fig18a_energy_caps", run)
+
+
+def fig18b_granularity() -> Dict:
+    """ED2P vs V/f-domain granularity (paper Fig 18b)."""
+    def run():
+        out = {}
+        for g in (1, 2, 4, 8, 16, 32):
+            sub = {}
+            for m in ("crisp", "pcstall", "oracle"):
+                vals = []
+                for wl in ("comd", "hacc", "lulesh", "BwdBN"):
+                    sim = SimConfig(n_epochs=N_EPOCHS, cus_per_domain=g,
+                                    cus_per_table=g)
+                    r = run_workload(get_workload(wl), sim,
+                                     mechanisms=("static17", m), n=2)
+                    vals.append(np.log(r[m]["ednp_norm"]))
+                sub[m] = float(np.exp(np.mean(vals)))
+            out[str(g) + "CU"] = sub
+        return out
+    return _cache("fig18b_granularity", run)
+
+
+def tab01_overhead() -> Dict:
+    """Hardware storage overhead of PCSTALL (paper Table I)."""
+    entries, wf = 128, 40
+    return {
+        "sensitivity_table_bytes": entries,          # 1B quantized sens/entry
+        "starting_pc_registers_bytes": wf,           # index bits only
+        "stall_time_registers_bytes": 4 * wf,
+        "total_bytes": entries + wf + 4 * wf,
+        "note": "matches paper Table I: 328B per PCSTALL instance",
+    }
+
+
+ALL_FIGS = {
+    "fig01_epoch_sweep": fig01_epoch_sweep,
+    "fig07_variation": fig07_variation,
+    "fig10_pc_stability": fig10_pc_stability,
+    "fig11b_offset_sweep": fig11b_offset_sweep,
+    "fig14_accuracy": fig14_accuracy,
+    "fig15_ed2p": fig15_ed2p,
+    "fig16_timeshare": fig16_timeshare,
+    "fig18a_energy_caps": fig18a_energy_caps,
+    "fig18b_granularity": fig18b_granularity,
+    "tab01_overhead": tab01_overhead,
+}
+
+
+def fig11a_slot_contention() -> Dict:
+    """Per-WF-slot sensitivity variation (paper Fig 11a, quickS): the
+    oldest-first scheduler shields slot 0; younger slots vary more."""
+    def run():
+        import numpy as np
+        # occupancy-saturated CU (paper's quickS is issue-bound): lower the
+        # issue capacity so the oldest-first scheduler actually squeezes
+        tr = run_sim(get_workload("quickS"),
+                     SimConfig(n_epochs=500, record_wf=True,
+                               cap_per_ghz=2400.0), "accreac")
+        ws = tr["wf_sens"][50:]  # (T, CU, WF)
+        out = []
+        for k in range(0, 40, 4):
+            sv = ws[:, :, k]
+            sbar = np.maximum(np.mean(np.abs(sv), axis=0, keepdims=True), 1e-6)
+            out.append(float(np.mean(np.abs(np.diff(sv, axis=0)) / sbar)))
+        return {"slots_0_36_step4": out,
+                "slope_positive": bool(out[-1] > out[0])}
+    return _cache("fig11a_slot_contention", run)
+
+
+def tab_hitrate() -> Dict:
+    """PC-table hit ratio vs entries (paper §4.4: 128 entries -> 95%+)."""
+    def run():
+        import numpy as np
+        out = {}
+        for entries in (16, 32, 64, 128, 256):
+            hrs = []
+            for wl in ("comd", "hacc", "lulesh", "dgemm"):
+                sim = SimConfig(n_epochs=400, entries=entries,
+                                offset_blocks=max(1024 // entries, 1))
+                tr = run_sim(get_workload(wl), sim, "pcstall")
+                hrs.append(float(np.mean(tr["hit_rate"][50:])))
+            out[str(entries)] = float(np.mean(hrs))
+        return out
+    return _cache("tab_hitrate", run)
+
+
+ALL_FIGS["fig11a_slot_contention"] = fig11a_slot_contention
+ALL_FIGS["tab_hitrate"] = tab_hitrate

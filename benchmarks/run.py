@@ -1,0 +1,93 @@
+"""Benchmark driver: one function per paper table/figure plus perf micros.
+
+Prints ``name,us_per_call,derived`` CSV rows. Figure benchmarks are cached in
+experiments/results/*.json (delete to re-run). ``--figs`` selects a subset.
+"""
+from __future__ import annotations
+
+import argparse
+import sys
+import time
+
+
+def _perf_micros():
+    """Microbenchmarks of the core engine + kernels (CPU wall time)."""
+    import jax
+    import jax.numpy as jnp
+    import numpy as np
+    from repro.core.simulate import SimConfig, run_sim
+    from repro.core.workloads import get_workload
+
+    rows = []
+    prog = get_workload("comd")
+    sim = SimConfig(n_epochs=200)
+    run_sim(prog, sim, "pcstall")  # warm compile
+    t0 = time.perf_counter()
+    run_sim(prog, sim, "pcstall")
+    dt = (time.perf_counter() - t0) / 200 * 1e6
+    rows.append(("sim_epoch_pcstall_64cu", dt, "us/epoch"))
+
+    from repro.kernels import ops
+    q = jnp.asarray(np.random.randn(2, 256, 4, 64), jnp.float32)
+    k = jnp.asarray(np.random.randn(2, 256, 2, 64), jnp.float32)
+    v = jnp.asarray(np.random.randn(2, 256, 2, 64), jnp.float32)
+    out = ops.flash_attention(q, k, v, causal=True)  # warm
+    out.block_until_ready()
+    t0 = time.perf_counter()
+    for _ in range(3):
+        ops.flash_attention(q, k, v, causal=True).block_until_ready()
+    rows.append(("pallas_flash_attn_interp_256", (time.perf_counter() - t0) / 3 * 1e6,
+                 "us/call (interpret mode)"))
+    return rows
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--figs", default="all",
+                    help="comma list of figure names, 'all', or 'none'")
+    ap.add_argument("--skip-micros", action="store_true")
+    args = ap.parse_args()
+
+    print("name,us_per_call,derived")
+    if not args.skip_micros:
+        for name, us, derived in _perf_micros():
+            print(f"{name},{us:.1f},{derived}")
+        sys.stdout.flush()
+
+    from benchmarks.paper_figs import ALL_FIGS
+    names = (list(ALL_FIGS) if args.figs == "all"
+             else [] if args.figs == "none" else args.figs.split(","))
+    for name in names:
+        t0 = time.perf_counter()
+        res = ALL_FIGS[name]()
+        dt = (time.perf_counter() - t0) * 1e6
+        # one-line derived summary per figure
+        if name == "fig14_accuracy":
+            d = res["MEAN"]
+            summary = " ".join(f"{m}={d[m]:.2f}" for m in
+                               ("crisp", "accreac", "pcstall", "accpc", "oracle"))
+        elif name == "fig15_ed2p":
+            d = res["GEOMEAN"]
+            summary = " ".join(f"{m}={d[m]:.2f}" for m in
+                               ("static22", "crisp", "pcstall", "oracle"))
+        elif name == "fig01_epoch_sweep":
+            summary = " ".join(f"{T}us:pc={v['ed2p']['pcstall']:.2f}/or={v['ed2p']['oracle']:.2f}"
+                               for T, v in res.items())
+        elif name == "fig07_variation":
+            summary = " ".join(f"{T}us={v:.2f}" for T, v in res["epoch_sweep"].items())
+        elif name == "fig10_pc_stability":
+            summary = f"mean_samePC_var={res['MEAN']:.3f}"
+        elif name == "fig11b_offset_sweep":
+            summary = " ".join(f"{k}={v:.2f}" for k, v in res.items())
+        elif name == "fig18a_energy_caps":
+            summary = " ".join(f"{o}:pc={v['pcstall']:.3f}" for o, v in res.items())
+        elif name == "fig18b_granularity":
+            summary = " ".join(f"{g}:pc={v['pcstall']:.2f}" for g, v in res.items())
+        else:
+            summary = "ok"
+        print(f"{name},{dt:.0f},{summary}")
+        sys.stdout.flush()
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,14 @@
+"""Scalability study (paper Fig 18b): PCSTALL at 1/4/16-CU V/f domain
+granularity on a phased workload.
+
+  PYTHONPATH=src python examples/dvfs_granularity.py
+"""
+from repro.core.simulate import SimConfig, run_workload
+from repro.core.workloads import get_workload
+
+prog = get_workload("hacc")
+for g in (1, 4, 16):
+    sim = SimConfig(n_epochs=500, cus_per_domain=g, cus_per_table=g)
+    r = run_workload(prog, sim, mechanisms=("static17", "pcstall", "oracle"))
+    print(f"{g:2d}-CU domains: pcstall ED2P={r['pcstall']['ednp_norm']:.3f} "
+          f"oracle={r['oracle']['ednp_norm']:.3f}")

@@ -1,0 +1,19 @@
+"""Quickstart: the paper's mechanism in 30 lines.
+
+Runs PCSTALL vs reactive CRISP vs ORACLE on one GPU workload and prints
+prediction accuracy + normalized ED2P (paper Figs 14/15).
+
+  PYTHONPATH=src python examples/quickstart.py
+"""
+from repro.core.simulate import SimConfig, run_workload
+from repro.core.workloads import get_workload
+
+sim = SimConfig(n_epochs=600)            # 64-CU GPU, 1us epochs, ED2P
+prog = get_workload("comd")              # Molecular Dynamics proxy app
+
+results = run_workload(prog, sim,
+                       mechanisms=("static17", "crisp", "pcstall", "oracle"))
+print(f"{'mechanism':10s} {'accuracy':>9s} {'ED2P vs 1.7GHz':>15s}")
+for mech, r in results.items():
+    acc = "-" if mech.startswith("static") else f"{r['accuracy']:.3f}"
+    print(f"{mech:10s} {acc:>9s} {r['ednp_norm']:>15.3f}")

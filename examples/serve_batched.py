@@ -1,0 +1,14 @@
+"""Serve a reduced RWKV6 (attention-free: O(1)-state decode) with batched
+requests: prefill + 48 decode steps, plus the DVFS phase report.
+
+  PYTHONPATH=src python examples/serve_batched.py
+"""
+from repro.configs import get_smoke_config
+from repro.launch.serve import serve
+
+cfg = get_smoke_config("rwkv6-3b")
+rep = serve(cfg, batch=4, prompt_len=64, gen=48, dvfs=True)
+print(f"prefill {rep['prefill_s']*1e3:.1f}ms, "
+      f"decode {rep['decode_s_per_tok']*1e3:.2f}ms/tok")
+print(f"dvfs energy {rep['dvfs']['energy_norm']:.3f}x static, "
+      f"accuracy {rep['dvfs']['accuracy']:.3f}")

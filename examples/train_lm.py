@@ -1,0 +1,17 @@
+"""Train a ~small LM end-to-end on CPU (reduced llama3-family config):
+data pipeline -> AdamW -> remat'd train_step -> checkpoint/resume ->
+PCSTALL DVFS energy report.
+
+  PYTHONPATH=src python examples/train_lm.py
+"""
+from repro.configs import get_smoke_config
+from repro.configs.base import ShapeConfig, TrainConfig
+from repro.launch.train import train
+
+cfg = get_smoke_config("llama3-405b")
+shape = ShapeConfig("demo", seq_len=128, global_batch=8, kind="train")
+tc = TrainConfig(lr=3e-3, total_steps=60, warmup_steps=6, microbatches=2,
+                 checkpoint_dir="/tmp/repro_example_ckpt", checkpoint_every=25)
+state, losses = train(cfg, tc, shape, steps=60, dvfs=True)
+assert losses[-1] < losses[0], "loss should decrease"
+print(f"OK: loss {losses[0]:.3f} -> {losses[-1]:.3f}")

@@ -1,0 +1,76 @@
+"""Frequency-sensitivity estimation models (paper §2.3, Table III).
+
+All estimators consume only *hardware-counter-visible* quantities produced
+by the epoch execution model:
+
+  committed  (CU,WF)  instructions committed this epoch
+  core_frac  (CU,WF)  fraction of epoch NOT stalled at s_waitcnt
+  issue_q    (CU,WF)  issued/demanded ratio (scheduling-contention squeeze)
+  lead_frac  (CU,WF)  fraction of stall time attributable to leading loads
+
+Ground truth: committed = (i0 + sens*f)*T, core_frac = sens*f/(i0+sens*f),
+so the *wavefront-level* STALL estimator
+    sens = committed * core_frac / f
+is exact modulo contention/bandwidth coupling — the paper's observation that
+simple models work at wavefront granularity (§4.2). CU-level models aggregate
+counters before estimating and therefore mis-handle heterogeneous wavefront
+mixes (Jensen-gap); the four baselines differ in how faithfully they account
+asynchronous time, reproducing the paper's ordering
+STALL < LEAD < CRIT < CRISP.
+"""
+from __future__ import annotations
+
+from typing import Dict, Tuple
+
+import jax.numpy as jnp
+
+CU_MODELS = ("stall", "lead", "crit", "crisp")
+
+
+def wf_stall_estimate(counters: Dict[str, jnp.ndarray], f: jnp.ndarray
+                      ) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Per-wavefront STALL model, age/contention-normalized (paper §4.4).
+    Returns (i0_wf, sens_wf), shapes (CU,WF). f is (CU,) executed GHz."""
+    c = counters["committed"]
+    # hardware exposes ONE scheduling-contention counter per CU, not per WF:
+    # the age normalization uses the CU-mean issue ratio (paper: estimates are
+    # "normalized depending on the relative age"), which is approximate.
+    q_cu = jnp.maximum(counters["issue_q"].mean(-1, keepdims=True), 0.05)
+    fb = f[:, None]
+    # stall time is measured in coarse ticks -> quantized core fraction
+    cf = jnp.round(counters["core_frac"] * 16.0) / 16.0
+    demand = c / q_cu
+    sens = demand * cf / fb
+    i0 = jnp.maximum(demand - sens * fb, 0.0)
+    return i0, sens
+
+
+def cu_estimate(counters: Dict[str, jnp.ndarray], f: jnp.ndarray, model: str
+                ) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """CU-level estimators used by the reactive baselines. Returns
+    (i0_cu, sens_cu), shapes (CU,)."""
+    c = counters["committed"]          # (CU,WF)
+    cf = counters["core_frac"]
+    q = jnp.maximum(counters["issue_q"], 0.05)
+    fb = f[:, None]
+    I_cu = c.sum(-1)
+
+    if model == "stall":
+        # single-thread view: unweighted mean core fraction of the CU
+        cf_cu = cf.mean(-1)
+        sens = I_cu * cf_cu / f
+    elif model == "lead":
+        # leading-load accounting ~ committed-weighted core fraction
+        cf_cu = (c * cf).sum(-1) / jnp.maximum(c.sum(-1), 1e-6)
+        sens = I_cu * cf_cu / f
+    elif model == "crit":
+        # critical-path: committed-weighted + contention correction
+        cf_cu = (c * cf).sum(-1) / jnp.maximum(c.sum(-1), 1e-6)
+        sens = I_cu * cf_cu / (f * jnp.maximum(q.mean(-1), 0.05))
+    elif model == "crisp":
+        # per-WF core products summed at CU level (store stalls + overlap)
+        sens = ((c / q) * cf).sum(-1) / f
+    else:
+        raise ValueError(model)
+    i0 = jnp.maximum(I_cu - sens * f, 0.0)
+    return i0, sens

@@ -1,0 +1,59 @@
+"""GPU V/f-domain power model (paper §5 "Power Model").
+
+P_total = (P_dyn + P_leak) / eta_ivr
+  P_dyn  = C_eff * V^2 * f * A      (A = activity factor from committed work)
+  P_leak = k_leak * V               (leakage ~ linear in V over the narrow
+                                     IVR range; temperature held constant)
+V(f) is linear over the evaluated 1.3-2.2 GHz range (paper §3.2 linearity).
+Transition overhead: energy ~ C*dV^2 plus dead time = transition latency
+(4ns @ 1us epochs ... 400ns @ 100us, paper §5).
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+
+import jax.numpy as jnp
+
+FREQS_GHZ = jnp.linspace(1.3, 2.2, 10)  # 10 V/f states, 100 MHz steps
+F_STATIC = 1.7  # normalization baseline (paper Figs 15/17)
+
+
+@dataclass(frozen=True)
+class PowerConfig:
+    v_min: float = 0.70       # V at 1.3 GHz
+    v_max: float = 1.00       # V at 2.2 GHz
+    f_min: float = 1.3
+    f_max: float = 2.2
+    c_eff: float = 1.0        # arbitrary capacitance unit per CU
+    k_leak: float = 0.35      # leakage at V=1 equals ~20% of dyn at fmax
+    eta0: float = 0.92        # IVR efficiency at v_min
+    eta_slope: float = -0.05  # efficiency droop towards v_max
+    c_trans: float = 0.005     # transition energy per unit dV^2
+
+
+def v_of_f(f, pc: PowerConfig = PowerConfig()):
+    t = (f - pc.f_min) / (pc.f_max - pc.f_min)
+    return pc.v_min + t * (pc.v_max - pc.v_min)
+
+
+def ivr_eta(v, pc: PowerConfig = PowerConfig()):
+    t = (v - pc.v_min) / (pc.v_max - pc.v_min)
+    return pc.eta0 + pc.eta_slope * t
+
+
+def power(f, activity, pc: PowerConfig = PowerConfig()):
+    """Power of one V/f domain at frequency f (GHz) with activity in [0,1]."""
+    v = v_of_f(f, pc)
+    p_dyn = pc.c_eff * v * v * f * jnp.clip(activity, 0.05, 1.0)
+    p_leak = pc.k_leak * v
+    return (p_dyn + p_leak) / ivr_eta(v, pc)
+
+
+def transition_energy(f_old, f_new, pc: PowerConfig = PowerConfig()):
+    dv = v_of_f(f_new, pc) - v_of_f(f_old, pc)
+    return pc.c_trans * dv * dv
+
+
+def transition_latency_us(epoch_us: float) -> float:
+    """Paper §5: 4ns @ 1us, 40ns @ 10us, 200/400ns @ 50/100us epochs."""
+    return min(4e-3 * epoch_us, 0.4)

@@ -1,0 +1,67 @@
+"""Prediction mechanisms (paper §4.3-4.4, Table III).
+
+The PC-indexed sensitivity table (PCSTALL's core): one table per
+``cus_per_table`` CUs, ``entries`` slots, each slot holding a running
+(i0, sens) estimate for the time-epoch that *starts* at that PC. Lookup uses
+every wavefront's next starting PC; update scatters this epoch's per-WF
+estimates keyed by its starting PC. Both are O(WF) gathers/scatters — the
+hardware table of Table I (128 entries, ~328B/instance).
+"""
+from __future__ import annotations
+
+from typing import Dict, NamedTuple, Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+class PCTable(NamedTuple):
+    i0: jnp.ndarray     # (n_tables, entries)
+    sens: jnp.ndarray   # (n_tables, entries)
+    count: jnp.ndarray  # (n_tables, entries) update count (0 = invalid)
+
+
+def table_init(n_tables: int, entries: int) -> PCTable:
+    z = jnp.zeros((n_tables, entries), jnp.float32)
+    return PCTable(z, z, z)
+
+
+def table_index(block: jnp.ndarray, entries: int, offset_blocks: int) -> jnp.ndarray:
+    """PC -> table slot. ``offset_blocks`` = blocks per entry (paper's PC
+    offset bits; 1 block = 4 instructions = the paper's 4-bit sweet spot)."""
+    return (block // offset_blocks) % entries
+
+
+def table_update(tbl: PCTable, tid: jnp.ndarray, idx: jnp.ndarray,
+                 i0: jnp.ndarray, sens: jnp.ndarray, ema: float = 0.5) -> PCTable:
+    """Scatter per-WF estimates. tid (CU,), idx/i0/sens (CU,WF).
+    Collisions within an epoch are averaged; across epochs EMA-blended."""
+    n_tables, entries = tbl.i0.shape
+    flat = (tid[:, None] * entries + idx).reshape(-1)
+    ssum = jnp.zeros((n_tables * entries,), jnp.float32).at[flat].add(sens.reshape(-1))
+    isum = jnp.zeros((n_tables * entries,), jnp.float32).at[flat].add(i0.reshape(-1))
+    cnt = jnp.zeros((n_tables * entries,), jnp.float32).at[flat].add(1.0)
+    ssum = ssum.reshape(n_tables, entries)
+    isum = isum.reshape(n_tables, entries)
+    cnt = cnt.reshape(n_tables, entries)
+    snew = jnp.where(cnt > 0, ssum / jnp.maximum(cnt, 1), 0.0)
+    inew = jnp.where(cnt > 0, isum / jnp.maximum(cnt, 1), 0.0)
+    fresh = (tbl.count == 0) & (cnt > 0)
+    blend = jnp.where(fresh, 1.0, jnp.where(cnt > 0, ema, 0.0))
+    return PCTable(
+        i0=tbl.i0 * (1 - blend) + inew * blend,
+        sens=tbl.sens * (1 - blend) + snew * blend,
+        count=tbl.count + cnt,
+    )
+
+
+def table_lookup(tbl: PCTable, tid: jnp.ndarray, idx: jnp.ndarray,
+                 fb_i0: jnp.ndarray, fb_sens: jnp.ndarray
+                 ) -> Tuple[jnp.ndarray, jnp.ndarray, jnp.ndarray]:
+    """Per-WF lookup with reactive fallback on miss.
+    Returns (i0, sens, hit) each (CU,WF)."""
+    i0 = tbl.i0[tid[:, None], idx]
+    sens = tbl.sens[tid[:, None], idx]
+    hit = tbl.count[tid[:, None], idx] > 0
+    return (jnp.where(hit, i0, fb_i0), jnp.where(hit, sens, fb_sens),
+            hit.astype(jnp.float32))

@@ -1,0 +1,342 @@
+"""Fine-grain DVFS simulation engine (paper §5 methodology, in JAX).
+
+One ``lax.scan`` step = one fixed-time epoch (paper §3.1):
+
+  1. *fork--pre-execute oracle* (paper Fig 13): the epoch is evaluated at all
+     10 V/f states from bit-identical starting conditions via ``vmap`` — a
+     functional simulator needs no process forking, and the per-epoch noise
+     is keyed by (block, loop-iteration, wavefront) so forks see identical
+     stochasticity, exactly like the paper's forked gem5 processes;
+  2. the mechanism under test predicts next-epoch instructions I(f);
+  3. the controller picks the per-domain frequency optimizing the objective;
+  4. the epoch is (re-)executed with the chosen mixed per-CU frequencies;
+  5. estimators digest the epoch's counters and update predictor state.
+
+Ground-truth execution model: wavefront at PC block b commits
+``(i0 + sens*f)*T`` instructions (window-averaged over the blocks traversed),
+subject to (a) oldest-first issue-capacity contention within the CU
+(Fig 11a) and (b) a shared L2/DRAM bandwidth cap across CUs (the FwdSoft
+L2-thrash second-order effect, §6.2).
+"""
+from __future__ import annotations
+
+import dataclasses
+from dataclasses import dataclass
+from typing import Any, Dict, NamedTuple, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax import lax
+
+from repro.core import estimators as EST
+from repro.core import power as PWR
+from repro.core import predictors as PRED
+from repro.core.workloads import INSTR_PER_BLOCK, Program
+
+MECHANISMS = ("static13", "static17", "static22",
+              "stall", "lead", "crit", "crisp",
+              "accreac", "pcstall", "accpc", "oracle")
+
+
+@dataclass(frozen=True)
+class SimConfig:
+    n_cu: int = 64
+    n_wf: int = 40
+    epoch_us: float = 1.0
+    n_epochs: int = 1500
+    entries: int = 128
+    offset_blocks: int = 8        # blocks/entry: 128 entries cover a 1024-block loop
+    cus_per_table: int = 1
+    cus_per_domain: int = 1
+    objective: str = "ed2p"       # 'edp' | 'ed2p' | 'perfcap05' | 'perfcap10'
+    sigma: float = 0.06           # same-PC iteration noise (Fig 10 ~10%)
+    cap_per_ghz: float = 5500.0   # CU issue capacity, instr/us per GHz
+    membw: float = 160_000.0      # shared-path capacity, instr-traffic/us
+    table_ema: float = 0.5
+    record_wf: bool = False
+    seed: int = 0
+
+
+class Carry(NamedTuple):
+    pos: jnp.ndarray         # (CU,WF) absolute instruction index
+    react_i0: jnp.ndarray    # (CU,) reactive CU-level state
+    react_sens: jnp.ndarray
+    wf_i0: jnp.ndarray       # (CU,WF) per-WF fallback state
+    wf_sens: jnp.ndarray
+    table: PRED.PCTable
+    f_prev: jnp.ndarray      # (CU,)
+    e_acc: jnp.ndarray       # (CU,) accumulated energy (for online Pbar)
+    t_acc: jnp.ndarray       # () accumulated time
+
+
+def epoch_execute(prog: Program, pos: jnp.ndarray, f_cu: jnp.ndarray,
+                  sim: SimConfig) -> Tuple[jnp.ndarray, Dict[str, jnp.ndarray]]:
+    """Ground-truth execution of one epoch at per-CU frequencies ``f_cu``.
+    Deterministic in (pos, f) — this *is* the fork property."""
+    T = sim.epoch_us
+    P = prog.n_blocks
+    blk = (pos.astype(jnp.int32) // INSTR_PER_BLOCK) % P  # (CU,WF)
+    f_b = f_cu[:, None]
+    i0_l = prog.i0_rate[blk]
+    s_l = prog.sens_rate[blk]
+    est_instr = (i0_l + s_l * f_b) * T
+    nblk = jnp.clip((est_instr / INSTR_PER_BLOCK).astype(jnp.int32) + 1, 1, P)
+
+    def wavg(cum):
+        return (cum[blk + nblk] - cum[blk]) / nblk
+
+    i0w, sw, mfw = wavg(prog.cum_i0), wavg(prog.cum_sens), wavg(prog.cum_mem)
+    demand = (i0w + sw * f_b) * T
+    # deterministic (block, loop, wf, cu)-keyed noise
+    loop = (pos // (INSTR_PER_BLOCK * P)).astype(jnp.float32)
+    wf_id = jnp.arange(demand.shape[1], dtype=jnp.float32)[None, :]
+    cu_id = jnp.arange(demand.shape[0], dtype=jnp.float32)[:, None]
+    h = jnp.sin(blk * 12.9898 + loop * 78.233 + wf_id * 37.719
+                + cu_id * 9.131 + sim.seed * 3.7) * 43758.5453
+    eps = (h - jnp.floor(h)) * 2.0 - 1.0
+    demand = demand * (1.0 + sim.sigma * eps)
+    # oldest-first issue allocation (slot index = age priority)
+    C = sim.cap_per_ghz * f_cu * T
+    before = jnp.cumsum(demand, axis=1) - demand
+    alloc = jnp.clip(C[:, None] - before, 0.0, demand)
+    q = alloc / jnp.maximum(demand, 1e-6)
+    # shared L2/DRAM bandwidth coupling across all CUs
+    traffic = (alloc * mfw).sum()
+    scale = jnp.minimum(1.0, sim.membw * T / jnp.maximum(traffic, 1e-6))
+    steady = alloc * (1.0 - mfw * (1.0 - scale))
+    # workgroup barrier at each kernel-loop boundary: wavefronts wait for the
+    # slowest wave in their CU before starting the next iteration. This keeps
+    # a CU's waves phase-aligned (GPU kernels barrier/relaunch per loop) and
+    # is what gives CUs their strong fine-grain phase behavior (Figs 6-8).
+    # Barrier-idle time truncates *work* but controllers/estimators reason on
+    # steady-state throughput ("committed" counter continues to tick in HW).
+    plen = float(P * INSTR_PER_BLOCK)
+    tentative = pos + steady
+    group_min = tentative.min(axis=1)                           # slowest wave
+    boundary = (jnp.floor(group_min / plen) + 1.0) * plen       # (CU,)
+    committed = jnp.minimum(steady, jnp.maximum(boundary[:, None] - pos, 0.0))
+    core_frac = sw * f_b / jnp.maximum(i0w + sw * f_b, 1e-6)
+    counters = {"committed": committed, "steady": steady, "core_frac": core_frac,
+                "issue_q": q, "mem_frac": mfw, "start_block": blk}
+    return committed, counters
+
+
+def _predict_instr(i0_cu, sens_cu, sim: SimConfig):
+    """(CU,) linear state -> predicted I at all 10 freqs, capacity-clipped."""
+    F = PWR.FREQS_GHZ
+    I = (i0_cu[:, None] + sens_cu[:, None] * F[None, :]) * sim.epoch_us
+    cap = sim.cap_per_ghz * F[None, :] * sim.epoch_us * sim.n_wf
+    return jnp.clip(I, 0.0, cap)
+
+
+def _select_freq(I_pred_f: jnp.ndarray, sim: SimConfig,
+                 pbar_dom: jnp.ndarray) -> jnp.ndarray:
+    """Choose per-domain frequency minimizing the objective.
+
+    For ED^nP the globally-optimal allocation equalizes the marginal
+    energy-per-delay de/dd = -n*(E/D) across phases, so the correct greedy
+    per-epoch cost is (P(f) + n*Pbar) / rate(f) where Pbar = E/D is the
+    domain's accumulated average power (online Lagrangian; a naive P/I^(n+1)
+    greedy systematically over/under-clocks heterogeneous phase mixes).
+
+    I_pred_f: (CU, 10); pbar_dom: (n_dom,). Returns selected index (CU,).
+    """
+    F = PWR.FREQS_GHZ
+    n_dom = sim.n_cu // sim.cus_per_domain
+    I_dom = I_pred_f.reshape(n_dom, sim.cus_per_domain, -1)
+    act = I_pred_f / (sim.cap_per_ghz * F[None, :] * sim.epoch_us * sim.n_wf)
+    p_cu = PWR.power(F[None, :], act)                       # (CU,10)
+    P_dom = p_cu.reshape(n_dom, sim.cus_per_domain, -1).sum(1)  # (dom,10)
+    I_sum = jnp.maximum(I_dom.sum(1), 1e-3)                 # (dom,10)
+    if sim.objective == "edp":
+        cost = (P_dom + pbar_dom[:, None]) / I_sum
+    elif sim.objective == "ed2p":
+        cost = (P_dom + 2.0 * pbar_dom[:, None]) / I_sum
+    elif sim.objective.startswith("perfcap"):
+        capf = 1.0 - float(sim.objective[-2:]) / 100.0
+        feasible = I_sum >= capf * I_sum[:, -1:]
+        cost = P_dom + 1e9 * (~feasible)
+    else:
+        raise ValueError(sim.objective)
+    idx_dom = jnp.argmin(cost, axis=-1)                     # (dom,)
+    return jnp.repeat(idx_dom, sim.cus_per_domain)
+
+
+def _true_wf_linear(c_f: jnp.ndarray) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """c_f: (10, CU, WF) fork-committed -> exact per-WF (i0_rate, sens)."""
+    F = PWR.FREQS_GHZ
+    sens = (c_f[-1] - c_f[0]) / (F[-1] - F[0])
+    i0 = c_f[0] - sens * F[0]
+    return i0, sens
+
+
+def run_sim(prog: Program, sim: SimConfig, mechanism: str) -> Dict[str, np.ndarray]:
+    """Simulate ``mechanism`` on ``prog``. Returns per-epoch traces."""
+    assert mechanism in MECHANISMS, mechanism
+    assert sim.n_cu % sim.cus_per_domain == 0
+    n_tables = max(sim.n_cu // sim.cus_per_table, 1)
+    T = sim.epoch_us
+    F = PWR.FREQS_GHZ
+    static_f = {"static13": 0, "static17": 4, "static22": 9}
+    needs_forks = mechanism not in static_f
+    is_pc = mechanism in ("pcstall", "accpc")
+    lat_us = PWR.transition_latency_us(sim.epoch_us)
+
+    def body(carry: Carry, _):
+        pos = carry.pos
+        # --- fork--pre-execute at all 10 uniform frequencies -------------
+        if needs_forks:
+            _, ctr_f = jax.vmap(lambda f: epoch_execute(
+                prog, pos, jnp.full((sim.n_cu,), f), sim))(F)
+            c_f = ctr_f["steady"]                              # (10,CU,WF)
+            I_f = c_f.sum(-1).T                                # (CU,10)
+        else:
+            c_f = None
+            I_f = None
+        # --- predict next-epoch I(f) --------------------------------------
+        if mechanism in static_f:
+            fidx = jnp.full((sim.n_cu,), static_f[mechanism], jnp.int32)
+            I_pred_f = None
+        else:
+            if mechanism == "oracle":
+                I_pred_f = I_f
+            elif is_pc:
+                P_ = prog.n_blocks
+                nxt_blk = (pos.astype(jnp.int32) // INSTR_PER_BLOCK) % P_
+                idx = PRED.table_index(nxt_blk, sim.entries, sim.offset_blocks)
+                tid = jnp.arange(sim.n_cu) // sim.cus_per_table
+                i0w, sw, hit = PRED.table_lookup(carry.table, tid, idx,
+                                                 carry.wf_i0, carry.wf_sens)
+                I_pred_f = _predict_instr(i0w.sum(-1), sw.sum(-1), sim)
+                hit_rate = hit.mean()
+            else:  # reactive CU-level
+                I_pred_f = _predict_instr(carry.react_i0, carry.react_sens, sim)
+            n_dom = sim.n_cu // sim.cus_per_domain
+            pbar = (carry.e_acc / jnp.maximum(carry.t_acc, 1e-3)) \
+                .reshape(n_dom, sim.cus_per_domain).sum(1)
+            fidx = _select_freq(I_pred_f, sim, pbar)
+        f_sel = F[fidx]
+        # --- real execution at mixed per-CU frequencies -------------------
+        committed, counters = epoch_execute(prog, pos, f_sel, sim)
+        trans = (f_sel != carry.f_prev)
+        committed = committed * (1.0 - lat_us / T * trans[:, None])
+        I_actual = counters["steady"].sum(-1)                # (CU,) counter view
+        work_actual = committed.sum(-1)                      # (CU,) real progress
+        # --- accuracy of the prediction for THIS epoch --------------------
+        if I_pred_f is not None:
+            I_at_sel = jnp.take_along_axis(I_pred_f, fidx[:, None], 1)[:, 0]
+            err = jnp.abs(I_at_sel - I_actual) / jnp.maximum(I_actual, 1e-3)
+        else:
+            err = jnp.zeros((sim.n_cu,))
+        # --- energy --------------------------------------------------------
+        act = work_actual / (sim.cap_per_ghz * f_sel * T * sim.n_wf)
+        energy = PWR.power(f_sel, act) * T \
+            + PWR.transition_energy(carry.f_prev, f_sel) * trans
+        # --- estimation + state update -------------------------------------
+        new = carry._replace(pos=pos + committed, f_prev=f_sel,
+                             e_acc=carry.e_acc + energy,
+                             t_acc=carry.t_acc + T)
+        est_ctrs = dict(counters, committed=counters["steady"])
+        if mechanism in ("stall", "lead", "crit", "crisp"):
+            i0_cu, s_cu = EST.cu_estimate(est_ctrs, f_sel, mechanism)
+            new = new._replace(react_i0=i0_cu / T, react_sens=s_cu / T)
+        elif mechanism == "accreac":
+            sens_cu = (I_f[:, -1] - I_f[:, 0]) / ((F[-1] - F[0]) * T)
+            i0_cu = I_f[:, 0] / T - sens_cu * F[0]
+            new = new._replace(react_i0=i0_cu, react_sens=sens_cu)
+        elif is_pc:
+            if mechanism == "pcstall":
+                i0_wf, s_wf = EST.wf_stall_estimate(est_ctrs, f_sel)
+                i0_wf, s_wf = i0_wf / T, s_wf / T
+            else:  # accpc: exact per-WF linear model from the forks
+                i0_wf, s_wf = _true_wf_linear(c_f)
+                i0_wf, s_wf = i0_wf / T, s_wf / T
+            idx = PRED.table_index(counters["start_block"], sim.entries,
+                                   sim.offset_blocks)
+            tid = jnp.arange(sim.n_cu) // sim.cus_per_table
+            tbl = PRED.table_update(carry.table, tid, idx, i0_wf, s_wf,
+                                    sim.table_ema)
+            new = new._replace(table=tbl, wf_i0=i0_wf, wf_sens=s_wf)
+        # true CU sensitivity for phase-variability analyses
+        if needs_forks:
+            true_sens_cu = (I_f[:, -1] - I_f[:, 0]) / ((F[-1] - F[0]) * T)
+        else:
+            true_sens_cu = jnp.zeros((sim.n_cu,))
+        ys = {"work": work_actual, "energy": energy, "err": err,
+              "fidx": fidx.astype(jnp.int8), "true_sens": true_sens_cu}
+        if is_pc:
+            ys["hit_rate"] = hit_rate
+        if sim.record_wf and needs_forks:
+            ys["wf_sens"] = ((c_f[-1] - c_f[0]) / (F[-1] - F[0])).astype(jnp.float32)
+            ys["wf_blk"] = counters["start_block"].astype(jnp.int32)
+        return new, ys
+
+    plen = prog.n_blocks * INSTR_PER_BLOCK
+    cu_off = (jnp.arange(sim.n_cu, dtype=jnp.float32)[:, None] * 97.0) % plen
+    wf_off = jnp.arange(sim.n_wf, dtype=jnp.float32)[None, :] * 1.0
+    pos0 = (cu_off + wf_off) % plen
+    carry0 = Carry(
+        pos=pos0,
+        react_i0=jnp.full((sim.n_cu,), 50.0),
+        react_sens=jnp.full((sim.n_cu,), 30.0),
+        wf_i0=jnp.full((sim.n_cu, sim.n_wf), 1.2),
+        wf_sens=jnp.full((sim.n_cu, sim.n_wf), 0.8),
+        table=PRED.table_init(n_tables, sim.entries),
+        f_prev=jnp.full((sim.n_cu,), 1.7),
+        # warm-start Pbar near the static-1.7 operating point
+        e_acc=jnp.full((sim.n_cu,), 0.42 * 20.0),
+        t_acc=jnp.asarray(20.0),
+    )
+    _, ys = lax.scan(body, carry0, None, length=sim.n_epochs)
+    return {k: np.asarray(v) for k, v in ys.items()}
+
+
+# ---------------------------------------------------------------------------
+# Metrics
+# ---------------------------------------------------------------------------
+
+
+def prediction_accuracy(trace: Dict[str, np.ndarray], warmup: int = 50) -> float:
+    err = trace["err"][warmup:]
+    return float(np.clip(1.0 - np.mean(np.clip(err, 0, 1)), 0.0, 1.0))
+
+
+def ednp(trace: Dict[str, np.ndarray], work_budget: float, epoch_us: float,
+         n: int = 2) -> Tuple[float, float, float]:
+    """(E, D, E*D^n) to complete ``work_budget`` total instructions."""
+    cum_work = np.cumsum(trace["work"].sum(-1))
+    cum_energy = np.cumsum(trace["energy"].sum(-1))
+    if cum_work[-1] < work_budget:  # extrapolate at terminal rate
+        rate = trace["work"].sum(-1)[-200:].mean() / epoch_us
+        p_rate = trace["energy"].sum(-1)[-200:].mean() / epoch_us
+        extra_t = (work_budget - cum_work[-1]) / rate
+        D = len(cum_work) * epoch_us + extra_t
+        E = cum_energy[-1] + p_rate * extra_t
+    else:
+        i = int(np.searchsorted(cum_work, work_budget))
+        frac = ((work_budget - (cum_work[i - 1] if i else 0.0))
+                / max(cum_work[i] - (cum_work[i - 1] if i else 0.0), 1e-9))
+        D = (i + frac) * epoch_us
+        E = (cum_energy[i - 1] if i else 0.0) + frac * (
+            cum_energy[i] - (cum_energy[i - 1] if i else 0.0))
+    return E, D, E * D ** n
+
+
+def run_workload(prog: Program, sim: SimConfig, mechanisms=MECHANISMS,
+                 n: int = 2) -> Dict[str, Dict[str, float]]:
+    """Run a mechanism suite; ED^nP normalized to static17."""
+    base = run_sim(prog, sim, "static17")
+    budget = 0.9 * base["work"].sum()
+    out: Dict[str, Dict[str, float]] = {}
+    E0, D0, M0 = ednp(base, budget, sim.epoch_us, n)
+    for mech in mechanisms:
+        tr = base if mech == "static17" else run_sim(prog, sim, mech)
+        E, D, M = ednp(tr, budget, sim.epoch_us, n)
+        out[mech] = {
+            "accuracy": prediction_accuracy(tr) if mech not in
+            ("static13", "static17", "static22") else float("nan"),
+            "E": E, "D": D, "ednp": M, "ednp_norm": M / M0,
+            "energy_norm": E / E0, "delay_norm": D / D0,
+        }
+    return out

@@ -1,0 +1,150 @@
+"""Wavefront-program workload models.
+
+A *program* is a looped sequence of P instruction blocks (4 instructions per
+block — the paper's 4-bit PC offset granularity). Block j has:
+
+  i0_rate[j]   instructions/us committed independent of f (async/memory part)
+  sens_rate[j] instructions/us/GHz committed proportional to f (core part)
+  mem_frac[j]  fraction of traffic that hits the shared L2/DRAM path
+
+so a wavefront sitting in block j commits ``(i0 + sens*f) * T`` instructions
+per epoch (the paper's linear model I_f = I0 + S*f, Fig 5, R^2=0.82).
+
+Programs are generated as piecewise-constant *phase segments* (compute,
+memory, balanced) whose lengths/levels are drawn per workload kind; this
+reproduces the paper's observed behaviors: 37% consecutive-epoch sensitivity
+variation at 1us shrinking at coarser epochs (Fig 7), ~10% same-PC iteration
+variation (Fig 10), and per-workload phenomenology of Table II (dgemm-like
+heterogeneous compute, xsbench-like memory-bound, BwdPool constant-rate,
+FwdSoft L2-thrash coupling, ...).
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Dict, List, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+INSTR_PER_BLOCK = 4
+
+
+@dataclass
+class Program:
+    name: str
+    i0_rate: jnp.ndarray    # (P,) instr/us
+    sens_rate: jnp.ndarray  # (P,) instr/us/GHz
+    mem_frac: jnp.ndarray   # (P,)
+    # prefix sums over a doubled program for O(1) wrapped window averages
+    cum_i0: jnp.ndarray     # (2P+1,)
+    cum_sens: jnp.ndarray
+    cum_mem: jnp.ndarray
+
+    @property
+    def n_blocks(self) -> int:
+        return self.i0_rate.shape[0]
+
+
+def _finalize(name, i0, sens, mem) -> Program:
+    i0 = jnp.asarray(i0, jnp.float32)
+    sens = jnp.asarray(sens, jnp.float32)
+    mem = jnp.asarray(mem, jnp.float32)
+    cum = lambda a: jnp.concatenate([jnp.zeros(1), jnp.cumsum(jnp.tile(a, 2))])
+    return Program(name, i0, sens, mem, cum(i0), cum(sens), cum(mem))
+
+
+# base per-WF rate scale: a wavefront at 1.7 GHz commits ~100 instr/us
+_RATE = 100.0
+
+
+def _segments(rng: np.random.Generator, P: int, palettes,
+              seg_len_mean: float, hetero: float = 0.3):
+    """Build piecewise-constant arrays. ``palettes`` is a list of phase
+    palettes cycled deterministically (so phased workloads really alternate);
+    the phase *within* a palette and the segment length are random."""
+    if palettes and isinstance(palettes[0], tuple) and isinstance(palettes[0][0], float):
+        palettes = [palettes]  # single palette
+    i0 = np.zeros(P)
+    sens = np.zeros(P)
+    mem = np.zeros(P)
+    pos, pi = 0, 0
+    while pos < P:
+        ln = max(2, int(rng.exponential(seg_len_mean)))
+        kinds = palettes[pi % len(palettes)]
+        pi += 1
+        core_share, rate_mult, mfrac = kinds[rng.integers(len(kinds))]
+        jitter = 1.0 + hetero * rng.standard_normal()
+        rate = _RATE * rate_mult * max(jitter, 0.3)
+        # at f=1.7: rate = i0 + sens*1.7 with core share of the f-scaling part
+        sens_v = core_share * rate / 1.7
+        i0_v = (1 - core_share) * rate
+        i0[pos:pos + ln] = i0_v
+        sens[pos:pos + ln] = sens_v
+        mem[pos:pos + ln] = mfrac
+        pos += ln
+    return i0, sens, mem
+
+
+# phase palettes: (core_share, rate_mult, mem_frac)
+_COMPUTE = [(0.9, 1.4, 0.05), (0.8, 0.7, 0.1), (0.95, 1.1, 0.02), (0.85, 1.8, 0.08),
+            (0.45, 0.9, 0.45)]  # tile prologue/epilogue interludes
+_MEMORY = [(0.15, 0.7, 0.8), (0.25, 0.8, 0.7), (0.1, 0.6, 0.9)]
+_BALANCED = [(0.55, 1.0, 0.35), (0.45, 0.9, 0.45)]
+_ALL = _COMPUTE + _MEMORY + _BALANCED
+
+
+# (generator spec, mem_frac acceptance band) per kind — rejection sampling
+# guarantees every generated program really has its intended phase mix.
+_KIND_SPECS = {
+    "compute":  (([_COMPUTE, _COMPUTE, _BALANCED], 32, 0.7), (0.0, 0.3)),
+    "memory":   (([_MEMORY, _MEMORY, _MEMORY, _BALANCED], 32, 0.4), (0.5, 1.0)),
+    "phased":   (([_COMPUTE, _MEMORY], 36, 0.5), (0.25, 0.55)),
+    "irregular": (([_ALL], 12, 0.8), (0.15, 0.6)),
+    "constant": (([(0.5, 1.0, 0.3)], 100_000, 0.0), (0.0, 1.0)),
+    "thrash":   (([(0.7, 1.2, 0.75), (0.6, 1.1, 0.8)], 40, 0.3), (0.5, 1.0)),
+    "mixed":    (([_BALANCED, _COMPUTE, _MEMORY], 24, 0.5), (0.15, 0.45)),
+}
+
+
+def make_program(name: str, kind: str, seed: int, P: int = 1024) -> Program:
+    (palettes, seg_len, hetero), (lo, hi) = _KIND_SPECS[kind]
+    for trial in range(50):
+        rng = np.random.default_rng(seed + 1000 * trial)
+        i0, s, m = _segments(rng, P, palettes, seg_len_mean=min(seg_len, P),
+                             hetero=hetero)
+        if lo <= float(np.mean(m)) <= hi:
+            break
+    return _finalize(name, i0, s, m)
+
+
+# The paper's workload suite (Table II), mapped to generator kinds.
+WORKLOAD_TABLE: Dict[str, Tuple[str, int]] = {
+    # HPC apps
+    "comd": ("phased", 11),
+    "hpgmg": ("memory", 12),
+    "lulesh": ("irregular", 13),
+    "minife": ("mixed", 14),
+    "xsbench": ("memory", 15),
+    "hacc": ("phased", 16),
+    "quickS": ("irregular", 17),
+    "pennant": ("mixed", 18),
+    "snapc": ("memory", 19),
+    # MI apps
+    "dgemm": ("compute", 21),
+    "BwdBN": ("mixed", 22),
+    "BwdPool": ("constant", 23),
+    "BwdSoft": ("memory", 24),
+    "FwdBN": ("mixed", 25),
+    "FwdPool": ("constant", 26),
+    "FwdSoft": ("thrash", 27),
+}
+
+
+def get_workload(name: str, P: int = 1024) -> Program:
+    kind, seed = WORKLOAD_TABLE[name]
+    return make_program(name, kind, seed, P=P)
+
+
+def all_workloads(P: int = 1024) -> Dict[str, Program]:
+    return {n: get_workload(n, P) for n in WORKLOAD_TABLE}

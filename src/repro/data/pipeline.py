@@ -1,0 +1,87 @@
+"""Deterministic sharded synthetic data pipeline.
+
+Production layout: each (step, host) pair derives its shard of the global
+batch from a counter-based PRNG — no cross-host coordination, bit-exact
+resume after restart from any step (fault tolerance comes for free), and
+elastic re-sharding is just re-deriving with a new (n_hosts, host_id).
+
+Token streams are Zipf-ish over the vocab with a Markov phase structure so
+losses actually decrease during the integration tests.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Dict, Iterator
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ModelConfig, ShapeConfig
+
+
+@dataclass(frozen=True)
+class DataConfig:
+    seed: int = 1234
+    zipf_a: float = 1.2
+    n_phases: int = 8
+
+
+def _batch_tokens(key: jax.Array, batch: int, seq: int, vocab: int,
+                  dc: DataConfig) -> jax.Array:
+    """Synthetic but learnable: per-sequence phase picks a distinct band of
+    the vocab; within a phase, tokens follow t_{i+1} = (a*t_i + b) % band
+    with noise — next-token prediction is learnable to well below ln(V)."""
+    k1, k2, k3 = jax.random.split(key, 3)
+    band = max(vocab // dc.n_phases, 16)
+    phase = jax.random.randint(k1, (batch, 1), 0, dc.n_phases)
+    base = phase * (vocab // dc.n_phases)
+    x0 = jax.random.randint(k2, (batch, 1), 0, band)
+    a, b = 31, 17
+    idx = jnp.arange(seq)[None, :]
+    # affine progression within band + occasional jumps
+    tok = (x0 * (a ** (idx % 7)) + b * idx) % band
+    noise = jax.random.bernoulli(k3, 0.05, (batch, seq))
+    rand = jax.random.randint(k3, (batch, seq), 0, band)
+    tok = jnp.where(noise, rand, tok)
+    return (base + tok).astype(jnp.int32)
+
+
+def make_batch(cfg: ModelConfig, shape: ShapeConfig, step: int,
+               *, microbatches: int = 1, host_id: int = 0, n_hosts: int = 1,
+               dc: DataConfig = DataConfig()) -> Dict[str, jax.Array]:
+    """Global batch for ``step`` (host-sharded slice if n_hosts > 1)."""
+    B = shape.global_batch // n_hosts
+    S = shape.seq_len
+    key = jax.random.fold_in(jax.random.fold_in(
+        jax.random.key(dc.seed), step), host_id)
+    St = S - cfg.n_patches if cfg.frontend == "vision" else S
+    toks = _batch_tokens(key, B, St + 1, cfg.vocab, dc)
+    tokens, labels_t = toks[:, :-1], toks[:, 1:]
+    if cfg.frontend == "vision":
+        pe = jax.random.normal(jax.random.fold_in(key, 7),
+                               (B, cfg.n_patches, cfg.d_model), jnp.bfloat16)
+        labels = jnp.concatenate(
+            [jnp.zeros((B, cfg.n_patches), jnp.int32), labels_t], axis=1)
+        mask = jnp.concatenate(
+            [jnp.zeros((B, cfg.n_patches), jnp.int32),
+             jnp.ones((B, St), jnp.int32)], axis=1)
+        batch = {"tokens": tokens, "labels": labels, "mask": mask,
+                 "patch_embeds": pe}
+    else:
+        batch = {"tokens": tokens, "labels": labels_t,
+                 "mask": jnp.ones((B, St), jnp.int32)}
+    if microbatches > 1:
+        batch = {k: v.reshape(microbatches, B // microbatches, *v.shape[1:])
+                 for k, v in batch.items()}
+    else:
+        batch = {k: v[None] for k, v in batch.items()}
+    return batch
+
+
+def data_iterator(cfg: ModelConfig, shape: ShapeConfig, start_step: int = 0,
+                  **kw) -> Iterator[Dict[str, jax.Array]]:
+    step = start_step
+    while True:
+        yield make_batch(cfg, shape, step, **kw)
+        step += 1

@@ -1,0 +1,49 @@
+"""DVFS manager: PCSTALL-driven per-device frequency scheduling for a
+training/serving job (simulated — TPUs expose no user DVFS today, so this
+reports what the paper's mechanism would buy on this workload's phase
+structure)."""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, Optional
+
+import numpy as np
+
+from repro.configs.base import ModelConfig, ShapeConfig
+from repro.core.simulate import SimConfig, ednp, prediction_accuracy, run_sim
+from repro.core.workloads import Program
+from repro.dvfs_runtime.telemetry import arch_program
+
+
+@dataclasses.dataclass
+class DVFSManager:
+    program: Program
+    sim: SimConfig
+    step_times: list = dataclasses.field(default_factory=list)
+
+    @classmethod
+    def for_model(cls, cfg: ModelConfig, shape: ShapeConfig,
+                  objective: str = "ed2p", n_cu: int = 16) -> "DVFSManager":
+        prog = arch_program(cfg, shape)
+        sim = SimConfig(n_cu=n_cu, n_epochs=400, objective=objective)
+        return cls(program=prog, sim=sim)
+
+    def observe_step(self, step: int, seconds: float) -> None:
+        self.step_times.append(seconds)
+
+    def report(self) -> Dict[str, float]:
+        """Run PCSTALL vs static-1.7 on this job's phase program."""
+        base = run_sim(self.program, self.sim, "static17")
+        tr = run_sim(self.program, self.sim, "pcstall")
+        budget = 0.9 * base["work"].sum()
+        E0, D0, M0 = ednp(base, budget, self.sim.epoch_us)
+        E, D, M = ednp(tr, budget, self.sim.epoch_us)
+        h = np.bincount(tr["fidx"].ravel(), minlength=10) / tr["fidx"].size
+        return {
+            "accuracy": prediction_accuracy(tr),
+            "energy_norm": E / E0,
+            "delay_norm": D / D0,
+            "ed2p_norm": M / M0,
+            "freq_timeshare": [round(float(x), 3) for x in h],
+            "mean_step_s": float(np.mean(self.step_times)) if self.step_times else 0.0,
+        }

@@ -1,0 +1,103 @@
+"""Flash attention Pallas TPU kernel (online softmax, causal/SWA, GQA).
+
+TPU-native tiling: the MXU wants 128-aligned matmul dims, so default block
+sizes are (blk_q=128, blk_k=128) with the head dim padded to a multiple of
+128 by the wrapper when needed. Grid is (B*H, nq, nk) with the kv axis
+innermost ('arbitrary' semantics — sequential accumulation into VMEM
+scratch); q/k/v tiles stream HBM->VMEM per BlockSpec.
+
+Validated in interpret mode against ``repro.kernels.ref.attention_ref``.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+
+
+def _flash_kernel(q_ref, k_ref, v_ref, o_ref, m_scr, l_scr, acc_scr, *,
+                  scale: float, blk_q: int, blk_k: int, n_k: int,
+                  causal: bool, window: int):
+    i_q = pl.program_id(1)
+    i_k = pl.program_id(2)
+
+    @pl.when(i_k == 0)
+    def _init():
+        m_scr[...] = jnp.full_like(m_scr, NEG_INF)
+        l_scr[...] = jnp.zeros_like(l_scr)
+        acc_scr[...] = jnp.zeros_like(acc_scr)
+
+    q = q_ref[0].astype(jnp.float32)              # (blk_q, hd)
+    k = k_ref[0].astype(jnp.float32)              # (blk_k, hd)
+    v = v_ref[0].astype(jnp.float32)
+    s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
+                            preferred_element_type=jnp.float32) * scale
+
+    rows = i_q * blk_q + jax.lax.broadcasted_iota(jnp.int32, (blk_q, blk_k), 0)
+    cols = i_k * blk_k + jax.lax.broadcasted_iota(jnp.int32, (blk_q, blk_k), 1)
+    mask = jnp.ones((blk_q, blk_k), jnp.bool_)
+    if causal:
+        mask = mask & (cols <= rows)
+    if window > 0:
+        mask = mask & (cols > rows - window)
+    s = jnp.where(mask, s, NEG_INF)
+
+    m_prev = m_scr[...]                            # (blk_q,)
+    m_cur = jnp.max(s, axis=1)
+    m_new = jnp.maximum(m_prev, m_cur)
+    # guard fully-masked rows (exp(NEG_INF - NEG_INF) -> exp(0) otherwise)
+    p = jnp.exp(s - m_new[:, None])
+    p = jnp.where(mask, p, 0.0)
+    alpha = jnp.exp(jnp.maximum(m_prev - m_new, -80.0))
+    l_new = l_scr[...] * alpha + jnp.sum(p, axis=1)
+    acc_scr[...] = acc_scr[...] * alpha[:, None] + jax.lax.dot_general(
+        p, v, (((1,), (0,)), ((), ())), preferred_element_type=jnp.float32)
+    m_scr[...] = m_new
+    l_scr[...] = l_new
+
+    @pl.when(i_k == n_k - 1)
+    def _finish():
+        denom = jnp.maximum(l_scr[...], 1e-20)[:, None]
+        o_ref[0] = (acc_scr[...] / denom).astype(o_ref.dtype)
+
+
+def flash_attention_bhsd(q: jax.Array, k: jax.Array, v: jax.Array, *,
+                         causal: bool = True, window: int = 0,
+                         blk_q: int = 128, blk_k: int = 128,
+                         interpret: bool = True) -> jax.Array:
+    """q (BH, S, hd); k/v (BH, S, hd) — kv already expanded to q heads.
+    Returns (BH, S, hd)."""
+    BH, S, hd = q.shape
+    blk_q = min(blk_q, S)
+    blk_k = min(blk_k, S)
+    assert S % blk_q == 0 and S % blk_k == 0, (S, blk_q, blk_k)
+    n_q, n_k = S // blk_q, S // blk_k
+    scale = 1.0 / (hd ** 0.5)
+    kernel = functools.partial(
+        _flash_kernel, scale=scale, blk_q=blk_q, blk_k=blk_k, n_k=n_k,
+        causal=causal, window=window)
+    return pl.pallas_call(
+        kernel,
+        grid=(BH, n_q, n_k),
+        in_specs=[
+            pl.BlockSpec((1, blk_q, hd), lambda b, i, j: (b, i, 0)),
+            pl.BlockSpec((1, blk_k, hd), lambda b, i, j: (b, j, 0)),
+            pl.BlockSpec((1, blk_k, hd), lambda b, i, j: (b, j, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, blk_q, hd), lambda b, i, j: (b, i, 0)),
+        out_shape=jax.ShapeDtypeStruct((BH, S, hd), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((blk_q,), jnp.float32),
+            pltpu.VMEM((blk_q,), jnp.float32),
+            pltpu.VMEM((blk_q, hd), jnp.float32),
+        ],
+        compiler_params=pltpu.CompilerParams(
+            dimension_semantics=("parallel", "parallel", "arbitrary")),
+        interpret=interpret,
+    )(q, k, v)

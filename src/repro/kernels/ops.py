@@ -1,0 +1,52 @@
+"""jit'd public wrappers for the Pallas kernels.
+
+On this CPU container kernels run in interpret mode (the TPU lowering path
+is identical apart from ``interpret=False``); ``set_backend('tpu')`` flips
+every wrapper to compiled mode on real hardware.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import flash_attention as _fa
+from repro.kernels import pc_table as _pt
+from repro.kernels import rwkv_chunk as _rc
+
+_INTERPRET = True
+
+
+def set_backend(backend: str) -> None:
+    global _INTERPRET
+    _INTERPRET = backend != "tpu"
+
+
+@functools.partial(jax.jit, static_argnames=("causal", "window", "blk_q", "blk_k"))
+def flash_attention(q: jax.Array, k: jax.Array, v: jax.Array, *,
+                    causal: bool = True, window: int = 0,
+                    blk_q: int = 128, blk_k: int = 128) -> jax.Array:
+    """q (B,S,H,hd), k/v (B,S,Hkv,hd) with H % Hkv == 0. Returns (B,S,H,hd)."""
+    B, S, H, hd = q.shape
+    Hkv = k.shape[2]
+    rep = H // Hkv
+    qb = q.transpose(0, 2, 1, 3).reshape(B * H, S, hd)
+    kb = jnp.repeat(k.transpose(0, 2, 1, 3), rep, axis=1).reshape(B * H, S, hd)
+    vb = jnp.repeat(v.transpose(0, 2, 1, 3), rep, axis=1).reshape(B * H, S, hd)
+    out = _fa.flash_attention_bhsd(qb, kb, vb, causal=causal, window=window,
+                                   blk_q=blk_q, blk_k=blk_k,
+                                   interpret=_INTERPRET)
+    return out.reshape(B, H, S, hd).transpose(0, 2, 1, 3).astype(q.dtype)
+
+
+@jax.jit
+def pc_table_predict(tbl_i0, tbl_sens, tbl_cnt, tid, idx, fb_i0, fb_sens, freqs):
+    return _pt.pc_table_predict(tbl_i0, tbl_sens, tbl_cnt, tid, idx,
+                                fb_i0, fb_sens, freqs, interpret=_INTERPRET)
+
+
+@functools.partial(jax.jit, static_argnames=("chunk",))
+def rwkv_chunked(r, k, v, w, u, *, chunk: int = 128):
+    return _rc.rwkv_chunked(r, k, v, w, u, chunk=chunk, interpret=_INTERPRET)

@@ -1,0 +1,54 @@
+"""Pure-jnp oracles for every Pallas kernel (the ground truth in tests)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def attention_ref(q: jax.Array, k: jax.Array, v: jax.Array, *,
+                  causal: bool = True, window: int = 0) -> jax.Array:
+    """q (B,S,H,hd), k/v (B,S,Hkv,hd) — full-softmax reference (fp32)."""
+    B, S, H, hd = q.shape
+    Hkv = k.shape[2]
+    rep = H // Hkv
+    qg = q.reshape(B, S, Hkv, rep, hd).astype(jnp.float32)
+    scores = jnp.einsum("bqhrd,bkhd->bhrqk", qg, k.astype(jnp.float32))
+    scores = scores / (hd ** 0.5)
+    qi = jnp.arange(S)[:, None]
+    kj = jnp.arange(S)[None, :]
+    mask = kj <= qi if causal else jnp.ones((S, S), bool)
+    if window:
+        mask = mask & (kj > qi - window)
+    scores = jnp.where(mask[None, None, None], scores, -jnp.inf)
+    probs = jax.nn.softmax(scores, axis=-1)
+    out = jnp.einsum("bhrqk,bkhd->bqhrd", probs, v.astype(jnp.float32))
+    return out.reshape(B, S, H, hd).astype(q.dtype)
+
+
+def pc_table_predict_ref(table_i0: jax.Array, table_sens: jax.Array,
+                         table_count: jax.Array, tid: jax.Array,
+                         idx: jax.Array, fb_i0: jax.Array, fb_sens: jax.Array,
+                         freqs: jax.Array) -> jax.Array:
+    """PCSTALL lookup + per-CU aggregation + I(f) evaluation.
+    table_* (T,E); tid (CU,); idx/fb_* (CU,WF); freqs (F,).
+    Returns I_pred (CU,F) = sum_wf (i0 + sens*f)."""
+    i0 = table_i0[tid[:, None], idx]
+    sens = table_sens[tid[:, None], idx]
+    hit = table_count[tid[:, None], idx] > 0
+    i0 = jnp.where(hit, i0, fb_i0)
+    sens = jnp.where(hit, sens, fb_sens)
+    return (i0.sum(-1)[:, None]
+            + sens.sum(-1)[:, None] * freqs[None, :]).astype(jnp.float32)
+
+
+def rwkv_chunk_ref(r: jax.Array, k: jax.Array, v: jax.Array, w: jax.Array,
+                   u: jax.Array, S0: jax.Array):
+    """Exact RWKV6 recurrence (scan), one head.
+    r,k,v,w (T,hd) fp32; u (hd,); S0 (hd,hd). Returns (y (T,hd), S_T)."""
+    def step(S, inp):
+        rt, kt, vt, wt = inp
+        a = jnp.outer(kt, vt)
+        y = rt @ (S + u[:, None] * a)
+        return wt[:, None] * S + a, y
+    S_T, y = jax.lax.scan(step, S0, (r, k, v, w))
+    return y, S_T

@@ -1,0 +1,100 @@
+"""RWKV6 chunked linear-attention Pallas kernel.
+
+The token-by-token recurrence (ref.py / models/rwkv.py) is VPU-bound on TPU:
+every step does an hd x hd outer product with no MXU work. The chunked
+formulation turns the bulk into matmuls (MXU-friendly):
+
+For a chunk of C tokens with per-token decay w_t (diag), define suffix decay
+products D_t = prod_{s>t} diag(w_s). Then for token t in the chunk:
+
+  y_t = r_t @ (W_t S_0) + sum_{s<t} (r_t . k_s * prodw(s..t)) v_s + u-term
+  S_C = D_all S_0 + sum_s D_(s..C) k_s^T v_s
+
+where W_t = prod_{s<=t-1} diag(w_s) (prefix decay to chunk start). With
+P_t = prefix products, intra-chunk weights form a (C,C) matrix
+A[t,s] = (r_t * P_t / P_s) . k_s for s<t, plus the diagonal u bonus —
+computed with two (C,hd)x(hd,C) matmuls, then y = A @ v and a (C,hd)x(hd,hd)
+matmul against the carried state. The cross-chunk state recurrence stays
+sequential over the grid's chunk axis (VMEM scratch carry).
+
+Validated in interpret mode against the exact scan (``rwkv_chunk_ref``).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _rwkv_kernel(r_ref, k_ref, v_ref, w_ref, u_ref, y_ref, s_scr, *, C: int):
+    i_c = pl.program_id(1)
+
+    @pl.when(i_c == 0)
+    def _init():
+        s_scr[...] = jnp.zeros_like(s_scr)
+
+    r = r_ref[0].astype(jnp.float32)   # (C,hd)
+    k = k_ref[0].astype(jnp.float32)
+    v = v_ref[0].astype(jnp.float32)
+    w = w_ref[0].astype(jnp.float32)   # (C,hd) decays in (0,1)
+    u = u_ref[0].astype(jnp.float32)   # (1,hd) -> (hd,)
+
+    logw = jnp.log(jnp.maximum(w, 1e-38))
+    cum = jnp.cumsum(logw, axis=0)               # log prod_{s<=t} w_s
+    P = jnp.exp(cum - logw)                      # prefix products EXCL t
+    # intra-chunk attention: A[t,s] = sum_d r[t,d]k[s,d] * P[t,d]/ (P[s,d]*? )
+    #   weight(s<t) = prod_{j=s+1..t-1} w_j = P_t / (P_s * w_s) — fold w_s
+    #   into k: kd[s] = k[s] / (P[s] * w[s]) ... use exp-log for stability.
+    rP = r * P
+    kD = k * jnp.exp(-(cum))                     # k / prod_{s<=s} w
+    A = jax.lax.dot_general(rP, kD, (((1,), (1,)), ((), ())),
+                            preferred_element_type=jnp.float32)  # (C,C)
+    rows = jax.lax.broadcasted_iota(jnp.int32, (C, C), 0)
+    cols = jax.lax.broadcasted_iota(jnp.int32, (C, C), 1)
+    A = jnp.where(cols < rows, A, 0.0)
+    # u bonus on the diagonal (current token)
+    diag = jnp.sum(r * u[None, :] * k, axis=1)          # (C,)
+    y = jax.lax.dot_general(A, v, (((1,), (0,)), ((), ())),
+                            preferred_element_type=jnp.float32)
+    y = y + diag[:, None] * v
+    # contribution of carried state: y_t += (r_t * P_t) @ S0
+    S0 = s_scr[...]
+    y = y + jax.lax.dot_general(rP, S0, (((1,), (0,)), ((), ())),
+                                preferred_element_type=jnp.float32)
+    y_ref[0] = y.astype(y_ref.dtype)
+    # state update: S_C = diag(prod all w) S0 + sum_s diag(prod_{j>s} w) k_s^T v_s
+    total = cum[-1]                               # (hd,)
+    kT = k * jnp.exp(total - cum)[..., :]         # k_s * prod_{j>s} w_j
+    s_scr[...] = jnp.exp(total)[:, None] * S0 + jax.lax.dot_general(
+        kT, v, (((0,), (0,)), ((), ())), preferred_element_type=jnp.float32)
+
+
+def rwkv_chunked(r: jax.Array, k: jax.Array, v: jax.Array, w: jax.Array,
+                 u: jax.Array, *, chunk: int = 128,
+                 interpret: bool = True) -> jax.Array:
+    """Batched-heads RWKV6. r/k/v/w (BH, T, hd); u (BH, hd). Returns y."""
+    BH, T, hd = r.shape
+    chunk = min(chunk, T)
+    assert T % chunk == 0, (T, chunk)
+    n_c = T // chunk
+    kernel = functools.partial(_rwkv_kernel, C=chunk)
+    return pl.pallas_call(
+        kernel,
+        grid=(BH, n_c),
+        in_specs=[
+            pl.BlockSpec((1, chunk, hd), lambda b, c: (b, c, 0)),
+            pl.BlockSpec((1, chunk, hd), lambda b, c: (b, c, 0)),
+            pl.BlockSpec((1, chunk, hd), lambda b, c: (b, c, 0)),
+            pl.BlockSpec((1, chunk, hd), lambda b, c: (b, c, 0)),
+            pl.BlockSpec((1, hd), lambda b, c: (b, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, chunk, hd), lambda b, c: (b, c, 0)),
+        out_shape=jax.ShapeDtypeStruct((BH, T, hd), jnp.float32),
+        scratch_shapes=[pltpu.VMEM((hd, hd), jnp.float32)],
+        compiler_params=pltpu.CompilerParams(
+            dimension_semantics=("parallel", "arbitrary")),
+        interpret=interpret,
+    )(r, k, v, w, u)

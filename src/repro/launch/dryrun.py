@@ -1,0 +1,217 @@
+import os
+os.environ["XLA_FLAGS"] = (os.environ.get("XLA_FLAGS", "")
+                           + " --xla_force_host_platform_device_count=512").strip()
+
+"""Multi-pod dry-run: prove the distribution config is coherent.
+
+For every (architecture × input shape × mesh) cell:
+  jit(step).lower(*abstract_inputs).compile()
+must succeed on the single-pod (16,16) mesh and the 2-pod (2,16,16) mesh.
+Records memory_analysis, cost_analysis, and the collective-bytes schedule
+(parsed from optimized HLO) into experiments/dryrun/*.json for §Roofline.
+
+Usage:
+  python -m repro.launch.dryrun --arch llama3-405b --shape train_4k --multi-pod
+  python -m repro.launch.dryrun --all            # every cell, both meshes
+"""
+
+import argparse
+import json
+import re
+import time
+import traceback
+from pathlib import Path
+
+import jax
+import numpy as np
+
+from repro.configs import ARCH_IDS, get_config, shapes_for
+from repro.configs.base import TrainConfig
+from repro.launch import input_specs as ispec
+from repro.launch.mesh import make_production_mesh
+from repro.models import sharding as shard
+from repro.train.train_step import make_decode_step, make_prefill_step, make_train_step
+
+OUT_DIR = Path(__file__).resolve().parents[3] / "experiments" / "dryrun"
+
+_COLL_RE = re.compile(
+    r"\b(all-gather|all-reduce|reduce-scatter|all-to-all|collective-permute)"
+    r"(?:-start|-done)?\b")
+_SHAPE_RE = re.compile(r"\b([a-z0-9]+)\[([0-9,]*)\]")
+
+_DTYPE_BYTES = {"f64": 8, "f32": 4, "bf16": 2, "f16": 2, "f8e4m3fn": 1, "f8e5m2": 1,
+                "s64": 8, "u64": 8, "s32": 4, "u32": 4, "s16": 2, "u16": 2,
+                "s8": 1, "u8": 1, "pred": 1, "c64": 8, "c128": 16}
+
+
+def collective_bytes(hlo_text: str):
+    """Sum result bytes of every collective op in optimized per-device HLO."""
+    totals = {}
+    for line in hlo_text.splitlines():
+        m = _COLL_RE.search(line)
+        if not m or "=" not in line:
+            continue
+        op = m.group(1)
+        lhs = line.split("=", 1)[0] + "=" + line.split("=", 1)[1].split(m.group(0))[0]
+        nbytes = 0
+        for dt, dims in _SHAPE_RE.findall(lhs):
+            if dt not in _DTYPE_BYTES:
+                continue
+            n = 1
+            for d in dims.split(","):
+                if d:
+                    n *= int(d)
+            nbytes += n * _DTYPE_BYTES[dt]
+        if nbytes:
+            totals[op] = totals.get(op, 0) + nbytes
+    totals["total"] = sum(totals.values())
+    return totals
+
+
+def make_factored_mesh():
+    """(data=16, expert=4, tp=4): EP x TP hybrid for MoE archs whose expert
+    count doesn't divide 16 (qwen2-moe: 60 % 4 == 0)."""
+    import jax as _jax
+    return _jax.make_mesh((16, 4, 4), ("data", "expert", "tp"))
+
+
+def build_cell(arch: str, shape_name: str, mesh, microbatches: int = 1,
+               grad_compression: str = "none", remat: str = "full"):
+    """Returns (jitted fn, abstract inputs) for one cell on a mesh."""
+    import dataclasses
+    cfg = dataclasses.replace(get_config(arch), remat=remat)
+    shape = {s.name: s for s in shapes_for(cfg)}[shape_name]
+    axes = shard.mesh_axis_sizes(mesh)
+    tc = TrainConfig(microbatches=microbatches, grad_compression=grad_compression)
+
+    from repro.models import act_sharding as AS
+    dp = shard.batch_axes(axes, shape.global_batch // (microbatches
+                          if shape.kind == "train" else 1))
+    dp_size = int(np.prod([axes[a] for a in dp])) if dp else 1
+    model_ax = ("expert", "tp") if "tp" in axes else "model"
+    model_sz = (axes.get("expert", 1) * axes.get("tp", 1) if "tp" in axes
+                else axes.get("model", 1))
+    AS.set_activation_axes(dp, model_ax, batch_size=dp_size, model_size=model_sz)
+
+    if shape.kind == "train":
+        inputs = ispec.input_specs(cfg, shape, tc)
+        state_sp = shard.state_specs(cfg, inputs[0], axes)
+        batch_sp = shard.batch_specs(cfg, inputs[1], axes, microbatched=True)
+        in_sh = (shard.to_shardings(mesh, state_sp), shard.to_shardings(mesh, batch_sp))
+        fn = jax.jit(make_train_step(cfg, tc), in_shardings=in_sh,
+                     donate_argnums=(0,))
+    elif shape.kind == "prefill":
+        inputs = ispec.input_specs(cfg, shape, tc)
+        p_sp = shard.param_specs(cfg, inputs[0], axes)
+        b_sp = shard.batch_specs(cfg, inputs[1], axes, microbatched=False)
+        in_sh = (shard.to_shardings(mesh, p_sp), shard.to_shardings(mesh, b_sp))
+        fn = jax.jit(make_prefill_step(cfg), in_shardings=in_sh)
+    else:
+        inputs = ispec.input_specs(cfg, shape, tc)
+        p_sp = shard.param_specs(cfg, inputs[0], axes)
+        c_sp = shard.cache_specs(cfg, inputs[1], axes)
+        t_sp = shard.batch_specs(cfg, {"t": inputs[2]}, axes, microbatched=False)["t"]
+        in_sh = (shard.to_shardings(mesh, p_sp), shard.to_shardings(mesh, c_sp),
+                 jax.sharding.NamedSharding(mesh, t_sp))
+        fn = jax.jit(make_decode_step(cfg), in_shardings=in_sh, donate_argnums=(1,))
+    return fn, inputs, cfg, shape
+
+
+def run_cell(arch: str, shape_name: str, multi_pod: bool, ep_mesh: bool = False, **kw):
+    mesh = make_factored_mesh() if ep_mesh else make_production_mesh(multi_pod=multi_pod)
+    t0 = time.time()
+    fn, inputs, cfg, shape = build_cell(arch, shape_name, mesh, **kw)
+    with jax.sharding.set_mesh(mesh):
+        lowered = fn.lower(*inputs)
+        t_lower = time.time() - t0
+        compiled = lowered.compile()
+        t_compile = time.time() - t0 - t_lower
+        try:
+            mem = compiled.memory_analysis()
+            mem_d = {k: int(getattr(mem, k)) for k in
+                     ("temp_size_in_bytes", "argument_size_in_bytes",
+                      "output_size_in_bytes", "generated_code_size_in_bytes")
+                     if hasattr(mem, k)}
+        except Exception as e:  # pragma: no cover
+            mem_d = {"error": str(e)}
+        try:
+            cost = compiled.cost_analysis()
+            cost_d = {k: float(v) for k, v in cost.items()
+                      if isinstance(v, (int, float)) and k in
+                      ("flops", "bytes accessed", "transcendentals",
+                       "bytes accessed output", "optimal_seconds")}
+        except Exception as e:  # pragma: no cover
+            cost_d = {"error": str(e)}
+        hlo_txt = compiled.as_text()
+        coll = collective_bytes(hlo_txt)
+        from repro.roofline.hlo_analysis import analyze, roofline_terms
+        tripaware = analyze(hlo_txt)
+        terms = roofline_terms(tripaware)
+    rec = {
+        "arch": arch, "shape": shape_name,
+        "mesh": ("16x4x4ep" if ep_mesh else
+                 "pod2x16x16" if multi_pod else "16x16"),
+        "n_devices": int(np.prod(mesh.devices.shape)),
+        "lower_s": round(t_lower, 1), "compile_s": round(t_compile, 1),
+        "memory": mem_d, "cost": cost_d, "collectives": coll,
+        "tripaware": tripaware, "roofline": terms,
+        "options": kw,
+    }
+    return rec
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None)
+    ap.add_argument("--shape", default=None)
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--single-pod", action="store_true")
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--microbatches", type=int, default=1)
+    ap.add_argument("--remat", default="full")
+    ap.add_argument("--grad-compression", default="none")
+    ap.add_argument("--tag", default="")
+    ap.add_argument("--ep-mesh", action="store_true",
+                    help="factored (data,expert,tp)=(16,4,4) mesh")
+    args = ap.parse_args()
+
+    OUT_DIR.mkdir(parents=True, exist_ok=True)
+    archs = ARCH_IDS if (args.all or not args.arch) else [args.arch]
+    meshes = []
+    if args.single_pod or args.all or not args.multi_pod:
+        meshes.append(False)
+    if args.multi_pod or args.all:
+        meshes.append(True)
+
+    failures = []
+    for arch in archs:
+        cfg = get_config(arch)
+        shapes = ([s.name for s in shapes_for(cfg)]
+                  if (args.all or not args.shape) else [args.shape])
+        for shape_name in shapes:
+            for mp in meshes:
+                tag = f"{arch}_{shape_name}_{'mp' if mp else 'sp'}"
+                if args.tag:
+                    tag += f"_{args.tag}"
+                try:
+                    rec = run_cell(arch, shape_name, mp,
+                                   ep_mesh=args.ep_mesh,
+                                   microbatches=args.microbatches,
+                                   remat=args.remat,
+                                   grad_compression=args.grad_compression)
+                    (OUT_DIR / f"{tag}.json").write_text(json.dumps(rec, indent=1))
+                    print(f"OK   {tag:48s} lower={rec['lower_s']}s "
+                          f"compile={rec['compile_s']}s "
+                          f"flops={rec['cost'].get('flops', 0):.3e} "
+                          f"coll={rec['collectives'].get('total', 0):.3e}B")
+                except Exception as e:
+                    failures.append(tag)
+                    print(f"FAIL {tag}: {type(e).__name__}: {e}")
+                    traceback.print_exc()
+    if failures:
+        raise SystemExit(f"{len(failures)} cells failed: {failures}")
+    print("all requested dry-run cells passed")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,76 @@
+"""ShapeDtypeStruct stand-ins for every (arch × shape) cell.
+
+No device allocation — these are fed straight to ``jit(...).lower()``.
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig, ShapeConfig, TrainConfig
+from repro.models.model import init_cache, init_params
+from repro.train.train_step import init_state
+
+SDS = jax.ShapeDtypeStruct
+
+
+def train_batch_specs(cfg: ModelConfig, shape: ShapeConfig,
+                      microbatches: int = 1) -> Dict[str, Any]:
+    """Train batch, with leading microbatch axis (M, B/M, ...)."""
+    B, S = shape.global_batch, shape.seq_len
+    assert B % microbatches == 0
+    mb = B // microbatches
+    St = S - cfg.n_patches if cfg.frontend == "vision" else S
+    batch = {
+        "tokens": SDS((microbatches, mb, St), jnp.int32),
+        "labels": SDS((microbatches, mb, S), jnp.int32),
+        "mask": SDS((microbatches, mb, S), jnp.int32),
+    }
+    if cfg.frontend == "vision":
+        batch["patch_embeds"] = SDS((microbatches, mb, cfg.n_patches, cfg.d_model),
+                                    jnp.bfloat16)
+    return batch
+
+
+def prefill_batch_specs(cfg: ModelConfig, shape: ShapeConfig) -> Dict[str, Any]:
+    B, S = shape.global_batch, shape.seq_len
+    St = S - cfg.n_patches if cfg.frontend == "vision" else S
+    batch = {"tokens": SDS((B, St), jnp.int32)}
+    if cfg.frontend == "vision":
+        batch["patch_embeds"] = SDS((B, cfg.n_patches, cfg.d_model), jnp.bfloat16)
+    return batch
+
+
+def decode_inputs(cfg: ModelConfig, shape: ShapeConfig) -> Tuple[Any, Any]:
+    """(abstract cache, abstract tokens) for one decode step with a cache of
+    ``seq_len`` tokens already resident."""
+    B, S = shape.global_batch, shape.seq_len
+    cache = jax.eval_shape(
+        lambda: init_cache(cfg, B, S, fill=S - 1))
+    tokens = SDS((B,), jnp.int32)
+    return cache, tokens
+
+
+def abstract_state(cfg: ModelConfig, tc: TrainConfig):
+    return jax.eval_shape(
+        lambda k: init_state(cfg, tc, k), jax.random.key(0))
+
+
+def abstract_params(cfg: ModelConfig):
+    return jax.eval_shape(lambda k: init_params(cfg, k), jax.random.key(0))
+
+
+def input_specs(cfg: ModelConfig, shape: ShapeConfig, tc: TrainConfig = None,
+                microbatches: int = 1):
+    """The full abstract input tuple for the cell's step function."""
+    tc = tc or TrainConfig(microbatches=microbatches)
+    if shape.kind == "train":
+        return (abstract_state(cfg, tc), train_batch_specs(cfg, shape, tc.microbatches))
+    if shape.kind == "prefill":
+        return (abstract_params(cfg), prefill_batch_specs(cfg, shape))
+    if shape.kind == "decode":
+        cache, tokens = decode_inputs(cfg, shape)
+        return (abstract_params(cfg), cache, tokens)
+    raise ValueError(shape.kind)

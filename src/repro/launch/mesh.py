@@ -1,0 +1,32 @@
+"""Production mesh construction.
+
+``make_production_mesh`` is a function (not a module-level constant) so that
+importing this module never touches jax device state. The dry-run sets
+``XLA_FLAGS=--xla_force_host_platform_device_count=512`` *before* any jax
+import; everything else (tests, benches) sees the single real CPU device.
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes)
+
+
+def make_mesh(shape, axes):
+    """Arbitrary mesh (elastic re-mesh after pod loss, small test meshes)."""
+    return jax.make_mesh(tuple(shape), tuple(axes))
+
+
+def degraded_mesh(lost_pods: int = 1):
+    """Elastic fallback: production multi-pod mesh minus ``lost_pods`` pods.
+    With 1 of 2 pods lost this collapses to the single-pod mesh."""
+    pods = 2 - lost_pods
+    if pods <= 1:
+        return make_production_mesh(multi_pod=False)
+    return jax.make_mesh((pods, 16, 16), ("pod", "data", "model"))

@@ -1,0 +1,109 @@
+"""End-to-end training driver.
+
+Production path (multi-host): the same loop runs under ``jax.distributed``;
+this container exercises it single-process on CPU with reduced configs.
+
+Features: checkpoint/restart (atomic, resumable mid-run), straggler
+detection with elastic re-mesh hooks, deterministic data, optional PCSTALL
+DVFS telemetry (simulated per-device frequency schedule + energy report).
+
+  PYTHONPATH=src python -m repro.launch.train --arch glm4-9b --smoke \
+      --steps 50 --microbatches 2 --dvfs
+"""
+from __future__ import annotations
+
+import argparse
+import dataclasses
+import time
+
+import jax
+import numpy as np
+
+from repro.configs import TRAIN_4K, get_config, get_smoke_config
+from repro.configs.base import ShapeConfig, TrainConfig
+from repro.data.pipeline import make_batch
+from repro.train import checkpoint as ckpt
+from repro.train.elastic import StragglerDetector
+from repro.train.train_step import init_state, make_train_step
+
+
+def train(cfg, tc: TrainConfig, shape: ShapeConfig, *, steps: int,
+          resume: bool = True, dvfs: bool = False, log_every: int = 10):
+    key = jax.random.key(tc.seed)
+    state = init_state(cfg, tc, key)
+    start = 0
+    if resume:
+        try:
+            state, start = ckpt.restore(state, tc.checkpoint_dir)
+            start += 1
+            print(f"[train] resumed from step {start - 1}")
+        except FileNotFoundError:
+            pass
+    step_fn = jax.jit(make_train_step(cfg, tc), donate_argnums=(0,))
+    detector = StragglerDetector()
+    dvfs_mgr = None
+    if dvfs:
+        from repro.dvfs_runtime.manager import DVFSManager
+        dvfs_mgr = DVFSManager.for_model(cfg, shape)
+
+    losses = []
+    for step in range(start, steps):
+        t0 = time.perf_counter()
+        batch = make_batch(cfg, shape, step, microbatches=tc.microbatches)
+        state, metrics = step_fn(state, batch)
+        loss = float(metrics["loss"])
+        dt = time.perf_counter() - t0
+        losses.append(loss)
+        verdict = detector.observe(dt)
+        if verdict == "remesh":
+            print(f"[elastic] step {step}: persistent straggler — re-mesh "
+                  f"requested (see repro.train.elastic.plan_remesh)")
+        if dvfs_mgr is not None:
+            dvfs_mgr.observe_step(step, dt)
+        if step % log_every == 0 or step == steps - 1:
+            print(f"step {step:5d} loss {loss:.4f} "
+                  f"gnorm {float(metrics['grad_norm']):.3f} {dt * 1e3:.0f}ms")
+        if tc.checkpoint_every and step and step % tc.checkpoint_every == 0:
+            path = ckpt.save(state, tc.checkpoint_dir, step)
+            print(f"[ckpt] saved {path}")
+    ckpt.save(state, tc.checkpoint_dir, steps - 1)
+    if dvfs_mgr is not None:
+        rep = dvfs_mgr.report()
+        print(f"[dvfs] simulated energy {rep['energy_norm']:.3f}x static-1.7, "
+              f"accuracy {rep['accuracy']:.3f}")
+    return state, losses
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="glm4-9b")
+    ap.add_argument("--smoke", action="store_true",
+                    help="reduced config (CPU-runnable)")
+    ap.add_argument("--steps", type=int, default=100)
+    ap.add_argument("--seq", type=int, default=128)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--microbatches", type=int, default=1)
+    ap.add_argument("--lr", type=float, default=3e-3)
+    ap.add_argument("--ckpt-dir", default="/tmp/repro_ckpt")
+    ap.add_argument("--ckpt-every", type=int, default=50)
+    ap.add_argument("--grad-compression", default="none")
+    ap.add_argument("--dvfs", action="store_true")
+    ap.add_argument("--no-resume", action="store_true")
+    args = ap.parse_args()
+
+    cfg = get_smoke_config(args.arch) if args.smoke else get_config(args.arch)
+    shape = (ShapeConfig("custom", args.seq, args.batch, "train")
+             if args.smoke else TRAIN_4K)
+    tc = TrainConfig(lr=args.lr, total_steps=args.steps,
+                     warmup_steps=max(args.steps // 10, 5),
+                     microbatches=args.microbatches,
+                     checkpoint_dir=args.ckpt_dir,
+                     checkpoint_every=args.ckpt_every,
+                     grad_compression=args.grad_compression)
+    state, losses = train(cfg, tc, shape, steps=args.steps,
+                          resume=not args.no_resume, dvfs=args.dvfs)
+    print(f"final loss {losses[-1]:.4f} (first {losses[0]:.4f})")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,8 @@
+from repro.models.model import (  # noqa: F401
+    decode_step,
+    init_cache,
+    init_params,
+    loss_fn,
+    prefill,
+    backbone,
+)

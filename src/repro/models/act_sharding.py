@@ -1,0 +1,52 @@
+"""Activation sharding constraints.
+
+GSPMD loses the batch sharding of activations after the embedding gather
+(vocab-sharded table indexed by batch-sharded ids propagates 'replicated'),
+so we pin activations at layer boundaries. The batch axes are process-global
+state set by the launcher (dryrun/train) right before tracing; model code
+stays mesh-agnostic and this is a no-op outside a mesh context.
+"""
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax
+from jax.sharding import PartitionSpec as P
+
+_BATCH_AXES: Optional[Tuple[str, ...]] = None
+_BATCH_SIZE: int = 1
+_MODEL_AXIS: Optional[str] = None
+_MODEL_SIZE: int = 1
+
+
+def set_activation_axes(batch_axes, model_axis=None,
+                        batch_size: int = 1, model_size: int = 1) -> None:
+    global _BATCH_AXES, _MODEL_AXIS, _BATCH_SIZE, _MODEL_SIZE
+    _BATCH_AXES = tuple(batch_axes) if batch_axes else None
+    _MODEL_AXIS = model_axis
+    _BATCH_SIZE = max(batch_size, 1)
+    _MODEL_SIZE = max(model_size, 1)
+
+
+def clear_activation_axes() -> None:
+    set_activation_axes(None, None)
+
+
+def shard_batch(x: jax.Array, batch_dim: int = 0) -> jax.Array:
+    """Constrain dim ``batch_dim`` to the data-parallel axes."""
+    if _BATCH_AXES is None or x.shape[batch_dim] % _BATCH_SIZE:
+        return x
+    spec = [None] * x.ndim
+    spec[batch_dim] = _BATCH_AXES
+    return jax.lax.with_sharding_constraint(x, P(*spec))
+
+
+def shard_heads(x: jax.Array, head_dim: int, batch_dim: int = 0) -> jax.Array:
+    """Batch on DP axes + head/channel dim on the model axis (if divisible)."""
+    if _BATCH_AXES is None or x.shape[batch_dim] % _BATCH_SIZE:
+        return x
+    spec = [None] * x.ndim
+    spec[batch_dim] = _BATCH_AXES
+    if _MODEL_AXIS is not None and x.shape[head_dim] % _MODEL_SIZE == 0:
+        spec[head_dim] = _MODEL_AXIS
+    return jax.lax.with_sharding_constraint(x, P(*spec))

@@ -1,0 +1,251 @@
+"""Shared model layers: RMSNorm, RoPE, SwiGLU, block-wise attention.
+
+Pure-jnp reference path used everywhere (works on CPU and compiles for any
+mesh); the Pallas flash-attention kernel in ``repro.kernels`` is a drop-in
+for the TPU hot path (selected via ``attn_backend='pallas'``).
+
+All attention here is *block-wise* (lax.scan over query blocks) so the
+compiled memory footprint for 32k-token prefill stays bounded: scores are
+materialized only per (q-block × kv) tile, never (S × S).
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+
+def rms_norm(x: jax.Array, scale: jax.Array, eps: float = 1e-5) -> jax.Array:
+    dt = x.dtype
+    x = x.astype(jnp.float32)
+    var = jnp.mean(jnp.square(x), axis=-1, keepdims=True)
+    return ((x * lax.rsqrt(var + eps)) * (1.0 + scale.astype(jnp.float32))).astype(dt)
+
+
+# ---------------------------------------------------------------------------
+# RoPE
+# ---------------------------------------------------------------------------
+
+
+def rope_freqs(head_dim: int, theta: float) -> jax.Array:
+    return 1.0 / (theta ** (jnp.arange(0, head_dim, 2, dtype=jnp.float32) / head_dim))
+
+
+def apply_rope(x: jax.Array, positions: jax.Array, theta: float) -> jax.Array:
+    """x: (..., S, H, hd); positions: broadcastable to (..., S)."""
+    hd = x.shape[-1]
+    freqs = rope_freqs(hd, theta)  # (hd//2,)
+    ang = positions[..., None].astype(jnp.float32) * freqs  # (..., S, hd//2)
+    sin, cos = jnp.sin(ang)[..., None, :], jnp.cos(ang)[..., None, :]  # (.., S, 1, hd//2)
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+    return out.astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# Attention (block-wise, causal / sliding-window / prefix-LM)
+# ---------------------------------------------------------------------------
+
+
+def _mha_block(q, k, v, mask, scale):
+    """q: (B,bq,H,hd)  k/v: (B,bk,Hkv,hd) with H = Hkv*rep. mask (bq,bk) or None."""
+    B, bq, H, hd = q.shape
+    Hkv = k.shape[2]
+    rep = H // Hkv
+    qg = q.reshape(B, bq, Hkv, rep, hd)
+    # bf16 operands + fp32 accumulation: halves score-operand HBM traffic
+    # vs fp32 upcast while keeping softmax numerics in fp32 (Perf log #3).
+    scores = jnp.einsum("bqhrd,bkhd->bhrqk", qg, k,
+                        preferred_element_type=jnp.float32) * scale
+    if mask is not None:
+        scores = jnp.where(mask[None, None, None], scores, -1e30)
+    probs = jax.nn.softmax(scores, axis=-1)
+    out = jnp.einsum("bhrqk,bkhd->bqhrd", probs.astype(v.dtype), v,
+                     preferred_element_type=jnp.float32)
+    return out.reshape(B, bq, H, hd).astype(q.dtype)
+
+
+def _causal_pair_attention(q, k, v, scale, q_block: int) -> jax.Array:
+    """Exact causal attention scanning only the non-masked (i,j<=i) block
+    pairs with online softmax — flash attention at jnp block granularity.
+
+    vs the naive per-q-block full-S path this does S^2/2 + S*qb/2 work
+    instead of S^2 per head (Perf log #D): ~1.9x fewer attention FLOPs and
+    score-tile HBM traffic at 32k prefill.
+    """
+    B, S, H, hd = q.shape
+    Hkv = k.shape[2]
+    rep = H // Hkv
+    nb = S // q_block
+    pi = jnp.asarray([i for i in range(nb) for j in range(i + 1)])
+    pj = jnp.asarray([j for i in range(nb) for j in range(i + 1)])
+    qb = q.reshape(B, nb, q_block, Hkv, rep, hd)
+    kb = k.reshape(B, nb, q_block, Hkv, hd)
+    vb = v.reshape(B, nb, q_block, Hkv, hd)
+    tril = jnp.tril(jnp.ones((q_block, q_block), bool))
+
+    m0 = jnp.full((B, nb, Hkv, rep, q_block), -1e30, jnp.float32)
+    l0 = jnp.zeros((B, nb, Hkv, rep, q_block), jnp.float32)
+    a0 = jnp.zeros((B, nb, Hkv, rep, q_block, hd), jnp.float32)
+
+    def body(carry, ij):
+        m, l, acc = carry
+        i, j = ij
+        qi = lax.dynamic_index_in_dim(qb, i, 1, keepdims=False)  # (B,qb,Hkv,rep,hd)
+        kj = lax.dynamic_index_in_dim(kb, j, 1, keepdims=False)  # (B,qb,Hkv,hd)
+        vj = lax.dynamic_index_in_dim(vb, j, 1, keepdims=False)
+        s = jnp.einsum("bqhrd,bkhd->bhrqk", qi, kj,
+                       preferred_element_type=jnp.float32) * scale
+        allowed = tril | (i != j)
+        s = jnp.where(allowed[None, None, None], s, -1e30)
+        m_i = lax.dynamic_index_in_dim(m, i, 1, keepdims=False)
+        l_i = lax.dynamic_index_in_dim(l, i, 1, keepdims=False)
+        a_i = lax.dynamic_index_in_dim(acc, i, 1, keepdims=False)
+        m_new = jnp.maximum(m_i, s.max(-1))
+        p = jnp.exp(s - m_new[..., None])
+        alpha = jnp.exp(jnp.maximum(m_i - m_new, -80.0))
+        l_new = l_i * alpha + p.sum(-1)
+        a_new = a_i * alpha[..., None] + jnp.einsum(
+            "bhrqk,bkhd->bhrqd", p.astype(vj.dtype), vj,
+            preferred_element_type=jnp.float32)
+        m = lax.dynamic_update_index_in_dim(m, m_new, i, 1)
+        l = lax.dynamic_update_index_in_dim(l, l_new, i, 1)
+        acc = lax.dynamic_update_index_in_dim(acc, a_new, i, 1)
+        return (m, l, acc), None
+
+    (m, l, acc), _ = lax.scan(body, (m0, l0, a0), (pi, pj))
+    out = acc / jnp.maximum(l, 1e-20)[..., None]       # (B,nb,Hkv,rep,qb,hd)
+    out = out.transpose(0, 1, 4, 2, 3, 5).reshape(B, S, H, hd)
+    return out.astype(q.dtype)
+
+
+def attention(
+    q: jax.Array,
+    k: jax.Array,
+    v: jax.Array,
+    *,
+    causal: bool = True,
+    window: int = 0,
+    prefix_len: int = 0,
+    q_block: int = 1024,
+) -> jax.Array:
+    """Block-wise multi-head attention.
+
+    q (B,S,H,hd), k/v (B,S,Hkv,hd). ``window>0`` → sliding-window attention
+    (each query sees the previous ``window`` keys); ``prefix_len>0`` →
+    prefix-LM (first ``prefix_len`` positions are mutually visible).
+    """
+    B, S, H, hd = q.shape
+    scale = 1.0 / (hd ** 0.5)
+    if S <= q_block:
+        qi = jnp.arange(S)[:, None]
+        kj = jnp.arange(S)[None, :]
+        mask = kj <= qi if causal else jnp.ones((S, S), bool)
+        if window:
+            mask = mask & (kj > qi - window)
+        if prefix_len:
+            mask = mask | (kj < prefix_len)
+        return _mha_block(q, k, v, mask, scale)
+
+    assert S % q_block == 0, (S, q_block)
+    nb = S // q_block
+    if causal and not window and not prefix_len:
+        return _causal_pair_attention(q, k, v, scale, q_block)
+    qb = q.reshape(B, nb, q_block, H, hd)
+
+    if window and window <= 8192:
+        # sliding window: each q block needs kv slice [start - window, start + q_block)
+        span = q_block + window
+
+        def body(_, inp):
+            qblk, i = inp
+            start = jnp.maximum(i * q_block - window, 0)
+            ks = lax.dynamic_slice_in_dim(k, start, span, axis=1)
+            vs = lax.dynamic_slice_in_dim(v, start, span, axis=1)
+            qpos = i * q_block + jnp.arange(q_block)[:, None]
+            kpos = start + jnp.arange(span)[None, :]
+            mask = (kpos <= qpos) & (kpos > qpos - window)
+            if prefix_len:
+                mask = mask | (kpos < prefix_len)
+            return None, _mha_block(qblk, ks, vs, mask, scale)
+
+        _, out = lax.scan(body, None, (qb.swapaxes(0, 1), jnp.arange(nb)))
+    else:
+        # causal over full prefix, one q block at a time
+        def body(_, inp):
+            qblk, i = inp
+            qpos = i * q_block + jnp.arange(q_block)[:, None]
+            kpos = jnp.arange(S)[None, :]
+            mask = kpos <= qpos if causal else jnp.ones((q_block, S), bool)
+            if window:
+                mask = mask & (kpos > qpos - window)
+            if prefix_len:
+                mask = mask | (kpos < prefix_len)
+            return None, _mha_block(qblk, k, v, mask, scale)
+
+        _, out = lax.scan(body, None, (qb.swapaxes(0, 1), jnp.arange(nb)))
+    return out.swapaxes(0, 1).reshape(B, S, H, hd)
+
+
+def decode_attention(q: jax.Array, k_cache: jax.Array, v_cache: jax.Array,
+                     valid_mask: jax.Array) -> jax.Array:
+    """Single-token decode. q (B,1,H,hd), caches (B,W,Hkv,hd), valid (B,W) bool."""
+    hd = q.shape[-1]
+    scale = 1.0 / (hd ** 0.5)
+    B, W = valid_mask.shape
+    Hkv = k_cache.shape[2]
+    H = q.shape[2]
+    rep = H // Hkv
+    qg = q.reshape(B, Hkv, rep, hd)
+    scores = jnp.einsum("bhrd,bkhd->bhrk", qg.astype(jnp.float32),
+                        k_cache.astype(jnp.float32)) * scale
+    scores = jnp.where(valid_mask[:, None, None], scores, -1e30)
+    probs = jax.nn.softmax(scores, axis=-1)
+    out = jnp.einsum("bhrk,bkhd->bhrd", probs, v_cache.astype(jnp.float32))
+    return out.reshape(B, 1, H, hd).astype(q.dtype)
+
+
+# ---------------------------------------------------------------------------
+# MLPs
+# ---------------------------------------------------------------------------
+
+
+def swiglu(x: jax.Array, w1: jax.Array, w3: jax.Array, w2: jax.Array) -> jax.Array:
+    h = jax.nn.silu(jnp.einsum("bsd,df->bsf", x, w1)) * jnp.einsum("bsd,df->bsf", x, w3)
+    return jnp.einsum("bsf,fd->bsd", h, w2)
+
+
+# ---------------------------------------------------------------------------
+# Chunked cross-entropy (bounds logits memory: V up to 257k)
+# ---------------------------------------------------------------------------
+
+
+def chunked_ce_loss(x: jax.Array, emb_out: jax.Array, labels: jax.Array,
+                    mask: jax.Array, chunk: int = 512) -> jax.Array:
+    """x (B,S,D) final hidden; emb_out (V,D); labels/mask (B,S).
+
+    Computes softmax CE scanning over sequence chunks so the (tokens × V)
+    logits tensor never materializes whole.
+    """
+    B, S, D = x.shape
+    if S % chunk:
+        chunk = S  # tiny smoke shapes
+    nb = S // chunk
+    xc = x.reshape(B, nb, chunk, D).swapaxes(0, 1)
+    lc = labels.reshape(B, nb, chunk).swapaxes(0, 1)
+    mc = mask.reshape(B, nb, chunk).swapaxes(0, 1)
+
+    def body(acc, inp):
+        xb, lb, mb = inp
+        logits = jnp.einsum("bsd,vd->bsv", xb.astype(jnp.float32),
+                            emb_out.astype(jnp.float32))
+        lse = jax.nn.logsumexp(logits, axis=-1)
+        gold = jnp.take_along_axis(logits, lb[..., None], axis=-1)[..., 0]
+        nll = (lse - gold) * mb
+        return (acc[0] + nll.sum(), acc[1] + mb.sum()), None
+
+    (tot, cnt), _ = lax.scan(body, (jnp.float32(0), jnp.float32(0)), (xc, lc, mc))
+    return tot / jnp.maximum(cnt, 1.0)

@@ -1,0 +1,404 @@
+"""Model zoo: init / forward / loss / decode for all assigned architectures.
+
+Families:
+  dense / audio / vlm : decoder transformer (GQA + RoPE + SwiGLU), optional
+                        modality prefix (vlm) — audio consumes EnCodec ids.
+  moe                 : dense attention + MoE FFN (shared + routed top-k).
+  hybrid (hymba)      : parallel attention (SWA) + mamba heads per layer.
+  ssm (rwkv6)         : attention-free time-mix/channel-mix.
+
+Params are a nested dict; per-layer params are stacked on a leading L axis
+and consumed with ``lax.scan`` (O(1) HLO size at 126 layers) wrapped in
+``jax.checkpoint`` (remat).
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax import lax
+
+from repro.configs.base import ModelConfig
+from repro.models import act_sharding as AS
+from repro.models import layers as L
+from repro.models import moe as MOE
+from repro.models import rwkv as RWKV
+from repro.models import ssm as SSM
+
+Params = Dict[str, Any]
+
+
+def _dtype(cfg: ModelConfig):
+    return jnp.dtype(cfg.dtype)
+
+
+def _dense_init(key, shape, dtype, scale=0.02):
+    return (jax.random.normal(key, shape, jnp.float32) * scale).astype(dtype)
+
+
+# ---------------------------------------------------------------------------
+# Init
+# ---------------------------------------------------------------------------
+
+
+def _init_attn(key, cfg: ModelConfig, dt):
+    hd = cfg.resolved_head_dim
+    ks = jax.random.split(key, 4)
+    return {
+        "wq": _dense_init(ks[0], (cfg.d_model, cfg.n_heads, hd), dt),
+        "wk": _dense_init(ks[1], (cfg.d_model, cfg.n_kv_heads, hd), dt),
+        "wv": _dense_init(ks[2], (cfg.d_model, cfg.n_kv_heads, hd), dt),
+        "wo": _dense_init(ks[3], (cfg.n_heads, hd, cfg.d_model), dt,
+                          scale=0.02 / np.sqrt(2 * cfg.n_layers)),
+    }
+
+
+def _init_mlp(key, cfg: ModelConfig, dt):
+    ks = jax.random.split(key, 3)
+    return {
+        "w1": _dense_init(ks[0], (cfg.d_model, cfg.d_ff), dt),
+        "w3": _dense_init(ks[1], (cfg.d_model, cfg.d_ff), dt),
+        "w2": _dense_init(ks[2], (cfg.d_ff, cfg.d_model), dt,
+                          scale=0.02 / np.sqrt(2 * cfg.n_layers)),
+    }
+
+
+def _init_moe(key, cfg: ModelConfig, dt):
+    e = cfg.moe
+    ks = jax.random.split(key, 7)
+    p = {
+        "router": _dense_init(ks[0], (cfg.d_model, e.num_experts), jnp.float32),
+        "w1": _dense_init(ks[1], (e.num_experts, cfg.d_model, e.expert_d_ff), dt),
+        "w3": _dense_init(ks[2], (e.num_experts, cfg.d_model, e.expert_d_ff), dt),
+        "w2": _dense_init(ks[3], (e.num_experts, e.expert_d_ff, cfg.d_model), dt,
+                          scale=0.02 / np.sqrt(2 * cfg.n_layers)),
+    }
+    if e.num_shared:
+        fs = e.num_shared * (e.shared_d_ff or e.expert_d_ff)
+        p["sw1"] = _dense_init(ks[4], (cfg.d_model, fs), dt)
+        p["sw3"] = _dense_init(ks[5], (cfg.d_model, fs), dt)
+        p["sw2"] = _dense_init(ks[6], (fs, cfg.d_model), dt,
+                               scale=0.02 / np.sqrt(2 * cfg.n_layers))
+    return p
+
+
+def _init_mamba(key, cfg: ModelConfig, dt):
+    d = cfg.d_model
+    di = d * (cfg.ssm.expand if cfg.ssm else 1)
+    hd = cfg.resolved_head_dim
+    H = di // hd
+    n = cfg.ssm.state_size
+    ks = jax.random.split(key, 6)
+    return {
+        "w_in": _dense_init(ks[0], (d, 2 * di), dt),
+        "conv_k": _dense_init(ks[1], (cfg.ssm.conv_width, di), dt, scale=0.5),
+        "w_dt": _dense_init(ks[2], (di, H), jnp.float32),
+        "dt_bias": jnp.full((H,), -2.0, jnp.float32),
+        "w_b": _dense_init(ks[3], (di, n), dt),
+        "w_c": _dense_init(ks[4], (di, n), dt),
+        "a_log": jnp.zeros((H,), jnp.float32),
+        "d_skip": jnp.ones((H,), jnp.float32),
+        "w_out": _dense_init(ks[5], (di, d), dt,
+                             scale=0.02 / np.sqrt(2 * cfg.n_layers)),
+    }
+
+
+def _init_rwkv_layer(key, cfg: ModelConfig, dt):
+    d = cfg.d_model
+    hd = cfg.resolved_head_dim
+    H = d // hd
+    lora = 64
+    ks = jax.random.split(key, 10)
+    mu = lambda: jnp.full((d,), 0.5, jnp.float32)
+    return {
+        "tm": {
+            "mu_r": mu(), "mu_k": mu(), "mu_v": mu(), "mu_w": mu(), "mu_g": mu(),
+            "wr": _dense_init(ks[0], (d, d), dt),
+            "wk": _dense_init(ks[1], (d, d), dt),
+            "wv": _dense_init(ks[2], (d, d), dt),
+            "wg": _dense_init(ks[3], (d, d), dt),
+            "wo": _dense_init(ks[4], (d, d), dt, scale=0.02 / np.sqrt(2 * cfg.n_layers)),
+            "w0": jnp.full((d,), -1.0, jnp.float32),
+            "wa": _dense_init(ks[5], (d, lora), jnp.float32),
+            "wb": _dense_init(ks[6], (lora, d), jnp.float32),
+            "u": jnp.zeros((d,), jnp.float32),
+            "ln_w": jnp.ones((d,), jnp.float32),
+            "ln_b": jnp.zeros((d,), jnp.float32),
+        },
+        "cm": {
+            "mu_ck": mu(), "mu_cr": mu(),
+            "ck": _dense_init(ks[7], (d, cfg.d_ff), dt),
+            "cv": _dense_init(ks[8], (cfg.d_ff, d), dt, scale=0.02 / np.sqrt(2 * cfg.n_layers)),
+            "cr": _dense_init(ks[9], (d, d), dt),
+        },
+        "norm1": jnp.zeros((d,), jnp.float32),
+        "norm2": jnp.zeros((d,), jnp.float32),
+    }
+
+
+def _init_layer(key, cfg: ModelConfig):
+    dt = _dtype(cfg)
+    d = cfg.d_model
+    if cfg.family == "ssm":
+        return _init_rwkv_layer(key, cfg, dt)
+    k1, k2, k3 = jax.random.split(key, 3)
+    p: Params = {"norm1": jnp.zeros((d,), jnp.float32),
+                 "norm2": jnp.zeros((d,), jnp.float32)}
+    p["attn"] = _init_attn(k1, cfg, dt)
+    if cfg.family == "hybrid":
+        p["mamba"] = _init_mamba(k3, cfg, dt)
+        p["norm_a"] = jnp.zeros((d,), jnp.float32)
+        p["norm_s"] = jnp.zeros((d,), jnp.float32)
+    p["mlp" if cfg.moe is None else "moe"] = (
+        _init_mlp(k2, cfg, dt) if cfg.moe is None else _init_moe(k2, cfg, dt))
+    return p
+
+
+def init_params(cfg: ModelConfig, key: jax.Array) -> Params:
+    dt = _dtype(cfg)
+    k_emb, k_layers, k_head = jax.random.split(key, 3)
+    layer_keys = jax.random.split(k_layers, cfg.n_layers)
+    layers = jax.vmap(lambda k: _init_layer(k, cfg))(layer_keys)
+    p = {
+        "embed": _dense_init(k_emb, (cfg.vocab, cfg.d_model), dt),
+        "layers": layers,
+        "final_norm": jnp.zeros((cfg.d_model,), jnp.float32),
+    }
+    if not cfg.tie_embeddings:
+        p["lm_head"] = _dense_init(k_head, (cfg.vocab, cfg.d_model), dt)
+    return p
+
+
+# ---------------------------------------------------------------------------
+# Forward (train / prefill)
+# ---------------------------------------------------------------------------
+
+
+def _attn_block(x, p, cfg: ModelConfig, positions, prefix_len=0):
+    hd = cfg.resolved_head_dim
+    q = AS.shard_heads(jnp.einsum("bsd,dhk->bshk", x, p["wq"]), head_dim=2)
+    k = AS.shard_heads(jnp.einsum("bsd,dhk->bshk", x, p["wk"]), head_dim=2)
+    v = AS.shard_heads(jnp.einsum("bsd,dhk->bshk", x, p["wv"]), head_dim=2)
+    q = L.apply_rope(q, positions, cfg.rope_theta)
+    k = L.apply_rope(k, positions, cfg.rope_theta)
+    window = cfg.window if cfg.attn_kind == "swa" else 0
+    o = L.attention(q, k, v, causal=True, window=window, prefix_len=prefix_len)
+    return jnp.einsum("bshk,hkd->bsd", o, p["wo"])
+
+
+def _layer_fwd(x, lp, cfg: ModelConfig, positions, prefix_len):
+    """One transformer block. Returns (x, aux_loss)."""
+    aux = jnp.float32(0.0)
+    if cfg.family == "ssm":
+        B = x.shape[0]
+        d = cfg.d_model
+        hd = cfg.resolved_head_dim
+        H = d // hd
+        S0 = jnp.zeros((B, H, hd, hd), jnp.float32)
+        x0 = jnp.zeros((B, 1, d), x.dtype)
+        h = L.rms_norm(x, lp["norm1"], cfg.norm_eps)
+        y, _, _ = RWKV.time_mix_chunked(h, x0, S0, lp["tm"], H, hd)
+        x = x + y
+        h = L.rms_norm(x, lp["norm2"], cfg.norm_eps)
+        y, _ = RWKV.channel_mix(h, jnp.zeros((B, 1, d), x.dtype), lp["cm"])
+        return x + y, aux
+
+    h = L.rms_norm(x, lp["norm1"], cfg.norm_eps)
+    if cfg.family == "hybrid":
+        a = _attn_block(h, lp["attn"], cfg, positions, prefix_len)
+        st = SSM.init_mamba_state(x.shape[0], cfg.d_model, cfg.resolved_head_dim,
+                                  cfg.ssm.state_size, cfg.ssm.conv_width, x.dtype)
+        s, _ = SSM.mamba_head(h, lp["mamba"], st, cfg.resolved_head_dim,
+                              cfg.ssm.state_size)
+        y = 0.5 * (L.rms_norm(a, lp["norm_a"], cfg.norm_eps)
+                   + L.rms_norm(s, lp["norm_s"], cfg.norm_eps))
+    else:
+        y = _attn_block(h, lp["attn"], cfg, positions, prefix_len)
+    x = x + y
+    h = L.rms_norm(x, lp["norm2"], cfg.norm_eps)
+    if cfg.moe is not None:
+        y, aux = MOE.moe_layer(h, lp["moe"], cfg.moe)
+    else:
+        y = L.swiglu(h, lp["mlp"]["w1"], lp["mlp"]["w3"], lp["mlp"]["w2"])
+    return x + y, aux
+
+
+def _remat_policy(cfg: ModelConfig):
+    if cfg.remat == "dots":
+        return jax.checkpoint_policies.dots_with_no_batch_dims_saveable
+    return jax.checkpoint_policies.nothing_saveable
+
+
+def embed_inputs(params: Params, cfg: ModelConfig, batch: Dict[str, jax.Array]
+                 ) -> Tuple[jax.Array, int]:
+    """Returns (x (B,S,D), prefix_len). For vlm: patch embeds prepended."""
+    tok_emb = AS.shard_batch(params["embed"][batch["tokens"]])
+    if cfg.frontend == "vision":
+        pe = batch["patch_embeds"].astype(tok_emb.dtype)
+        return AS.shard_batch(jnp.concatenate([pe, tok_emb], axis=1)), cfg.n_patches
+    return tok_emb, 0
+
+
+def backbone(params: Params, cfg: ModelConfig, x: jax.Array, prefix_len: int
+             ) -> Tuple[jax.Array, jax.Array]:
+    """Run all layers. Returns (hidden (B,S,D), total_aux)."""
+    B, S, D = x.shape
+    positions = jnp.arange(S)[None, :]
+
+    body = functools.partial(_layer_fwd, cfg=cfg, positions=positions,
+                             prefix_len=prefix_len)
+
+    def scan_body(carry, lp):
+        x, aux = carry
+        x = AS.shard_batch(x)
+        x, a = body(x, lp)
+        return (AS.shard_batch(x), aux + a), None
+
+    if cfg.remat != "none":
+        scan_body = jax.checkpoint(scan_body, policy=_remat_policy(cfg),
+                                   prevent_cse=False)
+    (x, aux), _ = lax.scan(scan_body, (x, jnp.float32(0.0)), params["layers"])
+    return L.rms_norm(x, params["final_norm"], cfg.norm_eps), aux
+
+
+def loss_fn(params: Params, cfg: ModelConfig, batch: Dict[str, jax.Array]
+            ) -> Tuple[jax.Array, Dict[str, jax.Array]]:
+    x, prefix_len = embed_inputs(params, cfg, batch)
+    h, aux = backbone(params, cfg, x, prefix_len)
+    emb_out = params.get("lm_head", params["embed"])
+    labels, mask = batch["labels"], batch["mask"].astype(jnp.float32)
+    ce = L.chunked_ce_loss(h, emb_out, labels, mask)
+    moe_w = cfg.moe.aux_loss_weight if cfg.moe is not None else 0.0
+    loss = ce + moe_w * aux / max(cfg.n_layers, 1)
+    return loss, {"ce": ce, "aux": aux}
+
+
+def prefill(params: Params, cfg: ModelConfig, batch: Dict[str, jax.Array]) -> jax.Array:
+    """Serve prefill: returns last-position logits (B,V)."""
+    x, prefix_len = embed_inputs(params, cfg, batch)
+    h, _ = backbone(params, cfg, x, prefix_len)
+    emb_out = params.get("lm_head", params["embed"])
+    return jnp.einsum("bd,vd->bv", h[:, -1].astype(jnp.float32),
+                      emb_out.astype(jnp.float32))
+
+
+# ---------------------------------------------------------------------------
+# Decode (single token, stateful cache)
+# ---------------------------------------------------------------------------
+
+
+def cache_capacity(cfg: ModelConfig, max_len: int) -> int:
+    if cfg.attn_kind == "swa":
+        return min(cfg.window, max_len)
+    return max_len
+
+
+def init_cache(cfg: ModelConfig, batch: int, max_len: int, fill: int = 0) -> Dict[str, Any]:
+    """Abstract-friendly cache. ``fill`` = number of tokens already in cache."""
+    dt = _dtype(cfg)
+    Lr = cfg.n_layers
+    hd = cfg.resolved_head_dim
+    c: Dict[str, Any] = {"pos": jnp.full((), fill, jnp.int32)}
+    if cfg.family == "ssm":
+        d = cfg.d_model
+        H = d // hd
+        c["S"] = jnp.zeros((Lr, batch, H, hd, hd), jnp.float32)
+        c["x_tm"] = jnp.zeros((Lr, batch, 1, d), dt)
+        c["x_cm"] = jnp.zeros((Lr, batch, 1, d), dt)
+        return c
+    W = cache_capacity(cfg, max_len)
+    c["k"] = jnp.zeros((Lr, batch, W, cfg.n_kv_heads, hd), dt)
+    c["v"] = jnp.zeros((Lr, batch, W, cfg.n_kv_heads, hd), dt)
+    if cfg.family == "hybrid":
+        di = cfg.d_model * cfg.ssm.expand
+        H = di // hd
+        c["ssm_h"] = jnp.zeros((Lr, batch, H, hd, cfg.ssm.state_size), jnp.float32)
+        c["conv"] = jnp.zeros((Lr, batch, cfg.ssm.conv_width - 1, di), dt)
+    return c
+
+
+def _decode_attn(x, p, cfg: ModelConfig, kc, vc, pos):
+    """x (B,1,D); kc/vc (B,W,Hkv,hd). Returns (y, kc, vc)."""
+    W = kc.shape[1]
+    q = jnp.einsum("bsd,dhk->bshk", x, p["wq"])
+    k = jnp.einsum("bsd,dhk->bshk", x, p["wk"])
+    v = jnp.einsum("bsd,dhk->bshk", x, p["wv"])
+    posb = jnp.full((x.shape[0], 1), pos)
+    q = L.apply_rope(q, posb, cfg.rope_theta)
+    k = L.apply_rope(k, posb, cfg.rope_theta)
+    slot = pos % W if cfg.attn_kind == "swa" else jnp.minimum(pos, W - 1)
+    kc = lax.dynamic_update_slice_in_dim(kc, k, slot, axis=1)
+    vc = lax.dynamic_update_slice_in_dim(vc, v, slot, axis=1)
+    valid = jnp.arange(W)[None, :] <= pos  # ring: all valid once pos >= W
+    if cfg.attn_kind == "swa":
+        valid = valid | (jnp.full((1, W), pos) >= W)
+    valid = jnp.broadcast_to(valid, (x.shape[0], W))
+    o = L.decode_attention(q, kc, vc, valid)
+    return jnp.einsum("bshk,hkd->bsd", o, p["wo"]), kc, vc
+
+
+def decode_step(params: Params, cfg: ModelConfig, cache: Dict[str, Any],
+                tokens: jax.Array) -> Tuple[jax.Array, Dict[str, Any]]:
+    """tokens (B,) int32 → (logits (B,V), new cache)."""
+    x = AS.shard_batch(params["embed"][tokens][:, None, :])  # (B,1,D)
+    pos = cache["pos"]
+    hd = cfg.resolved_head_dim
+
+    if cfg.family == "ssm":
+        d = cfg.d_model
+        H = d // hd
+
+        def body(x, xs):
+            lp, S0, xtm, xcm = xs
+            h = L.rms_norm(x, lp["norm1"], cfg.norm_eps)
+            y, S1, xtm1 = RWKV.time_mix(h, xtm, S0, lp["tm"], H, hd)
+            x = x + y
+            h = L.rms_norm(x, lp["norm2"], cfg.norm_eps)
+            y, xcm1 = RWKV.channel_mix(h, xcm, lp["cm"])
+            return x + y, (S1, xtm1.astype(xtm.dtype), xcm1.astype(xcm.dtype))
+
+        x, (S, xtm, xcm) = lax.scan(body, x, (params["layers"], cache["S"],
+                                              cache["x_tm"], cache["x_cm"]))
+        new_cache = {"pos": pos + 1, "S": S, "x_tm": xtm, "x_cm": xcm}
+    else:
+        def body(x, xs):
+            if cfg.family == "hybrid":
+                lp, kc, vc, hst, cst = xs
+            else:
+                lp, kc, vc = xs
+            h = L.rms_norm(x, lp["norm1"], cfg.norm_eps)
+            if cfg.family == "hybrid":
+                a, kc, vc = _decode_attn(h, lp["attn"], cfg, kc, vc, pos)
+                s, st = SSM.mamba_head(h, lp["mamba"], {"h": hst, "conv": cst},
+                                       hd, cfg.ssm.state_size)
+                y = 0.5 * (L.rms_norm(a, lp["norm_a"], cfg.norm_eps)
+                           + L.rms_norm(s, lp["norm_s"], cfg.norm_eps))
+            else:
+                y, kc, vc = _decode_attn(h, lp["attn"], cfg, kc, vc, pos)
+            x = x + y
+            h = L.rms_norm(x, lp["norm2"], cfg.norm_eps)
+            if cfg.moe is not None:
+                y, _ = MOE.moe_layer(h, lp["moe"], cfg.moe)
+            else:
+                y = L.swiglu(h, lp["mlp"]["w1"], lp["mlp"]["w3"], lp["mlp"]["w2"])
+            x = x + y
+            if cfg.family == "hybrid":
+                return x, (kc, vc, st["h"], st["conv"])
+            return x, (kc, vc)
+
+        if cfg.family == "hybrid":
+            xs = (params["layers"], cache["k"], cache["v"], cache["ssm_h"], cache["conv"])
+            x, (k, v, hs, cs) = lax.scan(body, x, xs)
+            new_cache = {"pos": pos + 1, "k": k, "v": v, "ssm_h": hs, "conv": cs}
+        else:
+            xs = (params["layers"], cache["k"], cache["v"])
+            x, (k, v) = lax.scan(body, x, xs)
+            new_cache = {"pos": pos + 1, "k": k, "v": v}
+
+    h = L.rms_norm(x, params["final_norm"], cfg.norm_eps)[:, 0]
+    emb_out = params.get("lm_head", params["embed"])
+    logits = jnp.einsum("bd,vd->bv", h.astype(jnp.float32), emb_out.astype(jnp.float32))
+    return logits, new_cache

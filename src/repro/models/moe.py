@@ -1,0 +1,102 @@
+"""Mixture-of-Experts layer: top-k routing, sort-based capacity dispatch.
+
+Two sharding strategies (selected automatically by the config, see
+DESIGN.md §Arch-applicability):
+  * EP  — expert dim sharded over the 'model' mesh axis (granite-moe, 32e/16).
+  * TPE — TP inside each expert's d_ff (qwen2-moe, 60e not divisible by 16).
+
+Dispatch is sort-based (argsort by expert id + capacity slots), not one-hot
+matmul, so routed FLOPs stay proportional to top_k rather than num_experts.
+
+Perf note (§Perf hillclimb): dispatch is vmapped over the *batch* row dim —
+flattening (B,S,D)->(B*S,D) merges the DP-sharded batch axis into an
+unsharded token axis and GSPMD responds with full all-gathers of the
+activations. Row-local dispatch keeps every buffer batch-sharded; the only
+cross-device traffic left is the legitimate expert-parallel all-to-all.
+"""
+from __future__ import annotations
+
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from repro.configs.base import MoEConfig
+
+
+def router_probs(x: jax.Array, w_router: jax.Array) -> jax.Array:
+    """x (T,D), w_router (D,E) -> softmax probs (T,E) in fp32."""
+    logits = jnp.einsum("td,de->te", x.astype(jnp.float32), w_router.astype(jnp.float32))
+    return jax.nn.softmax(logits, axis=-1)
+
+
+def topk_dispatch(probs: jax.Array, top_k: int, capacity: int
+                  ) -> Tuple[jax.Array, jax.Array, jax.Array, jax.Array]:
+    """Sort-based dispatch plan for T tokens.
+
+    Returns (slot, weight, src_token, aux):
+      slot (T*k,)  flat index into (E*C) expert buffers (clipped),
+      weight (T*k,) normalized routing weight (0 where dropped),
+      src_token (T*k,) source token index,
+      aux: GShard load-balance loss.
+    """
+    T, E = probs.shape
+    vals, ids = lax.top_k(probs, top_k)  # (T,k)
+    vals = vals / jnp.maximum(vals.sum(-1, keepdims=True), 1e-9)
+    flat_e = ids.reshape(-1)  # (T*k,)
+    flat_w = vals.reshape(-1)
+    order = jnp.argsort(flat_e, stable=True)
+    sorted_e = flat_e[order]
+    src_token = order // top_k
+    first = jnp.searchsorted(sorted_e, sorted_e, side="left")
+    pos = jnp.arange(T * top_k) - first
+    keep = pos < capacity
+    slot = sorted_e * capacity + jnp.minimum(pos, capacity - 1)
+    weight = jnp.where(keep, flat_w[order], 0.0)
+    me = probs.mean(axis=0)  # (E,)
+    ce = jnp.zeros((E,), jnp.float32).at[flat_e].add(1.0) / (T * top_k)
+    aux = E * jnp.sum(me * ce)
+    return slot, weight, src_token, aux
+
+
+def moe_layer(x: jax.Array, params: dict, cfg: MoEConfig,
+              capacity_factor: float = 1.25, seq_chunk: int = 4096
+              ) -> Tuple[jax.Array, jax.Array]:
+    """x (B,S,D). Returns (y, aux_loss). Scans over sequence chunks so the
+    (B,E,C,D) buffers stay bounded for 32k-token sequences."""
+    B, S, D = x.shape
+    chunk = min(seq_chunk, S)
+    if S % chunk:
+        chunk = S
+    n_chunks = S // chunk
+    E, k = cfg.num_experts, cfg.top_k
+    capacity = max(int(chunk * k * capacity_factor / E), 4)
+
+    def row(xc):  # (chunk, D) — one batch row, stays on its DP shard
+        probs = router_probs(xc, params["router"])
+        slot, weight, src, aux = topk_dispatch(probs, k, capacity)
+        buf = jnp.zeros((E * capacity, D), xc.dtype).at[slot].set(
+            jnp.where(weight[:, None] > 0, xc[src], 0))
+        return buf.reshape(E, capacity, D), (slot, weight, src), aux
+
+    def combine_row(ye, plan, dtype):
+        slot, weight, src = plan
+        yc = jnp.zeros((chunk, D), dtype)
+        return yc.at[src].add(ye.reshape(E * capacity, D)[slot]
+                              * weight[:, None].astype(dtype))
+
+    def body(aux_acc, xc):  # xc (B, chunk, D)
+        buf, plan, aux = jax.vmap(row)(xc)           # (B,E,C,D)
+        h = jax.nn.silu(jnp.einsum("becd,edf->becf", buf, params["w1"])) \
+            * jnp.einsum("becd,edf->becf", buf, params["w3"])
+        ye = jnp.einsum("becf,efd->becd", h, params["w2"])
+        yc = jax.vmap(lambda y, p: combine_row(y, p, xc.dtype))(ye, plan)
+        if cfg.num_shared:
+            hs = jax.nn.silu(xc @ params["sw1"]) * (xc @ params["sw3"])
+            yc = yc + hs @ params["sw2"]
+        return aux_acc + aux.mean(), yc
+
+    xc = x.reshape(B, n_chunks, chunk, D).swapaxes(0, 1)  # (nc,B,chunk,D)
+    aux, y = lax.scan(body, jnp.float32(0.0), xc)
+    return y.swapaxes(0, 1).reshape(B, S, D), aux / n_chunks

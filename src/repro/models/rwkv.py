@@ -1,0 +1,153 @@
+"""RWKV-6 (Finch) blocks: time-mix with data-dependent decay + channel-mix.
+
+Reference implementation scans token-by-token (exact recurrence). The
+chunked formulation (matmul-friendly for the MXU) lives in
+``repro.kernels.rwkv_chunk`` and is validated against this scan.
+"""
+from __future__ import annotations
+
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+
+def token_shift(x: jax.Array, x_prev: jax.Array) -> jax.Array:
+    """shift-by-one along seq; x (B,S,D), x_prev (B,1,D) is the carry-in."""
+    return jnp.concatenate([x_prev, x[:, :-1]], axis=1)
+
+
+def _mix(x, xs, mu):
+    return x + (xs - x) * mu.astype(x.dtype)
+
+
+def time_mix_step(S, r, k, v, w, u):
+    """One-token WKV update, per head.
+    S (hd,hd); r,k,w,u (hd,); v (hd,). Returns (S', y (hd,))."""
+    a = jnp.outer(k, v)  # (hd_k, hd_v)
+    y = r @ (S + u[:, None] * a)
+    S = w[:, None] * S + a
+    return S, y
+
+
+def time_mix(x: jax.Array, x_prev: jax.Array, S0: jax.Array, p: dict,
+             n_heads: int, head_dim: int) -> Tuple[jax.Array, jax.Array, jax.Array]:
+    """RWKV6 time-mix. x (B,S,D); S0 (B,H,hd,hd). Returns y, S_out, x_last."""
+    B, S, D = x.shape
+    xs = token_shift(x, x_prev)
+    xr = _mix(x, xs, p["mu_r"])
+    xk = _mix(x, xs, p["mu_k"])
+    xv = _mix(x, xs, p["mu_v"])
+    xw = _mix(x, xs, p["mu_w"])
+    xg = _mix(x, xs, p["mu_g"])
+    r = (xr @ p["wr"]).astype(jnp.float32)
+    k = (xk @ p["wk"]).astype(jnp.float32)
+    v = (xv @ p["wv"]).astype(jnp.float32)
+    g = jax.nn.silu(xg @ p["wg"])
+    # data-dependent decay (lora): w in (0,1)
+    wln = p["w0"] + jnp.tanh(xw.astype(jnp.float32) @ p["wa"]) @ p["wb"]
+    w = jnp.exp(-jnp.exp(wln.astype(jnp.float32)))  # (B,S,D)
+
+    hs = (B, S, n_heads, head_dim)
+    r, k, v, w = (t.reshape(hs) for t in (r, k, v, w))
+    u = p["u"].reshape(n_heads, head_dim).astype(jnp.float32)
+
+    def step(Sc, inp):
+        rt, kt, vt, wt = inp  # (B,H,hd)
+        fn = jax.vmap(jax.vmap(time_mix_step, in_axes=(0, 0, 0, 0, 0, 0)),
+                      in_axes=(0, 0, 0, 0, 0, None))
+        Sc, y = fn(Sc, rt, kt, vt, wt, u)
+        return Sc, y
+
+    seq_first = lambda t: t.swapaxes(0, 1)  # (S,B,H,hd)
+    S_out, y = lax.scan(step, S0.astype(jnp.float32),
+                        tuple(map(seq_first, (r, k, v, w))))
+    y = y.swapaxes(0, 1).reshape(B, S, D)  # (B,S,D)
+    # per-head group norm
+    yh = y.reshape(B, S, n_heads, head_dim)
+    mean = yh.mean(-1, keepdims=True)
+    var = yh.var(-1, keepdims=True)
+    yh = (yh - mean) * lax.rsqrt(var + 64e-5)
+    y = (yh.reshape(B, S, D) * p["ln_w"] + p["ln_b"]).astype(x.dtype)
+    y = (y * g).astype(x.dtype) @ p["wo"]
+    return y, S_out, x[:, -1:]
+
+
+def time_mix_chunked(x: jax.Array, x_prev: jax.Array, S0: jax.Array, p: dict,
+                     n_heads: int, head_dim: int, chunk: int = 128
+                     ) -> Tuple[jax.Array, jax.Array, jax.Array]:
+    """Chunked-parallel WKV (same math as kernels/rwkv_chunk.py, pure jnp).
+
+    Perf hillclimb for train/prefill: the exact token scan reads+writes the
+    (B,H,hd,hd) state every token; the chunked form touches it once per
+    ``chunk`` tokens and turns the inner work into MXU matmuls. Exact
+    (validated vs the scan in tests)."""
+    B, S, D = x.shape
+    if S % chunk or S <= chunk:
+        return time_mix(x, x_prev, S0, p, n_heads, head_dim)
+    xs = token_shift(x, x_prev)
+    xr = _mix(x, xs, p["mu_r"])
+    xk = _mix(x, xs, p["mu_k"])
+    xv = _mix(x, xs, p["mu_v"])
+    xw = _mix(x, xs, p["mu_w"])
+    xg = _mix(x, xs, p["mu_g"])
+    r = (xr @ p["wr"]).astype(jnp.float32)
+    k = (xk @ p["wk"]).astype(jnp.float32)
+    v = (xv @ p["wv"]).astype(jnp.float32)
+    g = jax.nn.silu(xg @ p["wg"])
+    wln = p["w0"] + jnp.tanh(xw.astype(jnp.float32) @ p["wa"]) @ p["wb"]
+    w = jnp.exp(-jnp.exp(wln.astype(jnp.float32)))
+
+    H, hd = n_heads, head_dim
+    nc = S // chunk
+    shp = (B, nc, chunk, H, hd)
+    # (B,nc,H,chunk,hd) chunk-major
+    rc, kc, vc, wc = (t.reshape(shp).transpose(0, 1, 3, 2, 4)
+                      for t in (r, k, v, w))
+    u = p["u"].reshape(H, hd).astype(jnp.float32)
+
+    logw = jnp.log(jnp.maximum(wc, 1e-38))
+    cum = jnp.cumsum(logw, axis=3)                  # (B,nc,H,C,hd)
+    P = jnp.exp(cum - logw)                         # prefix EXCLUSIVE
+    rP = rc * P
+    kD = kc * jnp.exp(-cum)
+    A = jnp.einsum("bnhtd,bnhsd->bnhts", rP, kD)    # (B,nc,H,C,C)
+    tri = jnp.tril(jnp.ones((chunk, chunk), bool), -1)
+    A = jnp.where(tri[None, None, None], A, 0.0)
+    diag = jnp.einsum("bnhtd,hd,bnhtd->bnht", rc, u, kc)
+    y_intra = jnp.einsum("bnhts,bnhsd->bnhtd", A, vc) + diag[..., None] * vc
+    total = cum[:, :, :, -1]                        # (B,nc,H,hd)
+    kT = kc * jnp.exp(total[:, :, :, None] - cum)
+    dS = jnp.einsum("bnhsd,bnhse->bnhde", kT, vc)   # per-chunk state delta
+    decay = jnp.exp(total)                          # (B,nc,H,hd)
+
+    def body(Sc, inp):
+        rPn, dSn, dn = inp                          # (B,H,C,hd),(B,H,hd,hd),(B,H,hd)
+        y_cross = jnp.einsum("bhtd,bhde->bhte", rPn, Sc)
+        Sc = dn[..., None] * Sc + dSn
+        return Sc, y_cross
+
+    sf = lambda t: t.swapaxes(0, 1)                 # chunk axis first
+    S_out, y_cross = jax.lax.scan(
+        body, S0.astype(jnp.float32),
+        (sf(rP), sf(dS), sf(decay)))
+    y = y_intra + y_cross.swapaxes(0, 1)            # (B,nc,H,C,hd)
+    y = y.transpose(0, 1, 3, 2, 4).reshape(B, S, D)
+    yh = y.reshape(B, S, H, hd)
+    mean = yh.mean(-1, keepdims=True)
+    var = yh.var(-1, keepdims=True)
+    yh = (yh - mean) * jax.lax.rsqrt(var + 64e-5)
+    y = (yh.reshape(B, S, D) * p["ln_w"] + p["ln_b"]).astype(x.dtype)
+    y = (y * g).astype(x.dtype) @ p["wo"]
+    return y, S_out, x[:, -1:]
+
+
+def channel_mix(x: jax.Array, x_prev: jax.Array, p: dict
+                ) -> Tuple[jax.Array, jax.Array]:
+    xs = token_shift(x, x_prev)
+    xk = _mix(x, xs, p["mu_ck"])
+    xr = _mix(x, xs, p["mu_cr"])
+    k = jnp.square(jax.nn.relu(xk @ p["ck"]))
+    r = jax.nn.sigmoid(xr @ p["cr"])
+    return r * (k @ p["cv"]), x[:, -1:]

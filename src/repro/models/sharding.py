@@ -1,0 +1,172 @@
+"""Sharding rules: PartitionSpec trees for params, optimizer state, batches
+and caches on the production mesh.
+
+Strategy (DESIGN.md §6):
+  * batch            → ('pod','data')   (pure DP over pods, DP within pod)
+  * TP / EP          → 'model'
+  * FSDP             → parameter d_model-ish dims sharded over 'data'
+                       (scan-over-layers all-gathers one layer per step)
+  * any dim that does not divide its mesh axis is replicated (documented
+    per-arch in DESIGN.md §Arch-applicability).
+
+Specs are derived *structurally*: we walk the abstract param tree and assign
+a spec from the leaf's path name + shape, so new params pick up rules by name.
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, Tuple
+
+import jax
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.configs.base import ModelConfig, ShapeConfig
+
+
+def _axis_size(mesh_axes: Dict[str, int], name) -> int:
+    if name is None:
+        return 1
+    if isinstance(name, tuple):
+        return int(np.prod([mesh_axes.get(n, 1) for n in name]))
+    return mesh_axes.get(name, 1)
+
+
+def _div(dim: int, mesh_axes: Dict[str, int], name):
+    """Return the axis name if dim divides that mesh axis size, else None."""
+    return name if (name is not None and dim % max(_axis_size(mesh_axes, name), 1) == 0
+                    and _axis_size(mesh_axes, name) > 1) else None
+
+
+def param_specs(cfg: ModelConfig, abstract_params, mesh_axes: Dict[str, int]):
+    """Spec tree mirroring the params pytree.
+
+    The model-parallel dimension may be a single axis ('model') or a factored
+    ('expert','tp') pair (Perf log #B2): EP over 'expert' for the expert dim,
+    TP over 'tp' inside each expert, and dense/attention dims over the full
+    product.
+    """
+    # FSDP spans every data-parallel axis: ('pod','data') on the multi-pod
+    # mesh halves per-device param+optimizer bytes vs 'data'-only (Perf #3).
+    data = ("pod", "data") if "pod" in mesh_axes else "data"
+    factored = "expert" in mesh_axes and "tp" in mesh_axes
+    model = ("expert", "tp") if factored else "model"
+    ep_axis = "expert" if factored else "model"
+    tp_axis = "tp" if factored else "model"
+
+    def rule(path, leaf) -> P:
+        names = [getattr(k, "key", getattr(k, "name", str(k))) for k in path]
+        name = names[-1]
+        shp = leaf.shape
+        stacked = names[0] == "layers"  # leading L axis
+        pre = (None,) if stacked else ()
+        s = shp[1:] if stacked else shp
+
+        if name in ("embed", "lm_head"):
+            V, D = shp
+            v = _div(V, mesh_axes, model)
+            if v:
+                return P(v, _div(D, mesh_axes, data))
+            return P(None, _div(D, mesh_axes, model))
+        if name in ("wq", "wk", "wv") and len(s) == 3:  # attn (D,H,hd)
+            return P(*pre, _div(s[0], mesh_axes, data), _div(s[1], mesh_axes, model), None)
+        if name == "wo" and len(s) == 3:  # (H,hd,D)
+            return P(*pre, _div(s[0], mesh_axes, model), None, _div(s[2], mesh_axes, data))
+        if name in ("w1", "w3") and len(s) == 3:  # moe (E,D,F)
+            e = _div(s[0], mesh_axes, ep_axis)
+            if e and factored:  # EP x TP hybrid
+                return P(*pre, e, _div(s[1], mesh_axes, data),
+                         _div(s[2], mesh_axes, tp_axis))
+            if e:
+                return P(*pre, e, _div(s[1], mesh_axes, data), None)
+            return P(*pre, None, _div(s[1], mesh_axes, data), _div(s[2], mesh_axes, tp_axis))
+        if name == "w2" and len(s) == 3:  # moe (E,F,D)
+            e = _div(s[0], mesh_axes, ep_axis)
+            if e and factored:
+                return P(*pre, e, _div(s[1], mesh_axes, tp_axis),
+                         _div(s[2], mesh_axes, data))
+            if e:
+                return P(*pre, e, None, _div(s[2], mesh_axes, data))
+            return P(*pre, None, _div(s[1], mesh_axes, tp_axis), _div(s[2], mesh_axes, data))
+        if name in ("w1", "w3", "sw1", "sw3", "ck", "w_in"):  # (D,F)
+            return P(*pre, _div(s[0], mesh_axes, data), _div(s[1], mesh_axes, model))
+        if name in ("w2", "sw2", "cv", "w_out"):  # (F,D)
+            return P(*pre, _div(s[0], mesh_axes, model), _div(s[1], mesh_axes, data))
+        if name in ("wr", "wk", "wv", "wg", "cr"):  # rwkv (D,D)
+            # time-mix projections: keep the OUTPUT dim unsharded — the head
+            # reshape (40 heads % 16 != 0) would force a reshard all-gather
+            # per layer otherwise (Perf log #2); FSDP on the input dim only.
+            return P(*pre, _div(s[0], mesh_axes, data), None)
+        if name == "router":  # (D,E)
+            return P(*pre, _div(s[0], mesh_axes, data), None)
+        if name in ("wa",):  # (D,lora)
+            return P(*pre, _div(s[0], mesh_axes, data), None)
+        if name in ("wb",):  # (lora,D)
+            return P(*pre, None, _div(s[1], mesh_axes, model))
+        if name in ("conv_k",):  # (K,Di)
+            return P(*pre, None, _div(s[1], mesh_axes, model))
+        if name in ("w_dt", "w_b", "w_c"):  # (Di, small)
+            return P(*pre, _div(s[0], mesh_axes, model), None)
+        # vectors / norms / scalars: replicate
+        return P(*([None] * len(shp)))
+
+    return jax.tree_util.tree_map_with_path(rule, abstract_params)
+
+
+def batch_axes(mesh_axes: Dict[str, int], batch_size: int):
+    dp = ("pod", "data") if "pod" in mesh_axes else ("data",)
+    if batch_size % _axis_size(mesh_axes, dp) == 0 and batch_size > 1:
+        return dp
+    if batch_size % mesh_axes.get("data", 1) == 0 and batch_size > 1:
+        return ("data",)
+    return None
+
+
+def batch_specs(cfg: ModelConfig, abstract_batch, mesh_axes: Dict[str, int],
+                microbatched: bool):
+    def rule(path, leaf):
+        b_dim = 1 if microbatched else 0
+        if leaf.ndim <= b_dim:
+            return P()
+        dp = batch_axes(mesh_axes, leaf.shape[b_dim])
+        spec = [None] * leaf.ndim
+        spec[b_dim] = dp
+        return P(*spec)
+
+    return jax.tree_util.tree_map_with_path(rule, abstract_batch)
+
+
+def cache_specs(cfg: ModelConfig, abstract_cache, mesh_axes: Dict[str, int]):
+    def rule(path, leaf):
+        names = [getattr(k, "key", getattr(k, "name", str(k))) for k in path]
+        name = names[-1]
+        if leaf.ndim <= 1:
+            return P(*([None] * leaf.ndim))
+        # all cache tensors are (L, B, ...)
+        dp = batch_axes(mesh_axes, leaf.shape[1])
+        spec = [None, dp] + [None] * (leaf.ndim - 2)
+        if name in ("k", "v") and leaf.ndim == 5:
+            spec[3] = _div(leaf.shape[3], mesh_axes, "model")  # Hkv
+        if name == "conv" and leaf.ndim == 4:
+            spec[3] = _div(leaf.shape[3], mesh_axes, "model")  # Di channels
+        return P(*spec)
+
+    return jax.tree_util.tree_map_with_path(rule, abstract_cache)
+
+
+def state_specs(cfg: ModelConfig, abstract_state, mesh_axes: Dict[str, int]):
+    """Specs for the full TrainState (params + adam moments + step [+ ef])."""
+    pspecs = param_specs(cfg, abstract_state["params"], mesh_axes)
+    out: Dict[str, Any] = {"params": pspecs, "step": P()}
+    out["opt"] = type(abstract_state["opt"])(m=pspecs, v=pspecs, count=P())
+    if "ef" in abstract_state:
+        out["ef"] = pspecs
+    return out
+
+
+def to_shardings(mesh: Mesh, specs):
+    return jax.tree.map(lambda s: NamedSharding(mesh, s), specs,
+                        is_leaf=lambda x: isinstance(x, P))
+
+
+def mesh_axis_sizes(mesh: Mesh) -> Dict[str, int]:
+    return dict(zip(mesh.axis_names, mesh.devices.shape))

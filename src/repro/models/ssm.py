@@ -1,0 +1,73 @@
+"""Mamba-style selective SSM head (used by the hymba hybrid arch).
+
+Mamba2-flavoured: per-head scalar decay A, data-dependent dt/B/C, depthwise
+conv front-end. Reference scan is exact; used both for train (scan over seq)
+and decode (single-step state update).
+"""
+from __future__ import annotations
+
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+
+def ssm_scan(xh: jax.Array, dt: jax.Array, B_: jax.Array, C_: jax.Array,
+             A: jax.Array, h0: jax.Array) -> Tuple[jax.Array, jax.Array]:
+    """Selective scan.
+    xh (B,S,H,hd), dt (B,S,H), B_/C_ (B,S,N), A (H,) negative, h0 (B,H,hd,N).
+    Returns y (B,S,H,hd), h_out."""
+
+    def step(h, inp):
+        xt, dtt, bt, ct = inp  # (B,H,hd),(B,H),(B,N),(B,N)
+        decay = jnp.exp(dtt * A[None])  # (B,H)
+        dBx = dtt[..., None, None] * xt[..., None] * bt[:, None, None, :]
+        h = h * decay[..., None, None] + dBx  # (B,H,hd,N)
+        y = jnp.einsum("bhdn,bn->bhd", h, ct)
+        return h, y
+
+    sf = lambda t: t.swapaxes(0, 1)
+    h_out, y = lax.scan(step, h0.astype(jnp.float32),
+                        (sf(xh.astype(jnp.float32)), sf(dt.astype(jnp.float32)),
+                         sf(B_.astype(jnp.float32)), sf(C_.astype(jnp.float32))))
+    return y.swapaxes(0, 1), h_out
+
+
+def depthwise_conv(x: jax.Array, kernel: jax.Array, carry: jax.Array
+                   ) -> Tuple[jax.Array, jax.Array]:
+    """Causal depthwise conv. x (B,S,Di), kernel (K,Di), carry (B,K-1,Di)."""
+    K = kernel.shape[0]
+    xp = jnp.concatenate([carry, x], axis=1)  # (B, S+K-1, Di)
+    out = sum(xp[:, i:i + x.shape[1]] * kernel[i] for i in range(K))
+    return out, xp[:, -(K - 1):]
+
+
+def mamba_head(x: jax.Array, p: dict, state: dict, head_dim: int, n_state: int
+               ) -> Tuple[jax.Array, dict]:
+    """x (B,S,D) -> (y (B,S,D), new_state).
+    state: {'h': (B,H,hd,N), 'conv': (B,K-1,Di)}."""
+    B, S, D = x.shape
+    xz = x @ p["w_in"]  # (B,S,2*Di)
+    Di = xz.shape[-1] // 2
+    xi, z = jnp.split(xz, 2, axis=-1)
+    xi, conv_carry = depthwise_conv(xi, p["conv_k"], state["conv"])
+    xi = jax.nn.silu(xi)
+    H = Di // head_dim
+    dt = jax.nn.softplus(xi.astype(jnp.float32) @ p["w_dt"] + p["dt_bias"])  # (B,S,H)
+    B_ = xi @ p["w_b"]  # (B,S,N)
+    C_ = xi @ p["w_c"]
+    A = -jnp.exp(p["a_log"].astype(jnp.float32))  # (H,)
+    xh = xi.reshape(B, S, H, head_dim)
+    y, h_out = ssm_scan(xh, dt, B_, C_, A, state["h"])
+    y = y + xh.astype(jnp.float32) * p["d_skip"][None, None, :, None]
+    y = y.reshape(B, S, Di).astype(x.dtype) * jax.nn.silu(z)
+    return y @ p["w_out"], {"h": h_out, "conv": conv_carry}
+
+
+def init_mamba_state(batch: int, d_inner: int, head_dim: int, n_state: int,
+                     conv_width: int, dtype=jnp.float32) -> dict:
+    return {
+        "h": jnp.zeros((batch, d_inner // head_dim, head_dim, n_state), jnp.float32),
+        "conv": jnp.zeros((batch, conv_width - 1, d_inner), dtype),
+    }

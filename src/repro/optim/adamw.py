@@ -1,0 +1,59 @@
+"""AdamW + cosine schedule + global-norm clipping, as pure pytree functions.
+
+Optimizer moments live in the same sharding as their parameters (spec trees
+are mapped 1:1), so FSDP sharding covers optimizer state for free.
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, NamedTuple, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import TrainConfig
+
+
+class OptState(NamedTuple):
+    m: Any
+    v: Any
+    count: jax.Array
+
+
+def init(params) -> OptState:
+    zeros = lambda p: jnp.zeros_like(p, dtype=jnp.float32)
+    return OptState(m=jax.tree.map(zeros, params),
+                    v=jax.tree.map(zeros, params),
+                    count=jnp.zeros((), jnp.int32))
+
+
+def cosine_lr(tc: TrainConfig, step: jax.Array) -> jax.Array:
+    warm = jnp.minimum(step / jnp.maximum(tc.warmup_steps, 1), 1.0)
+    prog = jnp.clip((step - tc.warmup_steps)
+                    / jnp.maximum(tc.total_steps - tc.warmup_steps, 1), 0.0, 1.0)
+    return tc.lr * warm * 0.5 * (1.0 + jnp.cos(jnp.pi * prog))
+
+
+def global_norm(tree) -> jax.Array:
+    return jnp.sqrt(sum(jnp.sum(jnp.square(x.astype(jnp.float32)))
+                        for x in jax.tree.leaves(tree)))
+
+
+def update(grads, opt: OptState, params, tc: TrainConfig
+           ) -> Tuple[Any, OptState, Dict[str, jax.Array]]:
+    gnorm = global_norm(grads)
+    scale = jnp.minimum(1.0, tc.grad_clip / jnp.maximum(gnorm, 1e-9))
+    grads = jax.tree.map(lambda g: g.astype(jnp.float32) * scale, grads)
+    count = opt.count + 1
+    lr = cosine_lr(tc, count)
+    b1, b2 = tc.beta1, tc.beta2
+    m = jax.tree.map(lambda mu, g: b1 * mu + (1 - b1) * g, opt.m, grads)
+    v = jax.tree.map(lambda nu, g: b2 * nu + (1 - b2) * g * g, opt.v, grads)
+    mh = jax.tree.map(lambda mu: mu / (1 - b1 ** count), m)
+    vh = jax.tree.map(lambda nu: nu / (1 - b2 ** count), v)
+
+    def upd(p, mu, nu):
+        step = lr * (mu / (jnp.sqrt(nu) + 1e-8) + tc.weight_decay * p.astype(jnp.float32))
+        return (p.astype(jnp.float32) - step).astype(p.dtype)
+
+    new_params = jax.tree.map(upd, params, mh, vh)
+    return new_params, OptState(m, v, count), {"grad_norm": gnorm, "lr": lr}

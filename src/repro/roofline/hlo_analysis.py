@@ -1,0 +1,247 @@
+"""Trip-count-aware cost analysis of optimized (post-SPMD) HLO text.
+
+XLA's ``compiled.cost_analysis()`` counts ``while`` bodies ONCE, so a
+126-layer scan under-reports FLOPs by 126x. XLA:CPU however annotates every
+while with ``backend_config={"known_trip_count":{"n":...}}``. We parse the
+module into computations, propagate loop multipliers (ENTRY=1, while body
+multiplier = parent multiplier x trip count, nested loops compose), and then
+account per top-level op:
+
+  * dot FLOPs        : 2 x |output| x |contracting dims|  (x multiplier)
+  * HBM bytes        : output bytes + operand bytes of top-level ops
+                       (fusion bodies are internal; not traversed)
+  * collective bytes : result bytes of all-gather / all-reduce /
+                       reduce-scatter / all-to-all / collective-permute
+
+This gives per-device totals (the module is the per-device SPMD program).
+"""
+from __future__ import annotations
+
+import json
+import re
+from dataclasses import dataclass, field
+from typing import Dict, List, Tuple
+
+_DTYPE_BYTES = {"f64": 8, "f32": 4, "bf16": 2, "f16": 2, "f8e4m3fn": 1,
+                "f8e5m2": 1, "s64": 8, "u64": 8, "s32": 4, "u32": 4,
+                "s16": 2, "u16": 2, "s8": 1, "u8": 1, "pred": 1,
+                "c64": 8, "c128": 16, "s4": 1, "u4": 1}
+
+_COMP_HDR = re.compile(r"^(ENTRY )?%?([\w\.\-]+)\s*(?:\([^)]*\))?\s*->.*\{\s*$")
+_OP_LINE = re.compile(r"^\s*(?:ROOT\s+)?%?([\w\.\-]+)\s*=\s*(.*)$")
+_SHAPE_TOK = re.compile(r"([a-z][a-z0-9]*)\[([0-9,]*)\]")
+_OPCODE = re.compile(r"^(?:\(|[a-z0-9\[\],\s\{\}/\*]*?)\s*([a-z][a-z0-9\-]*)\(")
+_TRIP = re.compile(r'"known_trip_count":\{"n":"(\d+)"\}')
+_BODY = re.compile(r"body=%?([\w\.\-]+)")
+_COND = re.compile(r"condition=%?([\w\.\-]+)")
+_CALLS = re.compile(r"calls=%?([\w\.\-]+)")
+_OPERAND = re.compile(r"%([\w\.\-]+)")
+
+COLLECTIVES = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+               "collective-permute")
+
+
+def _shape_bytes(type_str: str) -> int:
+    total = 0
+    for dt, dims in _SHAPE_TOK.findall(type_str):
+        if dt not in _DTYPE_BYTES:
+            continue
+        n = 1
+        for d in dims.split(","):
+            if d:
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+def _shape_dims(type_str: str) -> List[List[int]]:
+    out = []
+    for dt, dims in _SHAPE_TOK.findall(type_str):
+        if dt in _DTYPE_BYTES:
+            out.append([int(d) for d in dims.split(",") if d])
+    return out
+
+
+@dataclass
+class Op:
+    name: str
+    rhs: str  # everything after '='
+    opcode: str
+    result_bytes: int
+
+
+@dataclass
+class Computation:
+    name: str
+    ops: List[Op] = field(default_factory=list)
+    shapes: Dict[str, str] = field(default_factory=dict)  # var -> type str
+    is_entry: bool = False
+
+
+def parse_module(txt: str) -> Dict[str, Computation]:
+    comps: Dict[str, Computation] = {}
+    cur = None
+    hdr_re = re.compile(r"^(ENTRY\s+)?%?([\w\.\-]+)\s*\(.*\{\s*$")
+    for line in txt.splitlines():
+        if cur is None:
+            s = line.strip()
+            if s.startswith("HloModule"):
+                continue
+            m = hdr_re.match(s) if s.endswith("{") else None
+            if m and (s.startswith(("ENTRY", "%")) or "->" in s):
+                cur = Computation(name=m.group(2), is_entry=bool(m.group(1)))
+            continue
+        s = line.strip()
+        if s == "}" or s.startswith("}"):
+            comps[cur.name] = cur
+            cur = None
+            continue
+        m = _OP_LINE.match(s)
+        if not m:
+            continue
+        var, rhs = m.group(1), m.group(2)
+        type_prefix, opcode = _split_type_op(rhs)
+        cur.shapes[var] = type_prefix
+        cur.ops.append(Op(var, rhs, opcode, _shape_bytes(type_prefix)))
+    return comps
+
+
+def _split_type_op(rhs: str) -> Tuple[str, str]:
+    """Split '<result type> <opcode>(...)' — result type may be a tuple."""
+    if rhs.startswith("("):
+        depth = 0
+        end = 0
+        for i, ch in enumerate(rhs):
+            if ch == "(":
+                depth += 1
+            elif ch == ")":
+                depth -= 1
+                if depth == 0:
+                    end = i + 1
+                    break
+        type_prefix, rest = rhs[:end], rhs[end:].strip()
+    else:
+        sp = rhs.find(" ")
+        if sp < 0:
+            return rhs, ""
+        type_prefix, rest = rhs[:sp], rhs[sp + 1:].strip()
+    m = re.match(r"([a-z][a-z0-9\-]*)\(", rest)
+    return type_prefix, (m.group(1) if m else "")
+
+
+def _multipliers(comps: Dict[str, Computation]) -> Dict[str, float]:
+    mult: Dict[str, float] = {}
+    entry = next((c.name for c in comps.values() if c.is_entry), None)
+    if entry is None:
+        return {name: 1.0 for name in comps}
+    mult[entry] = 1.0
+    # iterate to fixpoint (nesting depth is small)
+    for _ in range(16):
+        changed = False
+        for comp in comps.values():
+            if comp.name not in mult:
+                continue
+            base = mult[comp.name]
+            for op in comp.ops:
+                if op.opcode == "while":
+                    trip = _TRIP.search(op.rhs)
+                    n = int(trip.group(1)) if trip else 1
+                    for pat, scale in ((_BODY, n), (_COND, n + 1)):
+                        t = pat.search(op.rhs)
+                        if t:
+                            tgt = t.group(1)
+                            val = base * scale
+                            if mult.get(tgt, 0) < val:
+                                mult[tgt] = val
+                                changed = True
+                elif op.opcode in ("conditional", "call", "async-start"):
+                    for t in _CALLS.finditer(op.rhs):
+                        tgt = t.group(1)
+                        if mult.get(tgt, 0) < base:
+                            mult[tgt] = base
+                            changed = True
+        if not changed:
+            break
+    return mult
+
+
+def _dot_flops(op: Op, shapes: Dict[str, str]) -> int:
+    out_dims = _shape_dims(op.rhs[:op.rhs.find("dot(")])
+    out_elems = 1
+    for d in (out_dims[0] if out_dims else []):
+        out_elems *= d
+    # operands: first two %vars inside dot(...)
+    inner = op.rhs[op.rhs.find("dot(") + 4:]
+    ops_names = _OPERAND.findall(inner[:inner.find(")")])
+    lhs_contract = re.search(r"lhs_contracting_dims=\{([0-9,]*)\}", op.rhs)
+    contract_elems = 1
+    if ops_names and lhs_contract and ops_names[0] in shapes:
+        lhs_dims = _shape_dims(shapes[ops_names[0]])
+        if lhs_dims:
+            for idx in lhs_contract.group(1).split(","):
+                if idx and int(idx) < len(lhs_dims[0]):
+                    contract_elems *= lhs_dims[0][int(idx)]
+    return 2 * out_elems * contract_elems
+
+
+def analyze(txt: str) -> Dict[str, float]:
+    comps = parse_module(txt)
+    mult = _multipliers(comps)
+    flops = 0.0
+    hbm_bytes = 0.0
+    coll: Dict[str, float] = {c: 0.0 for c in COLLECTIVES}
+    fusion_bodies = set()
+    for comp in comps.values():
+        for op in comp.ops:
+            if op.opcode == "fusion":
+                m = _CALLS.search(op.rhs)
+                if m:
+                    fusion_bodies.add(m.group(1))
+    for comp in comps.values():
+        m = mult.get(comp.name, 0.0)
+        if m == 0.0 or comp.name in fusion_bodies:
+            continue
+        for op in comp.ops:
+            if op.opcode == "dot":
+                flops += m * _dot_flops(op, comp.shapes)
+            base_op = op.opcode.replace("-start", "").replace("-done", "")
+            if base_op in COLLECTIVES and not op.opcode.endswith("-done"):
+                coll[base_op] += m * op.result_bytes
+            # HBM traffic: top-level op outputs (operand reads roughly mirror
+            # producer outputs; counting outputs once avoids double-counting)
+            if op.opcode == "dynamic-update-slice":
+                # XLA updates in place inside while loops: real traffic is the
+                # update slice (operand 1), not the whole buffer.
+                ops_names = _OPERAND.findall(op.rhs.split("(", 1)[1])
+                upd = ops_names[1] if len(ops_names) > 1 else None
+                hbm_bytes += m * _shape_bytes(comp.shapes.get(upd, ""))
+            elif op.opcode in ("fusion", "dot", "copy", "dynamic-slice",
+                               "gather", "scatter",
+                               "transpose", "reshape", "broadcast", "reduce",
+                               "convert", "sort", "iota", "concatenate",
+                               "slice", "pad", "select-and-scatter") or \
+                    base_op in COLLECTIVES:
+                hbm_bytes += m * op.result_bytes
+    coll_total = sum(coll.values())
+    return {"flops": flops, "hbm_bytes": hbm_bytes,
+            "collective_bytes": coll_total,
+            **{f"coll_{k}": v for k, v in coll.items()}}
+
+
+# TPU v5e hardware constants (per chip)
+PEAK_FLOPS = 197e12        # bf16
+HBM_BW = 819e9             # bytes/s
+ICI_BW = 50e9              # bytes/s/link
+
+
+def roofline_terms(analysis: Dict[str, float]) -> Dict[str, float]:
+    t_compute = analysis["flops"] / PEAK_FLOPS
+    t_memory = analysis["hbm_bytes"] / HBM_BW
+    t_coll = analysis["collective_bytes"] / ICI_BW
+    terms = {"t_compute_s": t_compute, "t_memory_s": t_memory,
+             "t_collective_s": t_coll}
+    dom = max(terms, key=terms.get)
+    bound = max(t_compute, t_memory, t_coll)
+    terms["dominant"] = dom
+    terms["roofline_fraction"] = t_compute / bound if bound > 0 else 0.0
+    return terms

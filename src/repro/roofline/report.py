@@ -1,0 +1,122 @@
+"""Roofline report: aggregate dry-run JSONs into the EXPERIMENTS.md table.
+
+Per (arch x shape x mesh) cell:
+  compute/memory/collective terms (seconds, per device, trip-count-aware),
+  dominant term, MODEL_FLOPS = 6*N_active*D (train) / 2*N_active*D (prefill)
+  / 2*N_active*B (decode), useful-compute ratio, and an automatic
+  what-would-move-it note.
+
+  PYTHONPATH=src python -m repro.roofline.report [--mesh sp|mp] [--csv]
+"""
+from __future__ import annotations
+
+import argparse
+import json
+from pathlib import Path
+from typing import Dict, List, Optional
+
+from repro.configs import get_config, shapes_for
+from repro.roofline.hlo_analysis import HBM_BW, ICI_BW, PEAK_FLOPS
+
+DRYRUN = Path(__file__).resolve().parents[3] / "experiments" / "dryrun"
+
+
+def model_flops_per_device(arch: str, shape_name: str, n_devices: int) -> float:
+    cfg = get_config(arch)
+    shape = {s.name: s for s in shapes_for(cfg)}[shape_name]
+    N = cfg.n_active_params
+    if shape.kind == "train":
+        tok = shape.global_batch * shape.seq_len
+        total = 6.0 * N * tok
+    elif shape.kind == "prefill":
+        tok = shape.global_batch * shape.seq_len
+        total = 2.0 * N * tok
+    else:  # decode: one token per sequence
+        total = 2.0 * N * shape.global_batch
+    return total / n_devices
+
+
+def load_cell(arch: str, shape: str, mesh: str, tag: str = "") -> Optional[Dict]:
+    name = f"{arch}_{shape}_{mesh}" + (f"_{tag}" if tag else "")
+    f = DRYRUN / f"{name}.json"
+    if not f.exists():
+        return None
+    return json.loads(f.read_text())
+
+
+def advice(dom: str, row: Dict) -> str:
+    if dom == "t_collective_s":
+        return "overlap/compress collectives; move TP reduce to rs+ag; shard seq"
+    if dom == "t_memory_s":
+        if row.get("useful_ratio", 1) < 0.5:
+            return "cut remat recompute + causal-block attention (skip masked tiles)"
+        return "raise arithmetic intensity: fuse ops, bf16 activations, larger tiles"
+    return "compute-bound: good; next win is MXU-aligned tiling"
+
+
+def build_rows(mesh: str = "sp", tag: str = "") -> List[Dict]:
+    rows = []
+    from repro.configs import ARCH_IDS
+    for arch in ARCH_IDS:
+        cfg = get_config(arch)
+        for s in shapes_for(cfg):
+            rec = load_cell(arch, s.name, mesh, tag)
+            if rec is None:
+                continue
+            ta = rec["tripaware"]
+            n_dev = rec["n_devices"]
+            t_c = ta["flops"] / PEAK_FLOPS
+            t_m = ta["hbm_bytes"] / HBM_BW
+            t_x = ta["collective_bytes"] / ICI_BW
+            bound = max(t_c, t_m, t_x)
+            dom = {t_c: "t_compute_s", t_m: "t_memory_s",
+                   t_x: "t_collective_s"}[bound]
+            mf = model_flops_per_device(arch, s.name, n_dev)
+            row = {
+                "arch": arch, "shape": s.name, "mesh": mesh,
+                "t_compute_s": t_c, "t_memory_s": t_m, "t_collective_s": t_x,
+                "dominant": dom,
+                "roofline_fraction": t_c / bound if bound else 0.0,
+                "model_flops_dev": mf,
+                "hlo_flops_dev": ta["flops"],
+                "useful_ratio": mf / ta["flops"] if ta["flops"] else 0.0,
+                "hbm_gb_dev": rec["memory"].get("temp_size_in_bytes", 0) / 1e9,
+            }
+            row["advice"] = advice(dom, row)
+            rows.append(row)
+    return rows
+
+
+def to_markdown(rows: List[Dict]) -> str:
+    hdr = ("| arch | shape | compute s | memory s | collective s | dominant | "
+           "roofline frac | useful FLOP ratio | temp GB/dev | next move |")
+    sep = "|" + "---|" * 10
+    lines = [hdr, sep]
+    for r in rows:
+        lines.append(
+            f"| {r['arch']} | {r['shape']} | {r['t_compute_s']:.3f} | "
+            f"{r['t_memory_s']:.3f} | {r['t_collective_s']:.3f} | "
+            f"{r['dominant'].replace('t_', '').replace('_s', '')} | "
+            f"{r['roofline_fraction']:.2f} | {r['useful_ratio']:.2f} | "
+            f"{r['hbm_gb_dev']:.1f} | {r['advice']} |")
+    return "\n".join(lines)
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--mesh", default="sp", choices=("sp", "mp"))
+    ap.add_argument("--tag", default="")
+    ap.add_argument("--csv", action="store_true")
+    args = ap.parse_args()
+    rows = build_rows(args.mesh, args.tag)
+    if args.csv:
+        keys = list(rows[0].keys())
+        print(",".join(keys))
+        for r in rows:
+            print(",".join(str(r[k]) for k in keys))
+    else:
+        print(to_markdown(rows))
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,84 @@
+"""Sharded checkpointing with atomic rename + fault-tolerant resume.
+
+Layout: <dir>/step_<N>/shard_<host>.npz + MANIFEST.json (written last —
+a checkpoint without a manifest is incomplete and ignored on restore).
+Flat dotted-path keys keep the npz schema stable across pytree refactors.
+"""
+from __future__ import annotations
+
+import json
+import os
+import shutil
+import tempfile
+from pathlib import Path
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import numpy as np
+
+
+def _flatten(tree) -> Dict[str, np.ndarray]:
+    out = {}
+    for path, leaf in jax.tree_util.tree_flatten_with_path(tree)[0]:
+        key = "/".join(str(getattr(p, "key", getattr(p, "idx", getattr(p, "name", p))))
+                       for p in path)
+        arr = np.asarray(leaf)
+        if arr.dtype.name == "bfloat16":  # npz has no bf16: store as f32 (lossless)
+            arr = arr.astype(np.float32)
+        out[key] = arr
+    return out
+
+
+def save(state, ckpt_dir: str, step: int, host_id: int = 0,
+         keep: int = 3) -> str:
+    d = Path(ckpt_dir) / f"step_{step:08d}"
+    d.mkdir(parents=True, exist_ok=True)
+    flat = _flatten(state)
+    tmp = tempfile.NamedTemporaryFile(dir=d, delete=False, suffix=".tmp")
+    np.savez(tmp, **flat)
+    tmp.close()
+    os.replace(tmp.name, d / f"shard_{host_id:05d}.npz")
+    # manifest written LAST = commit point
+    manifest = {"step": step, "n_leaves": len(flat), "host": host_id}
+    mtmp = d / f".manifest_{host_id}.tmp"
+    mtmp.write_text(json.dumps(manifest))
+    os.replace(mtmp, d / "MANIFEST.json")
+    _gc(ckpt_dir, keep)
+    return str(d)
+
+
+def _gc(ckpt_dir: str, keep: int) -> None:
+    steps = sorted(Path(ckpt_dir).glob("step_*"))
+    for old in steps[:-keep]:
+        shutil.rmtree(old, ignore_errors=True)
+
+
+def latest_step(ckpt_dir: str) -> Optional[int]:
+    best = None
+    for d in sorted(Path(ckpt_dir).glob("step_*")):
+        if (d / "MANIFEST.json").exists():  # complete checkpoints only
+            best = int(d.name.split("_")[1])
+    return best
+
+
+def restore(state_template, ckpt_dir: str, step: Optional[int] = None,
+            host_id: int = 0) -> Tuple[Any, int]:
+    """Restore into the structure of ``state_template``. Returns (state, step).
+    Raises FileNotFoundError if no complete checkpoint exists."""
+    if step is None:
+        step = latest_step(ckpt_dir)
+        if step is None:
+            raise FileNotFoundError(f"no complete checkpoint under {ckpt_dir}")
+    d = Path(ckpt_dir) / f"step_{step:08d}"
+    with np.load(d / f"shard_{host_id:05d}.npz") as z:
+        flat = {k: z[k] for k in z.files}
+    leaves_t, treedef = jax.tree_util.tree_flatten_with_path(state_template)
+    new_leaves = []
+    for path, leaf in leaves_t:
+        key = "/".join(str(getattr(p, "key", getattr(p, "idx", getattr(p, "name", p))))
+                       for p in path)
+        arr = flat[key]
+        assert arr.shape == leaf.shape, (key, arr.shape, leaf.shape)
+        new_leaves.append(jax.numpy.asarray(arr, dtype=leaf.dtype))
+    return (jax.tree_util.tree_unflatten(
+        jax.tree_util.tree_structure(state_template), new_leaves), step)

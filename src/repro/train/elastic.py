@@ -1,0 +1,60 @@
+"""Elastic scaling + straggler mitigation policies.
+
+On a real cluster these hooks are driven by the job controller's health
+signals; here they are deterministic pure functions so the behavior is unit
+testable and the dry-run can exercise every re-mesh transition.
+
+ * pod loss      -> degrade (2,16,16) -> (16,16); batch respecified over the
+                    surviving DP axes, params resharded (specs re-derived on
+                    the new mesh — same rule set, so only axis sizes change).
+ * straggler     -> per-step deadline policy: steps whose measured duration
+                    exceeds ``k`` x trailing-median are flagged; after
+                    ``patience`` consecutive flags the launcher re-meshes
+                    (drop the slow pod) instead of waiting forever.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import List, Optional
+
+
+@dataclass
+class StragglerDetector:
+    k: float = 2.0
+    patience: int = 3
+    window: int = 32
+    _hist: List[float] = field(default_factory=list)
+    _strikes: int = 0
+
+    def observe(self, step_seconds: float) -> str:
+        """Returns 'ok' | 'slow' | 'remesh'."""
+        hist = self._hist
+        hist.append(step_seconds)
+        if len(hist) > self.window:
+            hist.pop(0)
+        if len(hist) < 8:
+            return "ok"
+        med = sorted(hist)[len(hist) // 2]
+        if step_seconds > self.k * med:
+            self._strikes += 1
+            return "remesh" if self._strikes >= self.patience else "slow"
+        self._strikes = 0
+        return "ok"
+
+
+def plan_remesh(n_pods_alive: int, multi_pod: bool):
+    """Decide the mesh for the surviving fleet. Returns kwargs for
+    repro.launch.mesh.make_production_mesh / make_mesh."""
+    if not multi_pod or n_pods_alive >= 2:
+        return {"multi_pod": multi_pod}
+    return {"multi_pod": False}  # collapse to single-pod mesh
+
+
+def rescale_batch(global_batch: int, n_pods_alive: int, n_pods_total: int = 2,
+                  keep_global: bool = True) -> int:
+    """Elastic batch policy: keep the global batch (per-device work grows) or
+    scale it with the surviving fleet (keep step time, change optimizer
+    schedule accordingly)."""
+    if keep_global:
+        return global_batch
+    return max(global_batch * n_pods_alive // n_pods_total, 1)

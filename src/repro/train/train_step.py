@@ -1,0 +1,99 @@
+"""Train / serve step builders.
+
+``make_train_step`` returns a pure ``(state, batch) -> (state, metrics)``:
+  * microbatch gradient accumulation via ``lax.scan`` over a leading
+    microbatch axis (batch arrives as (M, B/M, ...)),
+  * optional gradient compression before the cross-replica reduce
+    ('bf16' cast or 'int8_ef' error-feedback quantization),
+  * AdamW update.
+
+State is a plain dict so spec trees mirror it trivially.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from repro.configs.base import ModelConfig, TrainConfig
+from repro.models.model import decode_step, loss_fn, prefill
+from repro.optim import adamw
+
+TrainState = Dict[str, Any]
+
+
+def init_state(cfg: ModelConfig, tc: TrainConfig, key: jax.Array) -> TrainState:
+    from repro.models.model import init_params
+    params = init_params(cfg, key)
+    state: TrainState = {"params": params, "opt": adamw.init(params),
+                         "step": jnp.zeros((), jnp.int32)}
+    if tc.grad_compression == "int8_ef":
+        state["ef"] = jax.tree.map(lambda p: jnp.zeros_like(p, jnp.float32), params)
+    return state
+
+
+def _compress_bf16(g):
+    return jax.tree.map(lambda x: x.astype(jnp.bfloat16).astype(jnp.float32), g)
+
+
+def _compress_int8_ef(g, ef):
+    """Error-feedback int8: quantize (g + ef) per-tensor, carry residual."""
+    def q(x, e):
+        x = x.astype(jnp.float32) + e
+        scale = jnp.maximum(jnp.max(jnp.abs(x)), 1e-12) / 127.0
+        qx = jnp.round(x / scale).astype(jnp.int8)
+        deq = qx.astype(jnp.float32) * scale
+        return deq, x - deq
+    flat, tree = jax.tree.flatten(g)
+    eflat = jax.tree.leaves(ef)
+    out = [q(x, e) for x, e in zip(flat, eflat)]
+    return (jax.tree.unflatten(tree, [o[0] for o in out]),
+            jax.tree.unflatten(tree, [o[1] for o in out]))
+
+
+def make_train_step(cfg: ModelConfig, tc: TrainConfig):
+    def train_step(state: TrainState, batch: Dict[str, jax.Array]
+                   ) -> Tuple[TrainState, Dict[str, jax.Array]]:
+        params = state["params"]
+
+        def one_mb(carry, mb):
+            gsum, lsum = carry
+            (loss, _metrics), grads = jax.value_and_grad(
+                lambda p: loss_fn(p, cfg, mb), has_aux=True)(params)
+            gsum = jax.tree.map(lambda a, g: a + g.astype(jnp.float32), gsum, grads)
+            return (gsum, lsum + loss), None
+
+        zeros = jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params)
+        (gsum, lsum), _ = lax.scan(one_mb, (zeros, jnp.float32(0.0)), batch)
+        n_mb = jax.tree.leaves(batch)[0].shape[0]
+        grads = jax.tree.map(lambda g: g / n_mb, gsum)
+        loss = lsum / n_mb
+
+        new_state = dict(state)
+        if tc.grad_compression == "bf16":
+            grads = _compress_bf16(grads)
+        elif tc.grad_compression == "int8_ef":
+            grads, ef = _compress_int8_ef(grads, state["ef"])
+            new_state["ef"] = ef
+
+        new_params, new_opt, om = adamw.update(grads, state["opt"], params, tc)
+        new_state.update(params=new_params, opt=new_opt, step=state["step"] + 1)
+        metrics = {"loss": loss, **om}
+        return new_state, metrics
+
+    return train_step
+
+
+def make_prefill_step(cfg: ModelConfig):
+    def prefill_step(params, batch):
+        return prefill(params, cfg, batch)
+    return prefill_step
+
+
+def make_decode_step(cfg: ModelConfig):
+    def serve_step(params, cache, tokens):
+        return decode_step(params, cfg, cache, tokens)
+    return serve_step

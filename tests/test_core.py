@@ -1,0 +1,133 @@
+"""Unit tests for the DVFS core: power model, estimators, predictors,
+controller, metric math."""
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import power as PWR
+from repro.core import predictors as PRED
+from repro.core.estimators import cu_estimate, wf_stall_estimate
+from repro.core.simulate import SimConfig, ednp, epoch_execute
+from repro.core.workloads import get_workload, make_program
+
+
+def test_power_monotone_in_frequency():
+    f = PWR.FREQS_GHZ
+    p = PWR.power(f, jnp.full_like(f, 0.5))
+    assert bool(jnp.all(jnp.diff(p) > 0))
+
+
+def test_voltage_range():
+    assert float(PWR.v_of_f(1.3)) == pytest.approx(0.70)
+    assert float(PWR.v_of_f(2.2)) == pytest.approx(1.00)
+
+
+def test_transition_energy_symmetric_and_zero_at_fixpoint():
+    assert float(PWR.transition_energy(1.7, 1.7)) == 0.0
+    assert float(PWR.transition_energy(1.3, 2.2)) == pytest.approx(
+        float(PWR.transition_energy(2.2, 1.3)))
+
+
+def test_transition_latency_schedule():
+    # paper §5: 4ns @ 1us ... 400ns cap @ >=100us
+    assert PWR.transition_latency_us(1.0) == pytest.approx(4e-3)
+    assert PWR.transition_latency_us(10.0) == pytest.approx(4e-2)
+    assert PWR.transition_latency_us(100.0) == pytest.approx(0.4)
+    assert PWR.transition_latency_us(1000.0) == pytest.approx(0.4)
+
+
+def test_pc_table_update_then_lookup_roundtrip():
+    tbl = PRED.table_init(2, 16)
+    tid = jnp.array([0, 1])
+    idx = jnp.array([[3, 3], [5, 7]])
+    i0 = jnp.array([[10.0, 14.0], [5.0, 6.0]])
+    sens = jnp.array([[1.0, 3.0], [2.0, 4.0]])
+    tbl = PRED.table_update(tbl, tid, idx, i0, sens, ema=0.5)
+    # collisions in epoch 0 average (slot (0,3) gets mean of 10,14)
+    fb = jnp.zeros((2, 2))
+    li0, lsens, hit = PRED.table_lookup(tbl, tid, idx, fb, fb)
+    np.testing.assert_allclose(np.asarray(li0[0]), [12.0, 12.0])
+    np.testing.assert_allclose(np.asarray(lsens[1]), [2.0, 4.0])
+    assert np.all(np.asarray(hit) == 1.0)
+
+
+def test_pc_table_miss_falls_back():
+    tbl = PRED.table_init(1, 8)
+    tid = jnp.array([0])
+    idx = jnp.array([[2]])
+    fb_i0 = jnp.array([[42.0]])
+    fb_sens = jnp.array([[7.0]])
+    i0, sens, hit = PRED.table_lookup(tbl, tid, idx, fb_i0, fb_sens)
+    assert float(i0[0, 0]) == 42.0 and float(sens[0, 0]) == 7.0
+    assert float(hit[0, 0]) == 0.0
+
+
+def test_sensitivity_commutativity():
+    """Paper §4.2: domain sensitivity == sum of wavefront sensitivities.
+    Verified on the exact fork-based linear fit."""
+    import jax
+    prog = get_workload("comd")
+    sim = SimConfig(n_cu=4, n_wf=8)
+    pos = jnp.abs(jnp.asarray(
+        np.random.default_rng(0).uniform(0, 4000, (4, 8)), jnp.float32))
+    F = PWR.FREQS_GHZ
+    c_f = jax.vmap(lambda f: epoch_execute(prog, pos, jnp.full((4,), f),
+                                           sim)[1]["steady"])(F)
+    sens_wf = (c_f[-1] - c_f[0]) / (F[-1] - F[0])    # (CU,WF)
+    I_cu = c_f.sum(-1)
+    sens_cu = (I_cu[-1] - I_cu[0]) / (F[-1] - F[0])
+    np.testing.assert_allclose(np.asarray(sens_wf.sum(-1)),
+                               np.asarray(sens_cu), rtol=1e-5)
+
+
+def test_wf_stall_estimator_recovers_sensitivity():
+    """In an uncontended, un-thrashed epoch the WF STALL estimate is ~exact
+    (modulo the 1/16 stall-counter quantization)."""
+    prog = make_program("t", "constant", 3)
+    sim = SimConfig(n_cu=2, n_wf=4, sigma=0.0, membw=1e12)
+    pos = jnp.zeros((2, 4), jnp.float32)
+    f = jnp.full((2,), 1.7)
+    _, ctr = epoch_execute(prog, pos, f, sim)
+    import jax
+    F = PWR.FREQS_GHZ
+    c_f = jax.vmap(lambda ff: epoch_execute(prog, pos, jnp.full((2,), ff),
+                                            sim)[1]["steady"])(F)
+    true_sens = (c_f[-1] - c_f[0]) / (F[-1] - F[0])
+    ctr = dict(ctr, committed=ctr["steady"])
+    _, est = wf_stall_estimate(ctr, f)
+    np.testing.assert_allclose(np.asarray(est), np.asarray(true_sens),
+                               rtol=0.15)
+
+
+def test_cu_models_all_finite_and_ordered_inputs():
+    prog = get_workload("lulesh")
+    sim = SimConfig(n_cu=4, n_wf=8)
+    pos = jnp.asarray(np.random.default_rng(1).uniform(0, 4000, (4, 8)),
+                      jnp.float32)
+    _, ctr = epoch_execute(prog, pos, jnp.full((4,), 1.7), sim)
+    ctr = dict(ctr, committed=ctr["steady"])
+    for model in ("stall", "lead", "crit", "crisp"):
+        i0, sens = cu_estimate(ctr, jnp.full((4,), 1.7), model)
+        assert bool(jnp.all(jnp.isfinite(i0))) and bool(jnp.all(jnp.isfinite(sens)))
+        assert bool(jnp.all(i0 >= 0))
+
+
+def test_ednp_math():
+    tr = {"work": np.ones((10, 2)) * 5.0, "energy": np.ones((10, 2)) * 2.0}
+    E, D, M = ednp(tr, work_budget=50.0, epoch_us=1.0, n=2)
+    assert D == pytest.approx(5.0)
+    assert E == pytest.approx(20.0)
+    assert M == pytest.approx(20.0 * 25.0)
+
+
+def test_fork_determinism():
+    """Same state + same frequency -> bit-identical epoch (the fork
+    property the paper's methodology needs, §5.1)."""
+    prog = get_workload("hacc")
+    sim = SimConfig(n_cu=4, n_wf=8)
+    pos = jnp.asarray(np.random.default_rng(2).uniform(0, 4000, (4, 8)),
+                      jnp.float32)
+    f = jnp.full((4,), 1.9)
+    a, _ = epoch_execute(prog, pos, f, sim)
+    b, _ = epoch_execute(prog, pos, f, sim)
+    np.testing.assert_array_equal(np.asarray(a), np.asarray(b))

@@ -1,0 +1,90 @@
+"""Per-kernel allclose sweeps (shapes x dtypes) against the pure-jnp oracles,
+kernels executed in Pallas interpret mode."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels import ops, ref
+
+RNG = np.random.default_rng(0)
+
+
+def _rand(shape, dtype):
+    x = RNG.standard_normal(shape).astype(np.float32)
+    return jnp.asarray(x, dtype)
+
+
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+@pytest.mark.parametrize("B,S,H,Hkv,hd", [
+    (1, 128, 2, 2, 64),
+    (2, 256, 4, 2, 64),
+    (1, 256, 4, 1, 128),   # MQA
+    (2, 512, 2, 2, 32),
+])
+def test_flash_attention_sweep(B, S, H, Hkv, hd, dtype):
+    q = _rand((B, S, H, hd), dtype)
+    k = _rand((B, S, Hkv, hd), dtype)
+    v = _rand((B, S, Hkv, hd), dtype)
+    out = ops.flash_attention(q, k, v, causal=True)
+    want = ref.attention_ref(q, k, v, causal=True)
+    tol = 2e-2 if dtype == jnp.bfloat16 else 2e-5
+    np.testing.assert_allclose(np.asarray(out, np.float32),
+                               np.asarray(want, np.float32),
+                               rtol=tol, atol=tol)
+
+
+@pytest.mark.parametrize("window", [32, 128])
+def test_flash_attention_sliding_window(window):
+    q = _rand((1, 256, 2, 64), jnp.float32)
+    k = _rand((1, 256, 2, 64), jnp.float32)
+    v = _rand((1, 256, 2, 64), jnp.float32)
+    out = ops.flash_attention(q, k, v, causal=True, window=window)
+    want = ref.attention_ref(q, k, v, causal=True, window=window)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(want),
+                               rtol=2e-5, atol=2e-5)
+
+
+@pytest.mark.parametrize("T,E,CU,WF", [(4, 64, 8, 16), (8, 128, 16, 40)])
+def test_pc_table_predict_sweep(T, E, CU, WF):
+    ti0 = jnp.asarray(RNG.uniform(0, 60, (T, E)), jnp.float32)
+    tse = jnp.asarray(RNG.uniform(0, 40, (T, E)), jnp.float32)
+    tcnt = jnp.asarray((RNG.uniform(size=(T, E)) > 0.4).astype(np.float32))
+    tid = jnp.asarray(RNG.integers(0, T, CU), jnp.int32)
+    idx = jnp.asarray(RNG.integers(0, E, (CU, WF)), jnp.int32)
+    fb0 = jnp.asarray(RNG.uniform(0, 60, (CU, WF)), jnp.float32)
+    fbs = jnp.asarray(RNG.uniform(0, 40, (CU, WF)), jnp.float32)
+    freqs = jnp.linspace(1.3, 2.2, 10)
+    out = ops.pc_table_predict(ti0, tse, tcnt, tid, idx, fb0, fbs, freqs)
+    want = ref.pc_table_predict_ref(ti0, tse, tcnt, tid, idx, fb0, fbs, freqs)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(want),
+                               rtol=1e-4, atol=1e-2)
+
+
+@pytest.mark.parametrize("BH,Tn,hd,chunk", [
+    (2, 128, 64, 64), (1, 256, 64, 128), (3, 128, 32, 32),
+])
+def test_rwkv_chunked_sweep(BH, Tn, hd, chunk):
+    r = _rand((BH, Tn, hd), jnp.float32) * 0.5
+    k = _rand((BH, Tn, hd), jnp.float32) * 0.5
+    v = _rand((BH, Tn, hd), jnp.float32) * 0.5
+    w = jnp.asarray(RNG.uniform(0.8, 0.999, (BH, Tn, hd)), jnp.float32)
+    u = _rand((BH, hd), jnp.float32) * 0.1
+    out = ops.rwkv_chunked(r, k, v, w, u, chunk=chunk)
+    want = jax.vmap(lambda a, b, c, d, e: ref.rwkv_chunk_ref(
+        a, b, c, d, e, jnp.zeros((hd, hd)))[0])(r, k, v, w, u)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(want),
+                               rtol=1e-4, atol=1e-4)
+
+
+def test_rwkv_chunk_invariance():
+    """Chunk size must not change the result (state carry correctness)."""
+    BH, Tn, hd = 1, 128, 32
+    r = _rand((BH, Tn, hd), jnp.float32)
+    k = _rand((BH, Tn, hd), jnp.float32)
+    v = _rand((BH, Tn, hd), jnp.float32)
+    w = jnp.asarray(RNG.uniform(0.9, 0.999, (BH, Tn, hd)), jnp.float32)
+    u = _rand((BH, hd), jnp.float32) * 0.1
+    a = ops.rwkv_chunked(r, k, v, w, u, chunk=32)
+    b = ops.rwkv_chunked(r, k, v, w, u, chunk=128)
+    np.testing.assert_allclose(np.asarray(a), np.asarray(b), rtol=1e-4, atol=1e-4)

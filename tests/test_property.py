@@ -1,0 +1,97 @@
+"""Hypothesis property tests on system invariants."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.core import power as PWR
+from repro.core import predictors as PRED
+from repro.core.simulate import SimConfig, epoch_execute
+from repro.core.workloads import make_program
+from repro.models.layers import chunked_ce_loss
+
+SETTINGS = dict(max_examples=20, deadline=None)
+
+
+@given(seed=st.integers(0, 2**16), f_idx=st.integers(0, 9))
+@settings(**SETTINGS)
+def test_epoch_invariants(seed, f_idx):
+    """committed in [0, demand-cap]; issue ratio in [0,1]; counters finite."""
+    prog = make_program("p", "irregular", seed % 97, P=256)
+    sim = SimConfig(n_cu=4, n_wf=8, seed=seed % 13)
+    rng = np.random.default_rng(seed)
+    pos = jnp.asarray(rng.uniform(0, 256 * 4, (4, 8)), jnp.float32)
+    f = jnp.full((4,), float(PWR.FREQS_GHZ[f_idx]))
+    committed, ctr = epoch_execute(prog, pos, f, sim)
+    assert bool(jnp.all(committed >= 0))
+    assert bool(jnp.all(ctr["steady"] >= committed - 1e-3))
+    assert bool(jnp.all((ctr["issue_q"] >= 0) & (ctr["issue_q"] <= 1 + 1e-6)))
+    assert bool(jnp.all((ctr["core_frac"] >= 0) & (ctr["core_frac"] <= 1)))
+    # CU issue capacity respected
+    C = sim.cap_per_ghz * f[:, None] * sim.epoch_us
+    assert bool(jnp.all(committed.sum(-1) <= C[:, 0] + 1e-3))
+
+
+@given(seed=st.integers(0, 2**16))
+@settings(**SETTINGS)
+def test_steady_monotone_in_frequency(seed):
+    """Without shared-bandwidth thrash, steady committed is monotone
+    non-decreasing in frequency (linear model property)."""
+    prog = make_program("p", "mixed", seed % 89, P=256)
+    sim = SimConfig(n_cu=2, n_wf=4, membw=1e12, seed=seed % 7)
+    rng = np.random.default_rng(seed)
+    pos = jnp.asarray(rng.uniform(0, 256 * 4, (2, 4)), jnp.float32)
+    outs = [epoch_execute(prog, pos, jnp.full((2,), float(f)), sim)[1]["steady"].sum()
+            for f in PWR.FREQS_GHZ]
+    assert all(float(b) >= float(a) - 1e-2 for a, b in zip(outs, outs[1:]))
+
+
+@given(data=st.data())
+@settings(**SETTINGS)
+def test_pc_table_lookup_returns_written_values(data):
+    entries = data.draw(st.sampled_from([8, 32, 128]))
+    n_wf = data.draw(st.integers(1, 8))
+    # unique slots -> exact readback (no collision averaging)
+    slots = data.draw(st.lists(st.integers(0, entries - 1), min_size=n_wf,
+                               max_size=n_wf, unique=True))
+    vals = data.draw(st.lists(st.floats(0.0, 100.0), min_size=n_wf,
+                              max_size=n_wf))
+    tbl = PRED.table_init(1, entries)
+    tid = jnp.array([0])
+    idx = jnp.array([slots])
+    v = jnp.array([vals], jnp.float32)
+    tbl = PRED.table_update(tbl, tid, idx, v, v, ema=0.5)
+    i0, sens, hit = PRED.table_lookup(tbl, tid, idx,
+                                      jnp.full((1, n_wf), -1.0),
+                                      jnp.full((1, n_wf), -1.0))
+    np.testing.assert_allclose(np.asarray(i0[0]), vals, rtol=1e-6, atol=1e-5)
+    assert np.all(np.asarray(hit) == 1.0)
+
+
+@given(seed=st.integers(0, 2**16), chunk=st.sampled_from([16, 32, 64]))
+@settings(**SETTINGS)
+def test_chunked_ce_matches_full(seed, chunk):
+    rng = np.random.default_rng(seed)
+    B, S, D, V = 2, 64, 16, 50
+    x = jnp.asarray(rng.standard_normal((B, S, D)), jnp.float32)
+    emb = jnp.asarray(rng.standard_normal((V, D)), jnp.float32)
+    labels = jnp.asarray(rng.integers(0, V, (B, S)), jnp.int32)
+    mask = jnp.asarray(rng.integers(0, 2, (B, S)), jnp.int32)
+    got = chunked_ce_loss(x, emb, labels, mask.astype(jnp.float32), chunk=chunk)
+    logits = x @ emb.T
+    lse = jax.nn.logsumexp(logits, -1)
+    gold = jnp.take_along_axis(logits, labels[..., None], -1)[..., 0]
+    m = mask.astype(jnp.float32)
+    want = ((lse - gold) * m).sum() / jnp.maximum(m.sum(), 1)
+    np.testing.assert_allclose(float(got), float(want), rtol=1e-5, atol=1e-5)
+
+
+@given(f1=st.floats(1.3, 2.2), f2=st.floats(1.3, 2.2),
+       act=st.floats(0.05, 1.0))
+@settings(**SETTINGS)
+def test_power_bounds(f1, f2, act):
+    p = float(PWR.power(jnp.float32(f1), jnp.float32(act)))
+    assert 0.0 < p < 5.0
+    # higher V/f at same activity costs more (margin for float rounding)
+    if f2 > f1 + 1e-3:
+        assert float(PWR.power(jnp.float32(f2), jnp.float32(act))) > p

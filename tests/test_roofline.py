@@ -1,0 +1,42 @@
+"""Unit tests for the trip-count-aware HLO analyzer."""
+from repro.roofline.hlo_analysis import analyze, parse_module, _multipliers
+
+HLO = """\
+HloModule jit_f, entry_computation_layout={(f32[8,8])->f32[8,8]}
+
+%body.1 (p: (s32[], f32[8,8])) -> (s32[], f32[8,8]) {
+  %p = (s32[], f32[8,8]) parameter(0)
+  %i = s32[] get-tuple-element(%p), index=0
+  %x = f32[8,8] get-tuple-element(%p), index=1
+  %d = f32[8,8] dot(%x, %x), lhs_contracting_dims={1}, rhs_contracting_dims={0}
+  %ar = f32[8,8] all-reduce(%d), replica_groups={}, to_apply=%add.1
+  ROOT %t = (s32[], f32[8,8]) tuple(%i, %ar)
+}
+
+%cond.1 (p2: (s32[], f32[8,8])) -> pred[] {
+  %p2 = (s32[], f32[8,8]) parameter(0)
+  ROOT %lt = pred[] constant(true)
+}
+
+ENTRY %main.1 (a: f32[8,8]) -> f32[8,8] {
+  %a = f32[8,8] parameter(0)
+  %w = (s32[], f32[8,8]) while(%tpl), condition=%cond.1, body=%body.1, backend_config={"known_trip_count":{"n":"10"}}
+  ROOT %r = f32[8,8] get-tuple-element(%w), index=1
+}
+"""
+
+
+def test_trip_count_multiplies_flops_and_collectives():
+    a = analyze(HLO)
+    # dot: 2*8*8*8 = 1024 flops x 10 trips
+    assert a["flops"] == 1024 * 10
+    # all-reduce result: 8*8*4 bytes x 10
+    assert a["coll_all-reduce"] == 256 * 10
+
+
+def test_multiplier_propagation():
+    comps = parse_module(HLO)
+    assert set(comps) >= {"body.1", "cond.1", "main.1"}
+    mult = _multipliers(comps)
+    assert mult["main.1"] == 1.0
+    assert mult["body.1"] == 10.0

@@ -1,0 +1,75 @@
+"""End-to-end behaviour tests for the paper's system."""
+import numpy as np
+import pytest
+
+from repro.core.simulate import SimConfig, prediction_accuracy, run_sim, run_workload
+from repro.core.workloads import get_workload
+
+SIM = SimConfig(n_epochs=300)
+
+
+@pytest.fixture(scope="module")
+def comd():
+    return get_workload("comd")
+
+
+def test_mechanism_accuracy_ordering(comd):
+    """Paper Fig 14: PC-based prediction beats reactive; oracle is ~exact."""
+    acc = {m: prediction_accuracy(run_sim(comd, SIM, m))
+           for m in ("crisp", "accreac", "pcstall", "accpc", "oracle")}
+    assert acc["oracle"] > 0.97
+    assert acc["pcstall"] > acc["crisp"] + 0.05, acc
+    assert acc["pcstall"] > acc["accreac"] + 0.05, acc
+    assert acc["accpc"] >= acc["pcstall"] - 0.02, acc
+
+
+def test_dvfs_beats_static17_on_phased_workload(comd):
+    r = run_workload(comd, SIM, mechanisms=("static17", "pcstall"))
+    assert r["pcstall"]["ednp_norm"] < 0.97  # >3% ED2P gain vs static 1.7
+
+
+def test_static_frequencies_bracket_dynamic(comd):
+    r = run_workload(comd, SIM,
+                     mechanisms=("static13", "static22", "pcstall"))
+    # dynamic should be at least as good as the WORSE static point
+    worst = max(r["static13"]["ednp_norm"], r["static22"]["ednp_norm"])
+    assert r["pcstall"]["ednp_norm"] < worst
+
+
+def test_memory_bound_workload_downclocks():
+    tr = run_sim(get_workload("xsbench"), SIM, "pcstall")
+    h = np.bincount(tr["fidx"].ravel(), minlength=10) / tr["fidx"].size
+    assert h[0] > 0.5, h  # mostly lowest V/f state
+
+
+def test_compute_bound_workload_upclocks():
+    tr = run_sim(get_workload("dgemm"), SIM, "pcstall")
+    h = np.bincount(tr["fidx"].ravel(), minlength=10) / tr["fidx"].size
+    assert h[-1] > 0.5, h
+
+
+def test_work_conservation_and_energy_positive(comd):
+    tr = run_sim(comd, SIM, "pcstall")
+    assert np.all(tr["work"] >= 0)
+    assert np.all(tr["energy"] > 0)
+
+
+def test_granularity_scaling(comd):
+    """Paper Fig 18b: larger V/f domains keep most of the benefit."""
+    fine = run_workload(comd, SimConfig(n_epochs=300, cus_per_domain=1),
+                        mechanisms=("static17", "pcstall"))
+    coarse = run_workload(comd, SimConfig(n_epochs=300, cus_per_domain=16,
+                                          cus_per_table=16),
+                          mechanisms=("static17", "pcstall"))
+    assert coarse["pcstall"]["ednp_norm"] < 1.0
+    # finer domains should not be (much) worse
+    assert fine["pcstall"]["ednp_norm"] <= coarse["pcstall"]["ednp_norm"] + 0.05
+
+
+def test_perfcap_objective_respects_cap(comd):
+    sim = SimConfig(n_epochs=300, objective="perfcap05")
+    base = run_sim(comd, SimConfig(n_epochs=300), "static22")
+    tr = run_sim(comd, sim, "pcstall")
+    # within ~8% of max-frequency work (5% cap + estimation slack)
+    assert tr["work"].sum() > 0.92 * base["work"].sum()
+    assert tr["energy"].sum() < base["energy"].sum()
