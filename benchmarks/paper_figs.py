@@ -1,5 +1,9 @@
 """One function per paper table/figure. Results cached to experiments/results/.
 
+All multi-(workload x mechanism) figures dispatch through the batched sweep
+layer (``repro.core.sweep.run_suite``): one compiled executable per mechanism
+family per SimConfig instead of one trace per (workload, mechanism) pair.
+
 Figures:
   fig01a  ED2P opportunity vs DVFS epoch duration
   fig01b  prediction accuracy vs epoch duration
@@ -16,16 +20,16 @@ Figures:
 """
 from __future__ import annotations
 
-import dataclasses
 import json
 from pathlib import Path
 from typing import Dict, List
 
 import numpy as np
 
-from repro.core.simulate import (MECHANISMS, SimConfig, ednp,
-                                 prediction_accuracy, run_sim, run_workload)
-from repro.core.workloads import WORKLOAD_TABLE, all_workloads, get_workload
+from repro.core.simulate import (SimConfig, ednp, prediction_accuracy,
+                                 run_sim)
+from repro.core.sweep import run_suite, suite_metrics
+from repro.core.workloads import get_workload
 
 RESULTS = Path(__file__).resolve().parents[1] / "experiments" / "results"
 RESULTS.mkdir(parents=True, exist_ok=True)
@@ -55,17 +59,20 @@ WORKLOADS_FAST = ["comd", "hpgmg", "lulesh", "xsbench", "hacc", "quickS",
                   "dgemm", "BwdBN", "BwdPool", "FwdSoft"]
 
 
+def _progs(names: List[str]) -> Dict:
+    return {w: get_workload(w) for w in names}
+
+
 def fig14_accuracy() -> Dict:
     """Prediction accuracy by mechanism (paper Fig 14)."""
     def run():
-        sim = SimConfig(n_epochs=N_EPOCHS)
-        out = {}
-        for wl in WORKLOADS_FAST:
-            prog = get_workload(wl)
-            out[wl] = {m: prediction_accuracy(run_sim(prog, sim, m))
-                       for m in CORE_MECHS if not m.startswith("static")}
+        mechs = tuple(m for m in CORE_MECHS if not m.startswith("static"))
+        traces = run_suite(_progs(WORKLOADS_FAST), SimConfig(n_epochs=N_EPOCHS),
+                           mechs)
+        out = {wl: {m: prediction_accuracy(trs[m]) for m in mechs}
+               for wl, trs in traces.items()}
         out["MEAN"] = {m: float(np.mean([out[w][m] for w in WORKLOADS_FAST]))
-                       for m in out[WORKLOADS_FAST[0]]}
+                       for m in mechs}
         return out
     return _cache("fig14_accuracy", run)
 
@@ -73,11 +80,10 @@ def fig14_accuracy() -> Dict:
 def fig15_ed2p() -> Dict:
     """ED2P by workload normalized to static 1.7 GHz (paper Fig 15)."""
     def run():
-        out = {}
-        for wl in WORKLOADS_FAST:
-            r = run_workload(get_workload(wl), SimConfig(n_epochs=N_EPOCHS),
-                             mechanisms=FAST_MECHS, n=2)
-            out[wl] = {m: float(d["ednp_norm"]) for m, d in r.items()}
+        r = suite_metrics(_progs(WORKLOADS_FAST), SimConfig(n_epochs=N_EPOCHS),
+                          FAST_MECHS, n=2)
+        out = {wl: {m: float(d["ednp_norm"]) for m, d in r[wl].items()}
+               for wl in WORKLOADS_FAST}
         out["GEOMEAN"] = {m: float(np.exp(np.mean([np.log(out[w][m])
                           for w in WORKLOADS_FAST]))) for m in FAST_MECHS}
         return out
@@ -85,28 +91,28 @@ def fig15_ed2p() -> Dict:
 
 
 def fig01_epoch_sweep() -> Dict:
-    """ED2P opportunity + accuracy vs epoch duration (paper Fig 1a/1b, 17)."""
+    """ED2P opportunity + accuracy vs epoch duration (paper Fig 1a/1b, 17).
+
+    One batched suite per epoch duration; the same traces feed both the
+    n=2 (ED2P) and n=1 (EDP) metrics."""
     def run():
         mechs = ("static17", "crisp", "pcstall", "oracle")
+        wls = ["comd", "hacc", "lulesh", "dgemm", "xsbench", "BwdBN"]
         out = {}
         for T in (1.0, 10.0, 50.0, 100.0):
             n_ep = max(200, int(1200 / max(T / 4, 1)))
             sim = SimConfig(epoch_us=T, n_epochs=n_ep)
-            acc = {m: [] for m in mechs if m != "static17"}
-            e2 = {m: [] for m in mechs}
-            e1 = {m: [] for m in mechs}
-            for wl in ("comd", "hacc", "lulesh", "dgemm", "xsbench", "BwdBN"):
-                r2 = run_workload(get_workload(wl), sim, mechanisms=mechs, n=2)
-                r1 = run_workload(get_workload(wl), sim, mechanisms=mechs, n=1)
-                for m in mechs:
-                    e2[m].append(np.log(r2[m]["ednp_norm"]))
-                    e1[m].append(np.log(r1[m]["ednp_norm"]))
-                    if m != "static17":
-                        acc[m].append(r2[m]["accuracy"])
+            traces = run_suite(_progs(wls), sim, mechs)
+            r2 = suite_metrics(None, sim, mechs, n=2, traces=traces)
+            r1 = suite_metrics(None, sim, mechs, n=1, traces=traces)
             out[str(T)] = {
-                "ed2p": {m: float(np.exp(np.mean(v))) for m, v in e2.items()},
-                "edp": {m: float(np.exp(np.mean(v))) for m, v in e1.items()},
-                "accuracy": {m: float(np.mean(v)) for m, v in acc.items()},
+                "ed2p": {m: float(np.exp(np.mean([np.log(r2[w][m]["ednp_norm"])
+                         for w in wls]))) for m in mechs},
+                "edp": {m: float(np.exp(np.mean([np.log(r1[w][m]["ednp_norm"])
+                        for w in wls]))) for m in mechs},
+                "accuracy": {m: float(np.mean([r2[w][m]["accuracy"]
+                             for w in wls])) for m in mechs
+                             if m != "static17"},
             }
         return out
     return _cache("fig01_epoch_sweep", run)
@@ -116,16 +122,18 @@ def fig07_variation() -> Dict:
     """Sensitivity variation across consecutive epochs (paper Fig 7a/7b)."""
     def run():
         out = {"per_workload_1us": {}, "epoch_sweep": {}}
+        traces = run_suite(_progs(WORKLOADS_FAST), SimConfig(n_epochs=400),
+                           ("accreac",))
         for wl in WORKLOADS_FAST:
-            tr = run_sim(get_workload(wl), SimConfig(n_epochs=400), "accreac")
-            out["per_workload_1us"][wl] = _consec_var(tr["true_sens"][50:])
+            out["per_workload_1us"][wl] = _consec_var(
+                traces[wl]["accreac"]["true_sens"][50:])
+        wls = ["comd", "hacc", "dgemm", "xsbench"]
         for T in (1.0, 10.0, 50.0, 100.0):
-            vs = []
-            for wl in ("comd", "hacc", "dgemm", "xsbench"):
-                tr = run_sim(get_workload(wl), SimConfig(epoch_us=T, n_epochs=300),
-                             "accreac")
-                vs.append(_consec_var(tr["true_sens"][30:]))
-            out["epoch_sweep"][str(T)] = float(np.mean(vs))
+            tr = run_suite(_progs(wls), SimConfig(epoch_us=T, n_epochs=300),
+                           ("accreac",))
+            out["epoch_sweep"][str(T)] = float(np.mean(
+                [_consec_var(tr[w]["accreac"]["true_sens"][30:])
+                 for w in wls]))
         return out
     return _cache("fig07_variation", run)
 
@@ -133,10 +141,13 @@ def fig07_variation() -> Dict:
 def fig10_pc_stability() -> Dict:
     """Same-start-PC iteration variation (paper Fig 10) at WF granularity."""
     def run():
+        wls = ["comd", "hacc", "dgemm", "xsbench", "lulesh"]
+        traces = run_suite(_progs(wls),
+                           SimConfig(n_epochs=500, record_wf=True),
+                           ("accreac",))
         out = {}
-        for wl in ("comd", "hacc", "dgemm", "xsbench", "lulesh"):
-            tr = run_sim(get_workload(wl), SimConfig(n_epochs=500, record_wf=True),
-                         "accreac")
+        for wl in wls:
+            tr = traces[wl]["accreac"]
             ws, wb = tr["wf_sens"][50:], tr["wf_blk"][50:]
             vals = []
             for cu in range(0, 64, 16):
@@ -156,14 +167,14 @@ def fig10_pc_stability() -> Dict:
 def fig11b_offset_sweep() -> Dict:
     """PC-table index offset sweep (paper Fig 11b)."""
     def run():
+        wls = ["comd", "hacc", "lulesh", "BwdBN"]
+        progs = _progs(wls)
         out = {}
         for off in (1, 2, 4, 8, 16, 32, 64):
-            accs = []
-            for wl in ("comd", "hacc", "lulesh", "BwdBN"):
-                sim = SimConfig(n_epochs=500, offset_blocks=off)
-                accs.append(prediction_accuracy(
-                    run_sim(get_workload(wl), sim, "pcstall")))
-            out[str(off * 4) + "_instr"] = float(np.mean(accs))
+            tr = run_suite(progs, SimConfig(n_epochs=500, offset_blocks=off),
+                           ("pcstall",))
+            out[str(off * 4) + "_instr"] = float(np.mean(
+                [prediction_accuracy(tr[w]["pcstall"]) for w in wls]))
         return out
     return _cache("fig11b_offset_sweep", run)
 
@@ -171,10 +182,12 @@ def fig11b_offset_sweep() -> Dict:
 def fig16_timeshare() -> Dict:
     """Frequency time-share per workload under PCSTALL/ED2P (paper Fig 16)."""
     def run():
+        traces = run_suite(_progs(WORKLOADS_FAST),
+                           SimConfig(n_epochs=N_EPOCHS), ("pcstall",))
         out = {}
         for wl in WORKLOADS_FAST:
-            tr = run_sim(get_workload(wl), SimConfig(n_epochs=N_EPOCHS), "pcstall")
-            h = np.bincount(tr["fidx"].ravel(), minlength=10) / tr["fidx"].size
+            fidx = traces[wl]["pcstall"]["fidx"]
+            h = np.bincount(fidx.ravel(), minlength=10) / fidx.size
             out[wl] = [round(float(x), 4) for x in h]
         return out
     return _cache("fig16_timeshare", run)
@@ -183,20 +196,22 @@ def fig16_timeshare() -> Dict:
 def fig18a_energy_caps() -> Dict:
     """Energy savings at perf-degradation caps (paper Fig 18a)."""
     def run():
+        mechs = ("crisp", "pcstall", "accpc", "oracle")
+        wls = ["comd", "hacc", "lulesh", "dgemm", "xsbench", "BwdBN"]
+        progs = _progs(wls)
+        bases = run_suite(progs, SimConfig(n_epochs=N_EPOCHS), ("static22",))
         out = {}
         for obj in ("perfcap05", "perfcap10"):
+            sim = SimConfig(n_epochs=N_EPOCHS, objective=obj)
+            traces = run_suite(progs, sim, mechs)
             sub = {}
-            for m in ("crisp", "pcstall", "accpc", "oracle"):
+            for m in mechs:
                 savings = []
-                for wl in ("comd", "hacc", "lulesh", "dgemm", "xsbench", "BwdBN"):
-                    prog = get_workload(wl)
-                    sim = SimConfig(n_epochs=N_EPOCHS, objective=obj)
-                    base = run_sim(prog, dataclasses.replace(sim, objective="ed2p"),
-                                   "static22")
-                    tr = run_sim(prog, sim, m)
+                for wl in wls:
+                    base = bases[wl]["static22"]
                     budget = 0.9 * base["work"].sum()
-                    E0, D0, _ = ednp(base, budget, sim.epoch_us)
-                    E, D, _ = ednp(tr, budget, sim.epoch_us)
+                    E0, _, _ = ednp(base, budget, sim.epoch_us)
+                    E, _, _ = ednp(traces[wl][m], budget, sim.epoch_us)
                     savings.append(1.0 - E / E0)
                 sub[m] = float(np.mean(savings))
             out[obj] = sub
@@ -207,19 +222,17 @@ def fig18a_energy_caps() -> Dict:
 def fig18b_granularity() -> Dict:
     """ED2P vs V/f-domain granularity (paper Fig 18b)."""
     def run():
+        mechs = ("crisp", "pcstall", "oracle")
+        wls = ["comd", "hacc", "lulesh", "BwdBN"]
+        progs = _progs(wls)
         out = {}
         for g in (1, 2, 4, 8, 16, 32):
-            sub = {}
-            for m in ("crisp", "pcstall", "oracle"):
-                vals = []
-                for wl in ("comd", "hacc", "lulesh", "BwdBN"):
-                    sim = SimConfig(n_epochs=N_EPOCHS, cus_per_domain=g,
-                                    cus_per_table=g)
-                    r = run_workload(get_workload(wl), sim,
-                                     mechanisms=("static17", m), n=2)
-                    vals.append(np.log(r[m]["ednp_norm"]))
-                sub[m] = float(np.exp(np.mean(vals)))
-            out[str(g) + "CU"] = sub
+            sim = SimConfig(n_epochs=N_EPOCHS, cus_per_domain=g,
+                            cus_per_table=g)
+            r = suite_metrics(progs, sim, mechs, n=2)
+            out[str(g) + "CU"] = {
+                m: float(np.exp(np.mean([np.log(r[w][m]["ednp_norm"])
+                                         for w in wls]))) for m in mechs}
         return out
     return _cache("fig18b_granularity", run)
 
@@ -254,7 +267,6 @@ def fig11a_slot_contention() -> Dict:
     """Per-WF-slot sensitivity variation (paper Fig 11a, quickS): the
     oldest-first scheduler shields slot 0; younger slots vary more."""
     def run():
-        import numpy as np
         # occupancy-saturated CU (paper's quickS is issue-bound): lower the
         # issue capacity so the oldest-first scheduler actually squeezes
         tr = run_sim(get_workload("quickS"),
@@ -274,16 +286,15 @@ def fig11a_slot_contention() -> Dict:
 def tab_hitrate() -> Dict:
     """PC-table hit ratio vs entries (paper §4.4: 128 entries -> 95%+)."""
     def run():
-        import numpy as np
+        wls = ["comd", "hacc", "lulesh", "dgemm"]
+        progs = _progs(wls)
         out = {}
         for entries in (16, 32, 64, 128, 256):
-            hrs = []
-            for wl in ("comd", "hacc", "lulesh", "dgemm"):
-                sim = SimConfig(n_epochs=400, entries=entries,
-                                offset_blocks=max(1024 // entries, 1))
-                tr = run_sim(get_workload(wl), sim, "pcstall")
-                hrs.append(float(np.mean(tr["hit_rate"][50:])))
-            out[str(entries)] = float(np.mean(hrs))
+            sim = SimConfig(n_epochs=400, entries=entries,
+                            offset_blocks=max(1024 // entries, 1))
+            tr = run_suite(progs, sim, ("pcstall",))
+            out[str(entries)] = float(np.mean(
+                [np.mean(tr[w]["pcstall"]["hit_rate"][50:]) for w in wls]))
         return out
     return _cache("tab_hitrate", run)
 

@@ -2,30 +2,74 @@
 
 Prints ``name,us_per_call,derived`` CSV rows. Figure benchmarks are cached in
 experiments/results/*.json (delete to re-run). ``--figs`` selects a subset.
+
+Perf micros report first-call compile time *separately* from steady-state
+us/epoch (the jit-cached engine pays tracing once per (SimConfig, mechanism);
+the seed engine paid it on every call), and the sweep benchmark times the
+batched ``run_suite`` fig15 path against the seed-style serial path
+(re-traced per call). Results are also written to ``BENCH_sweep.json`` at
+the repo root so the speedup is recorded in the repo's perf trajectory.
+
+``--quick`` is the CI smoke mode: tiny sweep, no figure cache, <=30 s —
+pair it with ``pytest -m "not slow"`` for a single fast CI job.
 """
 from __future__ import annotations
 
 import argparse
+import json
 import sys
 import time
+from pathlib import Path
+
+BENCH_JSON = Path(__file__).resolve().parents[1] / "BENCH_sweep.json"
 
 
-def _perf_micros():
-    """Microbenchmarks of the core engine + kernels (CPU wall time)."""
+def _time_once(fn) -> float:
+    t0 = time.perf_counter()
+    fn()
+    return time.perf_counter() - t0
+
+
+def _perf_micros(quick: bool = False):
+    """Microbenchmarks of the core engine + kernels (CPU wall time).
+
+    Returns (rows, record) — rows for CSV printing, record for
+    BENCH_sweep.json."""
     import jax
     import jax.numpy as jnp
     import numpy as np
+    from repro.core import simulate as SIM
     from repro.core.simulate import SimConfig, run_sim
     from repro.core.workloads import get_workload
 
     rows = []
+    n_ep = 100 if quick else 200
     prog = get_workload("comd")
-    sim = SimConfig(n_epochs=200)
-    run_sim(prog, sim, "pcstall")  # warm compile
-    t0 = time.perf_counter()
-    run_sim(prog, sim, "pcstall")
-    dt = (time.perf_counter() - t0) / 200 * 1e6
-    rows.append(("sim_epoch_pcstall_64cu", dt, "us/epoch"))
+    sim = SimConfig(n_epochs=n_ep)
+
+    # seed-style dispatch: the un-jitted scan re-traces on every call (what
+    # the seed engine did for each of its ~100 sweep calls)
+    def seed_style():
+        jax.block_until_ready(SIM._scan_sim(
+            prog, jnp.int32(prog.n_blocks), jnp.float32(0), sim, "pcstall"))
+    seed_us = _time_once(seed_style) / n_ep * 1e6
+
+    compile_s = _time_once(lambda: run_sim(prog, sim, "pcstall"))
+    reps = 2 if quick else 4
+    steady_us = min(_time_once(lambda: run_sim(prog, sim, "pcstall"))
+                    for _ in range(reps)) / n_ep * 1e6
+    rows.append(("sim_epoch_pcstall_64cu_compile", compile_s * 1e6,
+                 "us first call (trace+compile; paid once)"))
+    rows.append(("sim_epoch_pcstall_64cu", steady_us,
+                 f"us/epoch steady-state ({seed_us / steady_us:.1f}x vs "
+                 "seed-style re-trace)"))
+    rows.append(("sim_epoch_pcstall_64cu_seed_style", seed_us,
+                 "us/epoch with per-call re-trace (seed behavior)"))
+    record = {"compile_ms": compile_s * 1e3,
+              "steady_us_per_epoch": steady_us,
+              "seed_style_us_per_epoch": seed_us,
+              "speedup_steady_vs_seed_style": seed_us / steady_us,
+              "n_epochs": n_ep}
 
     from repro.kernels import ops
     q = jnp.asarray(np.random.randn(2, 256, 4, 64), jnp.float32)
@@ -38,25 +82,128 @@ def _perf_micros():
         ops.flash_attention(q, k, v, causal=True).block_until_ready()
     rows.append(("pallas_flash_attn_interp_256", (time.perf_counter() - t0) / 3 * 1e6,
                  "us/call (interpret mode)"))
-    return rows
+    return rows, record
+
+
+def _bench_sweep(quick: bool = False):
+    """fig15-style sweep: batched run_suite vs seed-style serial traces.
+
+    Measured at two epoch scales: the seed path's cost is trace-dominated at
+    short scans (where the suite's compile-once structure wins big) and
+    execution-bound at long ones (where the win is the batched execute);
+    both land in BENCH_sweep.json. Also checks batched-vs-serial numerics.
+
+    Returns (rows, record)."""
+    import jax
+    import jax.numpy as jnp
+    import numpy as np
+    from repro.core import simulate as SIM
+    from repro.core.simulate import SimConfig, run_sim
+    from repro.core.sweep import run_suite
+    from repro.core.workloads import get_workload
+    from benchmarks.paper_figs import FAST_MECHS, WORKLOADS_FAST
+
+    if quick:
+        wls, mechs, scales = WORKLOADS_FAST[:2], ("static17", "pcstall"), \
+            (("tiny", 80),)
+    else:
+        wls, mechs, scales = list(WORKLOADS_FAST), FAST_MECHS, \
+            (("trace_bound_150ep", 150), ("exec_bound_400ep", 400))
+    progs = {w: get_workload(w) for w in wls}
+
+    rows, record = [], {"workloads": wls, "mechanisms": list(mechs)}
+    for label, n_ep in scales:
+        sim = SimConfig(n_epochs=n_ep)
+
+        def serial_seed_style():
+            return {w: {m: {k: np.asarray(v) for k, v in SIM._scan_sim(
+                progs[w], jnp.int32(progs[w].n_blocks), jnp.float32(0),
+                sim, m).items()} for m in mechs} for w in wls}
+        serial_s = _time_once(serial_seed_style)
+
+        t0 = time.perf_counter()
+        suite = run_suite(progs, sim, mechs)
+        suite_cold_s = time.perf_counter() - t0
+        suite_warm_s = min(_time_once(lambda: run_suite(progs, sim, mechs))
+                           for _ in range(2))
+
+        # numerics: batched output vs the (jit-cached) serial engine
+        dev = 0.0
+        for w in wls:
+            for m in mechs:
+                ser = run_sim(progs[w], sim, m)
+                for k in ser:
+                    dev = max(dev, float(np.max(np.abs(
+                        np.asarray(ser[k], np.float64)
+                        - np.asarray(suite[w][m][k], np.float64)))))
+
+        rows += [
+            (f"sweep_fig15_serial_seed_style_{label}", serial_s * 1e6,
+             f"{len(wls)}wl x {len(mechs)}mech x {n_ep}ep; re-trace/call"),
+            (f"sweep_fig15_total_{label}", suite_cold_s * 1e6,
+             f"run_suite cold incl compile ({serial_s / suite_cold_s:.1f}x)"),
+            (f"sweep_fig15_warm_{label}", suite_warm_s * 1e6,
+             f"run_suite jit-cache hit ({serial_s / suite_warm_s:.1f}x); "
+             f"max|dev| vs serial {dev:.2g}"),
+        ]
+        record[label] = {
+            "n_epochs": n_ep,
+            "serial_seed_style_s": serial_s,
+            "suite_cold_s": suite_cold_s,
+            "suite_warm_s": suite_warm_s,
+            "speedup_cold": serial_s / suite_cold_s,
+            "speedup_warm": serial_s / suite_warm_s,
+            "max_abs_dev_vs_serial": dev,
+        }
+    return rows, record
 
 
 def main() -> None:
     ap = argparse.ArgumentParser()
-    ap.add_argument("--figs", default="all",
-                    help="comma list of figure names, 'all', or 'none'")
+    ap.add_argument("--figs", default=None,
+                    help="comma list of figure names, 'all', or 'none' "
+                         "(default: all, or none with --quick)")
     ap.add_argument("--skip-micros", action="store_true")
+    ap.add_argument("--skip-sweep", action="store_true",
+                    help="skip the run_suite-vs-serial sweep benchmark")
+    ap.add_argument("--quick", action="store_true",
+                    help="CI smoke mode: tiny sweep, no figures, <=30s")
     args = ap.parse_args()
+    figs = args.figs if args.figs is not None else \
+        ("none" if args.quick else "all")
 
     print("name,us_per_call,derived")
+    bench: dict = {"quick": args.quick}
     if not args.skip_micros:
-        for name, us, derived in _perf_micros():
+        rows, bench["sim_epoch_pcstall_64cu"] = _perf_micros(args.quick)
+        for name, us, derived in rows:
             print(f"{name},{us:.1f},{derived}")
         sys.stdout.flush()
+    if not args.skip_sweep:
+        rows, bench["sweep_fig15_total"] = _bench_sweep(args.quick)
+        for name, us, derived in rows:
+            print(f"{name},{us:.1f},{derived}")
+        sys.stdout.flush()
+    if len(bench) > 1:
+        if args.quick:
+            # never clobber the full-scale perf trajectory with smoke numbers
+            out = BENCH_JSON.with_name("BENCH_sweep_quick.json")
+        else:
+            out = BENCH_JSON
+        # merge so a partial run (--skip-sweep/--skip-micros) doesn't drop
+        # the other benchmark's record from the perf trajectory
+        if out.exists():
+            try:
+                prev = json.loads(out.read_text())
+            except json.JSONDecodeError:
+                prev = {}
+            bench = {**prev, **bench}
+        out.write_text(json.dumps(bench, indent=1))
+        print(f"# wrote {out}")
 
     from benchmarks.paper_figs import ALL_FIGS
-    names = (list(ALL_FIGS) if args.figs == "all"
-             else [] if args.figs == "none" else args.figs.split(","))
+    names = (list(ALL_FIGS) if figs == "all"
+             else [] if figs == "none" else figs.split(","))
     for name in names:
         t0 = time.perf_counter()
         res = ALL_FIGS[name]()

@@ -1,0 +1,190 @@
+"""Batched sweep layer: one compiled executable per mechanism *family*
+instead of one trace per (workload, mechanism, seed) tuple.
+
+The paper's headline figures (14/15/18) sweep ~10 mechanisms x ~10 workloads
+(x epoch granularities x objectives) through the fork--pre-execute engine.
+Run serially that is ~100 scan traces; ``run_suite`` instead
+
+  1. pads every ``Program`` to a common block count (``pad_program`` keeps
+     the wrapped prefix-sum window semantics exact by rebuilding the doubled
+     cumulative arrays at the *logical* length before padding, and threads
+     the logical block count through the scan as a traced scalar);
+  2. stacks the padded programs into one pytree and ``vmap``s the
+     simulation scan across workloads and seeds (both traced: the noise
+     hash takes the seed as a scalar operand);
+  3. vmaps across mechanisms *within a family*: all fork--pre-execute
+     mechanisms (``simulate.FORK_MECHS``) share a shape-identical carry and
+     run as one executable indexed by a traced mechanism id, while the
+     static-frequency mechanisms compile to their own (fork-free, ~10x
+     cheaper) executable per frequency.
+
+A full Fig-15 sweep is therefore a handful of XLA executables — typically
+one fork-family compile plus one per requested static point — and repeated
+sweeps with the same ``SimConfig`` hit the jit cache and never re-trace.
+
+Execution-model / caching contract: see ``repro.core.simulate``'s module
+docstring; ``run_suite`` output is numerically equivalent to calling
+``run_sim`` per (workload, mechanism, seed) — the per-row math is identical
+and batched reductions preserve per-row ordering (tested to 1e-5 by
+``tests/test_sweep.py``).
+"""
+from __future__ import annotations
+
+import functools
+from typing import Dict, Optional, Sequence, Tuple, Union
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import simulate as SIM
+from repro.core.simulate import MECHANISMS, SimConfig, ednp, prediction_accuracy
+from repro.core.workloads import Program
+
+_STATIC_MECHS = ("static13", "static17", "static22")
+
+
+def pad_program(prog: Program, p_max: int) -> Program:
+    """Pad ``prog``'s arrays to ``p_max`` blocks without changing semantics.
+
+    The per-block arrays are zero-padded (never gathered past the logical
+    length), and the doubled cumulative arrays are rebuilt so indices up to
+    ``2 * n_blocks`` — the maximum window extent the execute can request —
+    still see the wrap-around copy of the *logical* program, with flat
+    padding beyond."""
+    P = prog.n_blocks
+    if P == p_max:
+        return prog
+    assert P < p_max, (P, p_max)
+    pad1 = jnp.zeros((p_max - P,), jnp.float32)
+    pad2 = jnp.zeros((2 * (p_max - P),), jnp.float32)
+
+    def cum(a):
+        doubled = jnp.concatenate([jnp.tile(a, 2), pad2])
+        return jnp.concatenate([jnp.zeros(1), jnp.cumsum(doubled)])
+
+    arr = lambda a: jnp.concatenate([a, pad1])
+    return Program(prog.name, arr(prog.i0_rate), arr(prog.sens_rate),
+                   arr(prog.mem_frac), cum(prog.i0_rate),
+                   cum(prog.sens_rate), cum(prog.mem_frac))
+
+
+def _stack_programs(progs: Sequence[Program]) -> Tuple[Program, jnp.ndarray]:
+    """Pad to a common block count and stack into one batched Program
+    (leading workload axis); returns it plus the logical block counts."""
+    p_max = max(p.n_blocks for p in progs)
+    p_logical = jnp.asarray([p.n_blocks for p in progs], jnp.int32)
+    padded = [pad_program(p, p_max) for p in progs]
+    stacked = Program(
+        "suite",
+        *(jnp.stack([getattr(p, f) for p in padded])
+          for f in ("i0_rate", "sens_rate", "mem_frac",
+                    "cum_i0", "cum_sens", "cum_mem")))
+    return stacked, p_logical
+
+
+@functools.partial(jax.jit, static_argnames=("sim",))
+def _suite_forks(progs: Program, p_logical, seeds, mech_ids, sim: SimConfig):
+    """(W workloads) x (S seeds) x (M fork mechanisms) in one executable."""
+    def per_prog(prog, p_blocks):
+        def per_seed(seed):
+            return jax.vmap(
+                lambda m: SIM._scan_sim(prog, p_blocks, seed, sim, m)
+            )(mech_ids)
+        return jax.vmap(per_seed)(seeds)
+    return jax.vmap(per_prog)(progs, p_logical)
+
+
+@functools.partial(jax.jit, static_argnames=("sim", "mechanism"))
+def _suite_per_mech(progs: Program, p_logical, seeds, sim: SimConfig,
+                    mechanism: str):
+    """(W workloads) x (S seeds) for one statically-specialized mechanism
+    (the fork-free static points, and oracle — whose prediction needs this
+    epoch's forks and so can't join the fused traced family)."""
+    def per_prog(prog, p_blocks):
+        return jax.vmap(
+            lambda seed: SIM._scan_sim(prog, p_blocks, seed, sim, mechanism)
+        )(seeds)
+    return jax.vmap(per_prog)(progs, p_logical)
+
+
+def run_suite(programs: Union[Dict[str, Program], Sequence[Program]],
+              sim: SimConfig, mechanisms: Sequence[str] = MECHANISMS,
+              seeds: Optional[Sequence[int]] = None
+              ) -> Dict[str, Dict[str, Dict[str, np.ndarray]]]:
+    """Batched-sweep counterpart of calling ``run_sim`` in nested loops.
+
+    Returns ``{workload_name: {mechanism: trace}}`` with the same per-trace
+    arrays ``run_sim`` produces. If ``seeds`` is given, every trace array
+    gains a leading seed axis; otherwise ``sim.seed`` is used and the axis
+    is squeezed away.
+    """
+    if isinstance(programs, dict):
+        names = list(programs)
+        progs = [programs[n] for n in names]
+    else:
+        progs = list(programs)
+        names = [p.name for p in progs]
+    assert progs, "run_suite needs at least one program"
+    for m in mechanisms:
+        assert m in MECHANISMS, m
+    assert sim.n_cu % sim.cus_per_domain == 0
+    squeeze_seed = seeds is None
+    seed_arr = jnp.asarray([sim.seed] if seeds is None else list(seeds),
+                           jnp.float32)
+    stacked, p_logical = _stack_programs(progs)
+
+    fork_mechs = [m for m in mechanisms
+                  if m not in _STATIC_MECHS and m != "oracle"]
+    by_mech: Dict[str, Dict[str, jnp.ndarray]] = {}
+    if fork_mechs:
+        ids = jnp.asarray([SIM.FORK_MECH_IDS[m] for m in fork_mechs],
+                          jnp.int32)
+        ys = _suite_forks(stacked, p_logical, seed_arr, ids, sim)
+        for j, m in enumerate(fork_mechs):
+            by_mech[m] = {k: v[:, :, j] for k, v in ys.items()}
+    for m in mechanisms:
+        if m in _STATIC_MECHS or m == "oracle":
+            by_mech[m] = _suite_per_mech(stacked, p_logical, seed_arr, sim, m)
+
+    out: Dict[str, Dict[str, Dict[str, np.ndarray]]] = {}
+    for w, name in enumerate(names):
+        out[name] = {}
+        for m in mechanisms:
+            tr = {k: np.asarray(v[w, 0] if squeeze_seed else v[w])
+                  for k, v in by_mech[m].items()}
+            if m not in ("pcstall", "accpc"):
+                # match run_sim's trace schema: hit_rate is a PC-mechanism
+                # telemetry channel (the traced family computes it for all)
+                tr.pop("hit_rate", None)
+            out[name][m] = tr
+    return out
+
+
+def suite_metrics(programs: Union[Dict[str, Program], Sequence[Program]],
+                  sim: SimConfig, mechanisms: Sequence[str] = MECHANISMS,
+                  n: int = 2,
+                  traces: Optional[Dict] = None
+                  ) -> Dict[str, Dict[str, Dict[str, float]]]:
+    """Batched counterpart of ``run_workload`` over a whole suite: ED^nP
+    normalized to static17 per workload. Pass ``traces`` (a ``run_suite``
+    result that includes static17) to reuse already-computed traces."""
+    mechs = tuple(mechanisms)
+    if traces is None:
+        need = mechs if "static17" in mechs else ("static17",) + mechs
+        traces = run_suite(programs, sim, need)
+    out: Dict[str, Dict[str, Dict[str, float]]] = {}
+    for name, trs in traces.items():
+        base = trs["static17"]
+        budget = 0.9 * base["work"].sum()
+        E0, D0, M0 = ednp(base, budget, sim.epoch_us, n)
+        out[name] = {}
+        for m in mechs:
+            E, D, M = ednp(trs[m], budget, sim.epoch_us, n)
+            out[name][m] = {
+                "accuracy": prediction_accuracy(trs[m])
+                if m not in _STATIC_MECHS else float("nan"),
+                "E": E, "D": D, "ednp": M, "ednp_norm": M / M0,
+                "energy_norm": E / E0, "delay_norm": D / D0,
+            }
+    return out

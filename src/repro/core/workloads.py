@@ -46,6 +46,21 @@ class Program:
         return self.i0_rate.shape[0]
 
 
+# Register Program as a pytree so it can flow through jit/vmap/scan — the
+# batched sweep layer (repro.core.sweep) vmaps run_sim across stacked
+# Programs, and the jit-cached run_sim entry point takes Program as a traced
+# argument. The name is deliberately NOT aux data: jit cache keys include
+# the treedef, so a name in the aux would force a re-trace per workload and
+# defeat the shape-keyed executable cache. Programs reconstructed inside a
+# transform therefore carry an empty name (nothing traced reads it).
+jax.tree_util.register_pytree_node(
+    Program,
+    lambda p: ((p.i0_rate, p.sens_rate, p.mem_frac,
+                p.cum_i0, p.cum_sens, p.cum_mem), None),
+    lambda _, ch: Program("", *ch),
+)
+
+
 def _finalize(name, i0, sens, mem) -> Program:
     i0 = jnp.asarray(i0, jnp.float32)
     sens = jnp.asarray(sens, jnp.float32)

@@ -10,7 +10,8 @@ from typing import Dict, Optional
 import numpy as np
 
 from repro.configs.base import ModelConfig, ShapeConfig
-from repro.core.simulate import SimConfig, ednp, prediction_accuracy, run_sim
+from repro.core.simulate import SimConfig, ednp, prediction_accuracy
+from repro.core.sweep import run_suite
 from repro.core.workloads import Program
 from repro.dvfs_runtime.telemetry import arch_program
 
@@ -32,9 +33,11 @@ class DVFSManager:
         self.step_times.append(seconds)
 
     def report(self) -> Dict[str, float]:
-        """Run PCSTALL vs static-1.7 on this job's phase program."""
-        base = run_sim(self.program, self.sim, "static17")
-        tr = run_sim(self.program, self.sim, "pcstall")
+        """Run PCSTALL vs static-1.7 on this job's phase program (one
+        batched suite dispatch; jit-cached across repeated reports)."""
+        traces = run_suite([self.program], self.sim, ("static17", "pcstall"))
+        trs = traces[self.program.name]
+        base, tr = trs["static17"], trs["pcstall"]
         budget = 0.9 * base["work"].sum()
         E0, D0, M0 = ednp(base, budget, self.sim.epoch_us)
         E, D, M = ednp(tr, budget, self.sim.epoch_us)

@@ -16,12 +16,22 @@ from repro.kernels import flash_attention as _fa
 from repro.kernels import pc_table as _pt
 from repro.kernels import rwkv_chunk as _rc
 
-_INTERPRET = True
+# None = resolve from the actual backend lazily at first call (interpreted
+# everywhere except real TPUs) — probing jax.default_backend() at import
+# time would initialize backends before callers can configure jax
+# (distributed.initialize, platform overrides). set_backend() overrides.
+_INTERPRET: Optional[bool] = None
 
 
 def set_backend(backend: str) -> None:
     global _INTERPRET
     _INTERPRET = backend != "tpu"
+
+
+def _interpret() -> bool:
+    if _INTERPRET is None:
+        return jax.default_backend() != "tpu"
+    return _INTERPRET
 
 
 @functools.partial(jax.jit, static_argnames=("causal", "window", "blk_q", "blk_k"))
@@ -37,16 +47,25 @@ def flash_attention(q: jax.Array, k: jax.Array, v: jax.Array, *,
     vb = jnp.repeat(v.transpose(0, 2, 1, 3), rep, axis=1).reshape(B * H, S, hd)
     out = _fa.flash_attention_bhsd(qb, kb, vb, causal=causal, window=window,
                                    blk_q=blk_q, blk_k=blk_k,
-                                   interpret=_INTERPRET)
+                                   interpret=_interpret())
     return out.reshape(B, H, S, hd).transpose(0, 2, 1, 3).astype(q.dtype)
 
 
-@jax.jit
-def pc_table_predict(tbl_i0, tbl_sens, tbl_cnt, tid, idx, fb_i0, fb_sens, freqs):
+@functools.partial(jax.jit, static_argnames=("epoch_us", "cap_per_ghz"))
+def pc_table_predict(tbl_i0, tbl_sens, tbl_cnt, tid, idx, fb_i0, fb_sens,
+                     freqs, *, epoch_us: float = 1.0, cap_per_ghz: float = 0.0):
     return _pt.pc_table_predict(tbl_i0, tbl_sens, tbl_cnt, tid, idx,
-                                fb_i0, fb_sens, freqs, interpret=_INTERPRET)
+                                fb_i0, fb_sens, freqs, epoch_us=epoch_us,
+                                cap_per_ghz=cap_per_ghz, interpret=_interpret())
+
+
+@functools.partial(jax.jit, static_argnames=("ema",))
+def pc_table_update(tbl_i0, tbl_sens, tbl_cnt, idx, i0, sens, *,
+                    ema: float = 0.5):
+    return _pt.pc_table_update(tbl_i0, tbl_sens, tbl_cnt, idx, i0, sens,
+                               ema=ema, interpret=_interpret())
 
 
 @functools.partial(jax.jit, static_argnames=("chunk",))
 def rwkv_chunked(r, k, v, w, u, *, chunk: int = 128):
-    return _rc.rwkv_chunked(r, k, v, w, u, chunk=chunk, interpret=_INTERPRET)
+    return _rc.rwkv_chunked(r, k, v, w, u, chunk=chunk, interpret=_interpret())

@@ -1,27 +1,40 @@
-"""PCSTALL PC-table predict kernel (Pallas).
+"""PCSTALL PC-table kernels (Pallas): fused predict and fused update.
 
-The paper's lookup path (§4.4, Fig 12): each wavefront indexes the table
-with its next starting PC, per-WF (i0, sens) estimates are summed to the
-CU/domain level, and I(f) is evaluated at every V/f state. On TPU this is
-the per-step telemetry hot path of the DVFS runtime: one fused
-gather + reduce + small matmul per V/f domain, entirely VMEM-resident
-(the table is 128 entries — Table I: ~328 B/instance).
+Predict (paper §4.4, Fig 12): each wavefront indexes the table with its next
+starting PC, per-WF (i0, sens) estimates are summed to the CU/domain level,
+and I(f) is evaluated at every V/f state and clipped to the CU issue
+capacity — the whole lookup -> reduce -> evaluate -> clip chain of
+``simulate``'s ``_predict_instr`` path in one VMEM-resident kernel (the
+table is 128 entries — Table I: ~328 B/instance). Grid: one program per CU.
 
-Grid: one program per CU. Blocks: the CU's WF indices + fallbacks in VMEM,
-its table in VMEM, output row (n_freq,) in VMEM.
+Update: the epoch's per-WF (i0, sens) estimates are scattered back keyed by
+starting PC. Pallas has no native scatter, so the kernel builds the per-slot
+sums as a one-hot masked reduction over the table's wavefronts (N x E
+compare + sum — N = cus_per_table * WF is a few thousand elements, VMEM
+resident), then applies the collision-average + EMA blend in place. Grid:
+one program per table instance.
+
+``interpret`` defaults to the backend: interpreted on CPU, compiled on TPU.
 """
 from __future__ import annotations
 
 import functools
+from typing import Optional, Tuple
 
 import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
-from jax.experimental.pallas import tpu as pltpu
+
+
+def _resolve_interpret(interpret: Optional[bool]) -> bool:
+    if interpret is None:
+        return jax.default_backend() != "tpu"
+    return interpret
 
 
 def _pc_table_kernel(tbl_i0_ref, tbl_sens_ref, tbl_cnt_ref, idx_ref,
-                     fb_i0_ref, fb_sens_ref, freqs_ref, out_ref, *, n_wf: int):
+                     fb_i0_ref, fb_sens_ref, freqs_ref, out_ref, *,
+                     n_wf: int, epoch_us: float, cap_per_ghz: float):
     idx = idx_ref[0]                    # (WF,) int32 slots into this table
     ti0 = tbl_i0_ref[0]                 # (E,)
     tse = tbl_sens_ref[0]
@@ -33,22 +46,28 @@ def _pc_table_kernel(tbl_i0_ref, tbl_sens_ref, tbl_cnt_ref, idx_ref,
     sens = jnp.where(hit, sens, fb_sens_ref[0])
     i0_sum = jnp.sum(i0)
     sens_sum = jnp.sum(sens)
-    out_ref[0] = i0_sum + sens_sum * freqs_ref[...]
+    f = freqs_ref[...]
+    ipred = (i0_sum + sens_sum * f) * epoch_us
+    if cap_per_ghz > 0.0:               # fused capacity clip (I <= cap*f*T*WF)
+        ipred = jnp.clip(ipred, 0.0, cap_per_ghz * f * epoch_us * n_wf)
+    out_ref[0] = ipred
 
 
 def pc_table_predict(tbl_i0: jax.Array, tbl_sens: jax.Array,
                      tbl_cnt: jax.Array, tid: jax.Array, idx: jax.Array,
                      fb_i0: jax.Array, fb_sens: jax.Array, freqs: jax.Array,
-                     *, interpret: bool = True) -> jax.Array:
+                     *, epoch_us: float = 1.0, cap_per_ghz: float = 0.0,
+                     interpret: Optional[bool] = None) -> jax.Array:
     """tbl_* (T,E); tid (CU,) table id per CU; idx/fb_* (CU,WF); freqs (F,).
-    Returns I_pred (CU,F)."""
+    Returns I_pred (CU,F) = clip((sum_wf i0 + sum_wf sens * f) * epoch_us),
+    capacity-clipped when ``cap_per_ghz > 0`` (cap = cap*f*epoch_us*WF)."""
     CU, WF = idx.shape
     T, E = tbl_i0.shape
     F = freqs.shape[0]
-    kernel = functools.partial(_pc_table_kernel, n_wf=WF)
-    # expand tables per CU via the tid indirection in the index_map
-    tid_host = tid  # static under jit? -> use gather outside for generality
-    tbl_i0_cu = tbl_i0[tid]     # (CU,E) — tiny (128 floats/CU)
+    kernel = functools.partial(_pc_table_kernel, n_wf=WF, epoch_us=epoch_us,
+                               cap_per_ghz=cap_per_ghz)
+    # expand tables per CU via the tid gather (tiny: 128 floats/CU)
+    tbl_i0_cu = tbl_i0[tid]     # (CU,E)
     tbl_sens_cu = tbl_sens[tid]
     tbl_cnt_cu = tbl_cnt[tid]
     return pl.pallas_call(
@@ -65,8 +84,68 @@ def pc_table_predict(tbl_i0: jax.Array, tbl_sens: jax.Array,
         ],
         out_specs=pl.BlockSpec((1, F), lambda c: (c, 0)),
         out_shape=jax.ShapeDtypeStruct((CU, F), jnp.float32),
-        interpret=interpret,
+        interpret=_resolve_interpret(interpret),
     )(tbl_i0_cu.astype(jnp.float32), tbl_sens_cu.astype(jnp.float32),
       tbl_cnt_cu.astype(jnp.float32), idx.astype(jnp.int32),
       fb_i0.astype(jnp.float32), fb_sens.astype(jnp.float32),
       freqs.astype(jnp.float32))
+
+
+def _pc_table_update_kernel(tbl_i0_ref, tbl_sens_ref, tbl_cnt_ref, idx_ref,
+                            i0_ref, sens_ref, out_i0_ref, out_sens_ref,
+                            out_cnt_ref, *, entries: int, ema: float):
+    idx = idx_ref[0]                                    # (N,) slots
+    # scatter-free per-slot accumulation: one-hot mask (N,E) + column sums
+    slots = jax.lax.broadcasted_iota(jnp.int32, (idx.shape[0], entries), 1)
+    onehot = (idx[:, None] == slots).astype(jnp.float32)
+    cnt = onehot.sum(axis=0)                            # (E,) updates/slot
+    isum = (onehot * i0_ref[0][:, None]).sum(axis=0)
+    ssum = (onehot * sens_ref[0][:, None]).sum(axis=0)
+    inew = jnp.where(cnt > 0, isum / jnp.maximum(cnt, 1.0), 0.0)
+    snew = jnp.where(cnt > 0, ssum / jnp.maximum(cnt, 1.0), 0.0)
+    tcnt = tbl_cnt_ref[0]
+    fresh = (tcnt == 0.0) & (cnt > 0)
+    blend = jnp.where(fresh, 1.0, jnp.where(cnt > 0, ema, 0.0))
+    out_i0_ref[0] = tbl_i0_ref[0] * (1.0 - blend) + inew * blend
+    out_sens_ref[0] = tbl_sens_ref[0] * (1.0 - blend) + snew * blend
+    out_cnt_ref[0] = tcnt + cnt
+
+
+def pc_table_update(tbl_i0: jax.Array, tbl_sens: jax.Array,
+                    tbl_cnt: jax.Array, idx: jax.Array, i0: jax.Array,
+                    sens: jax.Array, *, ema: float = 0.5,
+                    interpret: Optional[bool] = None
+                    ) -> Tuple[jax.Array, jax.Array, jax.Array]:
+    """Fused PC-table update. tbl_* (T,E); idx/i0/sens (T,N) grouped per
+    table instance (N = wavefronts feeding that table, e.g.
+    cus_per_table * WF with the contiguous CU->table mapping).
+
+    Within-epoch collisions are averaged, then EMA-blended into the table
+    (first touch replaces). Returns the new (i0, sens, count) arrays —
+    semantics identical to ``predictors.table_update``."""
+    T, E = tbl_i0.shape
+    Tn, N = idx.shape
+    assert Tn == T, (Tn, T)
+    kernel = functools.partial(_pc_table_update_kernel, entries=E, ema=ema)
+    out = jax.ShapeDtypeStruct((T, E), jnp.float32)
+    return pl.pallas_call(
+        kernel,
+        grid=(T,),
+        in_specs=[
+            pl.BlockSpec((1, E), lambda t: (t, 0)),
+            pl.BlockSpec((1, E), lambda t: (t, 0)),
+            pl.BlockSpec((1, E), lambda t: (t, 0)),
+            pl.BlockSpec((1, N), lambda t: (t, 0)),
+            pl.BlockSpec((1, N), lambda t: (t, 0)),
+            pl.BlockSpec((1, N), lambda t: (t, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, E), lambda t: (t, 0)),
+            pl.BlockSpec((1, E), lambda t: (t, 0)),
+            pl.BlockSpec((1, E), lambda t: (t, 0)),
+        ],
+        out_shape=[out, out, out],
+        interpret=_resolve_interpret(interpret),
+    )(tbl_i0.astype(jnp.float32), tbl_sens.astype(jnp.float32),
+      tbl_cnt.astype(jnp.float32), idx.astype(jnp.int32),
+      i0.astype(jnp.float32), sens.astype(jnp.float32))

@@ -28,17 +28,43 @@ def attention_ref(q: jax.Array, k: jax.Array, v: jax.Array, *,
 def pc_table_predict_ref(table_i0: jax.Array, table_sens: jax.Array,
                          table_count: jax.Array, tid: jax.Array,
                          idx: jax.Array, fb_i0: jax.Array, fb_sens: jax.Array,
-                         freqs: jax.Array) -> jax.Array:
-    """PCSTALL lookup + per-CU aggregation + I(f) evaluation.
-    table_* (T,E); tid (CU,); idx/fb_* (CU,WF); freqs (F,).
-    Returns I_pred (CU,F) = sum_wf (i0 + sens*f)."""
+                         freqs: jax.Array, *, epoch_us: float = 1.0,
+                         cap_per_ghz: float = 0.0) -> jax.Array:
+    """PCSTALL lookup + per-CU aggregation + I(f) evaluation (+ optional
+    capacity clip). table_* (T,E); tid (CU,); idx/fb_* (CU,WF); freqs (F,).
+    Returns I_pred (CU,F) = clip(sum_wf (i0 + sens*f) * epoch_us)."""
     i0 = table_i0[tid[:, None], idx]
     sens = table_sens[tid[:, None], idx]
     hit = table_count[tid[:, None], idx] > 0
     i0 = jnp.where(hit, i0, fb_i0)
     sens = jnp.where(hit, sens, fb_sens)
-    return (i0.sum(-1)[:, None]
-            + sens.sum(-1)[:, None] * freqs[None, :]).astype(jnp.float32)
+    n_wf = idx.shape[1]
+    ipred = (i0.sum(-1)[:, None]
+             + sens.sum(-1)[:, None] * freqs[None, :]) * epoch_us
+    if cap_per_ghz > 0.0:
+        ipred = jnp.clip(ipred, 0.0,
+                         cap_per_ghz * freqs[None, :] * epoch_us * n_wf)
+    return ipred.astype(jnp.float32)
+
+
+def pc_table_update_ref(table_i0: jax.Array, table_sens: jax.Array,
+                        table_count: jax.Array, idx: jax.Array,
+                        i0: jax.Array, sens: jax.Array, *, ema: float = 0.5):
+    """Oracle for the fused update kernel: collision-averaged scatter + EMA
+    blend, per table instance. table_* (T,E); idx/i0/sens (T,N)."""
+    T, E = table_i0.shape
+    onehot = (idx[..., None] == jnp.arange(E)[None, None, :]) \
+        .astype(jnp.float32)                                # (T,N,E)
+    cnt = onehot.sum(1)
+    isum = (onehot * i0[..., None]).sum(1)
+    ssum = (onehot * sens[..., None]).sum(1)
+    inew = jnp.where(cnt > 0, isum / jnp.maximum(cnt, 1.0), 0.0)
+    snew = jnp.where(cnt > 0, ssum / jnp.maximum(cnt, 1.0), 0.0)
+    fresh = (table_count == 0) & (cnt > 0)
+    blend = jnp.where(fresh, 1.0, jnp.where(cnt > 0, ema, 0.0))
+    return (table_i0 * (1 - blend) + inew * blend,
+            table_sens * (1 - blend) + snew * blend,
+            table_count + cnt)
 
 
 def rwkv_chunk_ref(r: jax.Array, k: jax.Array, v: jax.Array, w: jax.Array,

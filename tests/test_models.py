@@ -81,13 +81,17 @@ def test_decode_matches_prefill_next_token():
                                rtol=2e-2, atol=2e-2)
 
 
+@pytest.mark.slow
 def test_loss_decreases_quick_train():
+    # 25 steps @ 5e-3 left the MoE arch on its warmup plateau (~0.17 drop);
+    # 40 steps @ 1e-2 clears it with ~0.55 of headroom over the 0.3 bar.
     cfg = get_smoke_config("granite-moe-1b-a400m")
-    tc = TrainConfig(lr=5e-3, total_steps=25, warmup_steps=3)
+    n_steps = 40
+    tc = TrainConfig(lr=1e-2, total_steps=n_steps, warmup_steps=3)
     state = init_state(cfg, tc, jax.random.key(5))
     step = jax.jit(make_train_step(cfg, tc), donate_argnums=(0,))
     losses = []
-    for i in range(25):
+    for i in range(n_steps):
         batch = make_batch(cfg, SHAPE, i)
         state, m = step(state, batch)
         losses.append(float(m["loss"]))

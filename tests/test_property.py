@@ -1,7 +1,15 @@
-"""Hypothesis property tests on system invariants."""
+"""Hypothesis property tests on system invariants.
+
+Skipped wholesale when ``hypothesis`` is not installed (the container image
+does not ship it); the invariants are also exercised deterministically by
+tests/test_core.py and tests/test_sweep.py.
+"""
 import jax
 import jax.numpy as jnp
 import numpy as np
+import pytest
+
+hypothesis = pytest.importorskip("hypothesis")
 from hypothesis import given, settings, strategies as st
 
 from repro.core import power as PWR

@@ -1,0 +1,170 @@
+"""Equivalence tests for the batched sweep layer and the fused Pallas
+PC-table kernels: the batched/compiled fast paths must reproduce the serial
+reference paths bitwise (or to f32-roundoff tolerance)."""
+import dataclasses
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import predictors as PRED
+from repro.core.simulate import SimConfig, _predict_instr, run_sim
+from repro.core.sweep import pad_program, run_suite, suite_metrics
+from repro.core.workloads import get_workload, make_program
+
+RNG = np.random.default_rng(7)
+SIM = SimConfig(n_cu=16, n_wf=12, n_epochs=60)
+WORKLOADS = ("comd", "xsbench")
+# covers all three families: static (fork-free), reactive CU, PC-table
+MECHS = ("static17", "crisp", "pcstall")
+
+
+@pytest.fixture(scope="module")
+def progs():
+    return {w: get_workload(w) for w in WORKLOADS}
+
+
+@pytest.fixture(scope="module")
+def suite(progs):
+    return run_suite(progs, SIM, MECHS)
+
+
+@pytest.mark.parametrize("mech", MECHS)
+@pytest.mark.parametrize("wl", WORKLOADS)
+def test_suite_matches_serial(progs, suite, wl, mech):
+    """Batched run_suite == serial run_sim, within 1e-5 (empirically
+    bitwise: batching preserves per-row reduction order)."""
+    ser = run_sim(progs[wl], SIM, mech)
+    bat = suite[wl][mech]
+    assert set(ser) == set(bat)
+    for k in ser:
+        np.testing.assert_allclose(bat[k], ser[k], rtol=1e-5, atol=1e-5,
+                                   err_msg=f"{wl}/{mech}/{k}")
+
+
+def test_suite_matches_serial_oracle_and_accpc(progs):
+    """oracle (forks-first path) and accpc (fork-derived table) too."""
+    suite = run_suite(progs, SIM, ("accpc", "oracle"))
+    for wl in WORKLOADS:
+        for mech in ("accpc", "oracle"):
+            ser = run_sim(progs[wl], SIM, mech)
+            for k in ser:
+                np.testing.assert_allclose(suite[wl][mech][k], ser[k],
+                                           rtol=1e-5, atol=1e-5,
+                                           err_msg=f"{wl}/{mech}/{k}")
+
+
+def test_padded_program_equivalence():
+    """Mixed block counts: padding must not change the wrapped window
+    semantics of the shorter program."""
+    small = make_program("small", "phased", 5, P=256)
+    big = get_workload("comd")  # P=1024
+    suite = run_suite([small, big], SIM, ("pcstall",))
+    for prog in (small, big):
+        ser = run_sim(prog, SIM, "pcstall")
+        for k in ser:
+            np.testing.assert_allclose(suite[prog.name]["pcstall"][k],
+                                       ser[k], rtol=1e-5, atol=1e-5,
+                                       err_msg=f"{prog.name}/{k}")
+
+
+def test_pad_program_preserves_window_averages():
+    prog = make_program("p", "mixed", 3, P=128)
+    padded = pad_program(prog, 512)
+    # wrapped prefix sums agree up to index 2P (the max window extent)
+    np.testing.assert_allclose(np.asarray(padded.cum_i0[:257]),
+                               np.asarray(prog.cum_i0), rtol=1e-6)
+    assert padded.n_blocks == 512
+
+
+def test_seed_axis(progs):
+    out = run_suite(progs, SIM, ("pcstall",), seeds=[0, 3])
+    tr = out["comd"]["pcstall"]
+    assert tr["work"].shape[0] == 2
+    ser = run_sim(progs["comd"], dataclasses.replace(SIM, seed=3), "pcstall")
+    np.testing.assert_allclose(tr["work"][1], ser["work"],
+                               rtol=1e-5, atol=1e-5)
+    # different seeds produce different noise realizations
+    assert not np.allclose(tr["work"][0], tr["work"][1])
+
+
+def test_suite_metrics_matches_run_workload(progs):
+    from repro.core.simulate import run_workload
+    got = suite_metrics(progs, SIM, MECHS, n=2)
+    for wl in WORKLOADS:
+        want = run_workload(progs[wl], SIM, mechanisms=MECHS, n=2)
+        for m in MECHS:
+            for key in ("E", "D", "ednp_norm", "energy_norm"):
+                np.testing.assert_allclose(got[wl][m][key], want[m][key],
+                                           rtol=1e-5,
+                                           err_msg=f"{wl}/{m}/{key}")
+
+
+# ---------------------------------------------------------------------------
+# Pallas kernel equivalence
+# ---------------------------------------------------------------------------
+
+
+def _rand_table(T, E, CU, WF):
+    ti0 = jnp.asarray(RNG.uniform(0, 60, (T, E)), jnp.float32)
+    tse = jnp.asarray(RNG.uniform(0, 40, (T, E)), jnp.float32)
+    tcnt = jnp.asarray((RNG.uniform(size=(T, E)) > 0.4).astype(np.float32))
+    tid = jnp.asarray(np.arange(CU) // max(CU // T, 1), jnp.int32)
+    idx = jnp.asarray(RNG.integers(0, E, (CU, WF)), jnp.int32)
+    fb0 = jnp.asarray(RNG.uniform(0, 60, (CU, WF)), jnp.float32)
+    fbs = jnp.asarray(RNG.uniform(0, 40, (CU, WF)), jnp.float32)
+    return ti0, tse, tcnt, tid, idx, fb0, fbs
+
+
+@pytest.mark.parametrize("T,E,CU,WF", [(4, 64, 8, 16), (8, 128, 16, 40)])
+def test_pc_table_predict_matches_lookup_plus_predict_instr(T, E, CU, WF):
+    """Fused kernel == predictors.table_lookup + simulate._predict_instr."""
+    from repro.kernels import ops
+    ti0, tse, tcnt, tid, idx, fb0, fbs = _rand_table(T, E, CU, WF)
+    sim = SimConfig(n_cu=CU, n_wf=WF)
+    from repro.core import power as PWR
+    out = ops.pc_table_predict(ti0, tse, tcnt, tid, idx, fb0, fbs,
+                               PWR.FREQS_GHZ, epoch_us=sim.epoch_us,
+                               cap_per_ghz=sim.cap_per_ghz)
+    i0w, sw, _ = PRED.table_lookup(PRED.PCTable(ti0, tse, tcnt), tid, idx,
+                                   fb0, fbs)
+    want = _predict_instr(i0w.sum(-1), sw.sum(-1), sim)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(want),
+                               rtol=1e-4, atol=1e-2)
+
+
+@pytest.mark.parametrize("T,E,CU,WF", [(4, 64, 8, 16), (8, 128, 16, 40)])
+def test_pc_table_update_matches_predictors(T, E, CU, WF):
+    """Fused update kernel == predictors.table_update (contiguous tid)."""
+    from repro.kernels import ops, ref
+    ti0, tse, tcnt, tid, idx, fb0, fbs = _rand_table(T, E, CU, WF)
+    N = (CU // T) * WF
+    ui, us_, uc = ops.pc_table_update(ti0, tse, tcnt, idx.reshape(T, N),
+                                      fb0.reshape(T, N), fbs.reshape(T, N),
+                                      ema=0.5)
+    want = PRED.table_update(PRED.PCTable(ti0, tse, tcnt), tid, idx,
+                             fb0, fbs, 0.5)
+    np.testing.assert_allclose(np.asarray(ui), np.asarray(want.i0),
+                               rtol=1e-4, atol=1e-4)
+    np.testing.assert_allclose(np.asarray(us_), np.asarray(want.sens),
+                               rtol=1e-4, atol=1e-4)
+    np.testing.assert_allclose(np.asarray(uc), np.asarray(want.count),
+                               rtol=1e-6, atol=0)
+    # and the jnp oracle agrees exactly
+    ri, rs, rc = ref.pc_table_update_ref(ti0, tse, tcnt, idx.reshape(T, N),
+                                         fb0.reshape(T, N),
+                                         fbs.reshape(T, N), ema=0.5)
+    np.testing.assert_array_equal(np.asarray(ui), np.asarray(ri))
+    np.testing.assert_array_equal(np.asarray(us_), np.asarray(rs))
+
+
+def test_run_sim_use_pallas_matches_jnp():
+    """The whole pcstall/accpc predict+update hot path through the fused
+    Pallas kernels reproduces the jnp path."""
+    prog = get_workload("comd")
+    for mech in ("pcstall", "accpc"):
+        a = run_sim(prog, SIM, mech)
+        b = run_sim(prog, dataclasses.replace(SIM, use_pallas=True), mech)
+        for k in a:
+            np.testing.assert_allclose(b[k], a[k], rtol=1e-4, atol=1e-4,
+                                       err_msg=f"{mech}/{k}")
