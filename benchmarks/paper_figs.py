@@ -1,8 +1,13 @@
 """One function per paper table/figure. Results cached to experiments/results/.
 
 All multi-(workload x mechanism) figures dispatch through the batched sweep
-layer (``repro.core.sweep.run_suite``): one compiled executable per mechanism
-family per SimConfig instead of one trace per (workload, mechanism) pair.
+layer: single-point figures through ``run_suite`` (one compiled executable
+per mechanism family), and every figure whose grid spans traced SimConfig
+axes — epoch granularity (fig01/07), objective (fig18a) — through
+``run_grid``, which runs the whole grid as one device-sharded executable
+family instead of one dispatch per grid point. Only fig18b still loops in
+Python: its V/f-domain-granularity axis reshapes arrays and so is a static
+(shape) axis by design.
 
 Figures:
   fig01a  ED2P opportunity vs DVFS epoch duration
@@ -20,6 +25,7 @@ Figures:
 """
 from __future__ import annotations
 
+import dataclasses
 import json
 from pathlib import Path
 from typing import Dict, List
@@ -28,7 +34,7 @@ import numpy as np
 
 from repro.core.simulate import (SimConfig, ednp, prediction_accuracy,
                                  run_sim)
-from repro.core.sweep import run_suite, suite_metrics
+from repro.core.sweep import run_grid, run_suite, suite_metrics
 from repro.core.workloads import get_workload
 
 RESULTS = Path(__file__).resolve().parents[1] / "experiments" / "results"
@@ -67,8 +73,9 @@ def fig14_accuracy() -> Dict:
     """Prediction accuracy by mechanism (paper Fig 14)."""
     def run():
         mechs = tuple(m for m in CORE_MECHS if not m.startswith("static"))
-        traces = run_suite(_progs(WORKLOADS_FAST), SimConfig(n_epochs=N_EPOCHS),
-                           mechs)
+        # single-point grid: same sharded dispatch path as the sweeps
+        traces = run_grid(_progs(WORKLOADS_FAST), SimConfig(n_epochs=N_EPOCHS),
+                          {"epoch_us": [1.0]}, mechs)[(1.0,)]
         out = {wl: {m: prediction_accuracy(trs[m]) for m in mechs}
                for wl, trs in traces.items()}
         out["MEAN"] = {m: float(np.mean([out[w][m] for w in WORKLOADS_FAST]))
@@ -80,8 +87,10 @@ def fig14_accuracy() -> Dict:
 def fig15_ed2p() -> Dict:
     """ED2P by workload normalized to static 1.7 GHz (paper Fig 15)."""
     def run():
-        r = suite_metrics(_progs(WORKLOADS_FAST), SimConfig(n_epochs=N_EPOCHS),
-                          FAST_MECHS, n=2)
+        sim = SimConfig(n_epochs=N_EPOCHS)
+        traces = run_grid(_progs(WORKLOADS_FAST), sim,
+                          {"epoch_us": [1.0]}, FAST_MECHS)[(1.0,)]
+        r = suite_metrics(None, sim, FAST_MECHS, n=2, traces=traces)
         out = {wl: {m: float(d["ednp_norm"]) for m, d in r[wl].items()}
                for wl in WORKLOADS_FAST}
         out["GEOMEAN"] = {m: float(np.exp(np.mean([np.log(out[w][m])
@@ -93,19 +102,26 @@ def fig15_ed2p() -> Dict:
 def fig01_epoch_sweep() -> Dict:
     """ED2P opportunity + accuracy vs epoch duration (paper Fig 1a/1b, 17).
 
-    One batched suite per epoch duration; the same traces feed both the
-    n=2 (ED2P) and n=1 (EDP) metrics."""
+    The whole epoch-granularity grid (with its coupled logical epoch
+    counts) runs as one ``run_grid`` executable family; the same traces
+    feed both the n=2 (ED2P) and n=1 (EDP) metrics."""
     def run():
         mechs = ("static17", "crisp", "pcstall", "oracle")
         wls = ["comd", "hacc", "lulesh", "dgemm", "xsbench", "BwdBN"]
+        cfg = SimConfig()
+        points = [{"epoch_us": T,
+                   "n_epochs": max(200, int(1200 / max(T / 4, 1)))}
+                  for T in (1.0, 10.0, 50.0, 100.0)]
+        # n_epochs is strongly coupled to epoch_us here (1200 at 1us vs
+        # 200 at 100us): bound the masked-tail waste by bucketing
+        grid = run_grid(_progs(wls), cfg, points, mechs, max_mask_ratio=2.0)
         out = {}
-        for T in (1.0, 10.0, 50.0, 100.0):
-            n_ep = max(200, int(1200 / max(T / 4, 1)))
-            sim = SimConfig(epoch_us=T, n_epochs=n_ep)
-            traces = run_suite(_progs(wls), sim, mechs)
+        for pt in points:
+            sim = dataclasses.replace(cfg, **pt)
+            traces = grid[(pt["epoch_us"], pt["n_epochs"])]
             r2 = suite_metrics(None, sim, mechs, n=2, traces=traces)
             r1 = suite_metrics(None, sim, mechs, n=1, traces=traces)
-            out[str(T)] = {
+            out[str(pt["epoch_us"])] = {
                 "ed2p": {m: float(np.exp(np.mean([np.log(r2[w][m]["ednp_norm"])
                          for w in wls]))) for m in mechs},
                 "edp": {m: float(np.exp(np.mean([np.log(r1[w][m]["ednp_norm"])
@@ -128,11 +144,12 @@ def fig07_variation() -> Dict:
             out["per_workload_1us"][wl] = _consec_var(
                 traces[wl]["accreac"]["true_sens"][50:])
         wls = ["comd", "hacc", "dgemm", "xsbench"]
-        for T in (1.0, 10.0, 50.0, 100.0):
-            tr = run_suite(_progs(wls), SimConfig(epoch_us=T, n_epochs=300),
-                           ("accreac",))
+        Ts = (1.0, 10.0, 50.0, 100.0)
+        grid = run_grid(_progs(wls), SimConfig(n_epochs=300),
+                        {"epoch_us": list(Ts)}, ("accreac",))
+        for T in Ts:
             out["epoch_sweep"][str(T)] = float(np.mean(
-                [_consec_var(tr[w]["accreac"]["true_sens"][30:])
+                [_consec_var(grid[(T,)][w]["accreac"]["true_sens"][30:])
                  for w in wls]))
         return out
     return _cache("fig07_variation", run)
@@ -199,19 +216,26 @@ def fig18a_energy_caps() -> Dict:
         mechs = ("crisp", "pcstall", "accpc", "oracle")
         wls = ["comd", "hacc", "lulesh", "dgemm", "xsbench", "BwdBN"]
         progs = _progs(wls)
-        bases = run_suite(progs, SimConfig(n_epochs=N_EPOCHS), ("static22",))
+        cfg = SimConfig(n_epochs=N_EPOCHS)
+        # baseline through the same grid dispatch family as the traces it
+        # is divided against (cross-family comparisons can pick up last-ulp
+        # fusion noise — see sweep.py's module docstring)
+        bases = run_grid(progs, cfg, {"epoch_us": [cfg.epoch_us]},
+                         ("static22",))[(cfg.epoch_us,)]
+        # both perf-cap objectives in one grid executable family
+        grid = run_grid(progs, cfg,
+                        {"objective": ["perfcap05", "perfcap10"]}, mechs)
         out = {}
         for obj in ("perfcap05", "perfcap10"):
-            sim = SimConfig(n_epochs=N_EPOCHS, objective=obj)
-            traces = run_suite(progs, sim, mechs)
+            traces = grid[(obj,)]
             sub = {}
             for m in mechs:
                 savings = []
                 for wl in wls:
                     base = bases[wl]["static22"]
                     budget = 0.9 * base["work"].sum()
-                    E0, _, _ = ednp(base, budget, sim.epoch_us)
-                    E, _, _ = ednp(traces[wl][m], budget, sim.epoch_us)
+                    E0, _, _ = ednp(base, budget, cfg.epoch_us)
+                    E, _, _ = ednp(traces[wl][m], budget, cfg.epoch_us)
                     savings.append(1.0 - E / E0)
                 sub[m] = float(np.mean(savings))
             out[obj] = sub
@@ -220,7 +244,10 @@ def fig18a_energy_caps() -> Dict:
 
 
 def fig18b_granularity() -> Dict:
-    """ED2P vs V/f-domain granularity (paper Fig 18b)."""
+    """ED2P vs V/f-domain granularity (paper Fig 18b).
+
+    The domain-size axis reshapes (CU -> domain) arrays, so it is a static
+    shape axis: one executable family per granularity, looped in Python."""
     def run():
         mechs = ("crisp", "pcstall", "oracle")
         wls = ["comd", "hacc", "lulesh", "BwdBN"]

@@ -4,11 +4,14 @@ Prints ``name,us_per_call,derived`` CSV rows. Figure benchmarks are cached in
 experiments/results/*.json (delete to re-run). ``--figs`` selects a subset.
 
 Perf micros report first-call compile time *separately* from steady-state
-us/epoch (the jit-cached engine pays tracing once per (SimConfig, mechanism);
-the seed engine paid it on every call), and the sweep benchmark times the
+us/epoch (the jit-cached engine pays tracing once per (SimStatic, mechanism);
+the seed engine paid it on every call), the sweep benchmark times the
 batched ``run_suite`` fig15 path against the seed-style serial path
-(re-traced per call). Results are also written to ``BENCH_sweep.json`` at
-the repo root so the speedup is recorded in the repo's perf trajectory.
+(re-traced per call), and the grid benchmark times a whole
+(epoch_us x objective) figure grid through the device-sharded ``run_grid``
+against a per-point ``run_suite`` loop (interleaved timings). Results are
+also written to ``BENCH_sweep.json`` at the repo root so the speedups are
+recorded in the repo's perf trajectory.
 
 ``--quick`` is the CI smoke mode: tiny sweep, no figure cache, <=30 s —
 pair it with ``pytest -m "not slow"`` for a single fast CI job.
@@ -51,7 +54,8 @@ def _perf_micros(quick: bool = False):
     # the seed engine did for each of its ~100 sweep calls)
     def seed_style():
         jax.block_until_ready(SIM._scan_sim(
-            prog, jnp.int32(prog.n_blocks), jnp.float32(0), sim, "pcstall"))
+            prog, jnp.int32(prog.n_blocks), jnp.float32(0),
+            sim.static_part(), sim.axes(), "pcstall"))
     seed_us = _time_once(seed_style) / n_ep * 1e6
 
     compile_s = _time_once(lambda: run_sim(prog, sim, "pcstall"))
@@ -118,7 +122,8 @@ def _bench_sweep(quick: bool = False):
         def serial_seed_style():
             return {w: {m: {k: np.asarray(v) for k, v in SIM._scan_sim(
                 progs[w], jnp.int32(progs[w].n_blocks), jnp.float32(0),
-                sim, m).items()} for m in mechs} for w in wls}
+                sim.static_part(), sim.axes(), m).items()}
+                for m in mechs} for w in wls}
         serial_s = _time_once(serial_seed_style)
 
         t0 = time.perf_counter()
@@ -158,6 +163,101 @@ def _bench_sweep(quick: bool = False):
     return rows, record
 
 
+def _bench_grid(quick: bool = False):
+    """(epoch_us x objective) figure grid: one sharded ``run_grid``
+    dispatch vs a per-point ``run_suite`` loop.
+
+    Both paths benefit from the SimConfig split (the loop re-dispatches but
+    does not re-trace across grid points), so this isolates the win of
+    batching the grid axes into one executable + fewer dispatches. Timings
+    are interleaved A/B/A/B (2-core box — never benchmark concurrently,
+    and alternation cancels slow drift); min of each is reported.
+
+    Returns (rows, record)."""
+    import dataclasses
+
+    import numpy as np
+    from repro.core import sweep as SW
+    from repro.core.simulate import SimConfig
+    from repro.core.sweep import run_grid, run_suite
+    from repro.core.workloads import get_workload
+    from benchmarks.paper_figs import WORKLOADS_FAST
+
+    # n_ep deliberately differs from _bench_sweep's scales (80/150/400) so
+    # the loop path cannot reuse executables that benchmark already
+    # compiled — "cold" must really pay the compile on both sides.
+    if quick:
+        wls, mechs, n_ep = WORKLOADS_FAST[:2], ("static17", "pcstall"), 60
+    else:
+        wls, mechs, n_ep = WORKLOADS_FAST[:6], \
+            ("static17", "crisp", "pcstall", "oracle"), 200
+    progs = {w: get_workload(w) for w in wls}
+    cfg = SimConfig(n_epochs=n_ep)
+    grid = {"epoch_us": [1.0, 10.0], "objective": ["ed2p", "edp"]}
+    # expand through the same helper run_grid uses, so the loop's keys
+    # stay in lockstep with run_grid's result keys
+    axis_names, points = SW._grid_points(grid)
+
+    def loop_points():
+        return {tuple(p[n] for n in axis_names):
+                run_suite(progs, dataclasses.replace(cfg, **p), mechs)
+                for p in points}
+
+    def grid_call():
+        return run_grid(progs, cfg, grid, mechs)
+
+    SW.TRACE_COUNTS.clear()
+    t0 = time.perf_counter()
+    res_grid = grid_call()
+    grid_cold_s = time.perf_counter() - t0
+    fork_compiles = sum(v for k, v in SW.TRACE_COUNTS.items()
+                        if k in ("grid_forks", "grid_oracle"))
+    t0 = time.perf_counter()
+    res_loop = loop_points()
+    loop_cold_s = time.perf_counter() - t0
+
+    # warm path: interleave the two measurements
+    reps = 2 if quick else 3
+    loop_t, grid_t = [], []
+    for _ in range(reps):
+        loop_t.append(_time_once(loop_points))
+        grid_t.append(_time_once(grid_call))
+    loop_s, grid_s = min(loop_t), min(grid_t)
+
+    # numerics: grid output vs the per-point suite loop
+    dev = 0.0
+    for key, suite in res_loop.items():
+        for w in wls:
+            for m in mechs:
+                for k in suite[w][m]:
+                    dev = max(dev, float(np.max(np.abs(
+                        np.asarray(suite[w][m][k], np.float64)
+                        - np.asarray(res_grid[key][w][m][k], np.float64)))))
+
+    g = len(points)
+    rows = [
+        (f"grid_2x2_loop_cold", loop_cold_s * 1e6,
+         f"{g}pt x {len(wls)}wl x {len(mechs)}mech x {n_ep}ep per-point "
+         "run_suite loop"),
+        (f"grid_2x2_total", grid_cold_s * 1e6,
+         f"run_grid cold incl compile ({loop_cold_s / grid_cold_s:.1f}x); "
+         f"{fork_compiles} fork-family compiles for the whole grid"),
+        (f"grid_2x2_warm", grid_s * 1e6,
+         f"run_grid jit-cache hit ({loop_s / grid_s:.1f}x vs warm loop); "
+         f"max|dev| vs loop {dev:.2g}"),
+        (f"grid_2x2_loop_warm", loop_s * 1e6, "per-point loop, jit-cached"),
+    ]
+    record = {"workloads": wls, "mechanisms": list(mechs), "n_epochs": n_ep,
+              "grid_points": g,
+              "loop_cold_s": loop_cold_s, "grid_cold_s": grid_cold_s,
+              "loop_warm_s": loop_s, "grid_warm_s": grid_s,
+              "speedup_cold": loop_cold_s / grid_cold_s,
+              "speedup_warm": loop_s / grid_s,
+              "fork_family_compiles": fork_compiles,
+              "max_abs_dev_vs_loop": dev}
+    return rows, record
+
+
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--figs", default=None,
@@ -166,6 +266,8 @@ def main() -> None:
     ap.add_argument("--skip-micros", action="store_true")
     ap.add_argument("--skip-sweep", action="store_true",
                     help="skip the run_suite-vs-serial sweep benchmark")
+    ap.add_argument("--skip-grid", action="store_true",
+                    help="skip the run_grid-vs-per-point-loop benchmark")
     ap.add_argument("--quick", action="store_true",
                     help="CI smoke mode: tiny sweep, no figures, <=30s")
     args = ap.parse_args()
@@ -181,6 +283,11 @@ def main() -> None:
         sys.stdout.flush()
     if not args.skip_sweep:
         rows, bench["sweep_fig15_total"] = _bench_sweep(args.quick)
+        for name, us, derived in rows:
+            print(f"{name},{us:.1f},{derived}")
+        sys.stdout.flush()
+    if not args.skip_grid:
+        rows, bench["grid_2x2"] = _bench_grid(args.quick)
         for name, us, derived in rows:
             print(f"{name},{us:.1f},{derived}")
         sys.stdout.flush()

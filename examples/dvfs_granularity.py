@@ -1,14 +1,31 @@
-"""Scalability study (paper Fig 18b): PCSTALL at 1/4/16-CU V/f domain
-granularity on a phased workload.
+"""Scalability study (paper Fig 18b + 17): PCSTALL across V/f-domain
+granularities, epoch durations and objectives on a phased workload.
+
+The V/f-domain size reshapes (CU -> domain) arrays, so it is a static shape
+axis looped in Python; everything else — epoch duration and objective —
+is a traced ``run_grid`` axis, so each domain size runs its whole
+(epoch_us x objective) grid as one device-sharded executable family.
 
   PYTHONPATH=src python examples/dvfs_granularity.py
 """
-from repro.core.simulate import SimConfig, run_workload
+import dataclasses
+
+from repro.core.simulate import SimConfig
+from repro.core.sweep import run_grid, suite_metrics
 from repro.core.workloads import get_workload
 
 prog = get_workload("hacc")
+GRID = {"epoch_us": [1.0, 10.0], "objective": ["ed2p", "edp"]}
+MECHS = ("static17", "pcstall", "oracle")
+
 for g in (1, 4, 16):
-    sim = SimConfig(n_epochs=500, cus_per_domain=g, cus_per_table=g)
-    r = run_workload(prog, sim, mechanisms=("static17", "pcstall", "oracle"))
-    print(f"{g:2d}-CU domains: pcstall ED2P={r['pcstall']['ednp_norm']:.3f} "
-          f"oracle={r['oracle']['ednp_norm']:.3f}")
+    cfg = SimConfig(n_epochs=500, cus_per_domain=g, cus_per_table=g)
+    grid = run_grid([prog], cfg, GRID, MECHS)
+    for (T, obj), traces in grid.items():
+        n = 2 if obj == "ed2p" else 1
+        r = suite_metrics(None, dataclasses.replace(cfg, epoch_us=T,
+                                                    objective=obj),
+                          MECHS, n=n, traces=traces)[prog.name]
+        print(f"{g:2d}-CU domains {T:5.1f}us {obj:4s}: "
+              f"pcstall ED^{n}P={r['pcstall']['ednp_norm']:.3f} "
+              f"oracle={r['oracle']['ednp_norm']:.3f}")

@@ -54,6 +54,9 @@ def transition_energy(f_old, f_new, pc: PowerConfig = PowerConfig()):
     return pc.c_trans * dv * dv
 
 
-def transition_latency_us(epoch_us: float) -> float:
-    """Paper §5: 4ns @ 1us, 40ns @ 10us, 200/400ns @ 50/100us epochs."""
-    return min(4e-3 * epoch_us, 0.4)
+def transition_latency_us(epoch_us):
+    """Paper §5: 4ns @ 1us, 40ns @ 10us, 200/400ns @ 50/100us epochs.
+
+    Accepts a Python float or a traced jnp scalar (the sweep layer traces
+    ``epoch_us`` as a grid axis)."""
+    return jnp.minimum(4e-3 * epoch_us, 0.4)

@@ -31,20 +31,42 @@ mixed-frequency row run as a single 11-way batched execute.
 
 Caching contract
 ----------------
+``SimConfig`` is split into two views for the jit boundary:
+
+* ``SimStatic`` (``sim.static_part()``) — the shape/flag fields (CU/WF
+  counts, scan length, table geometry, ``record_wf``, ``use_pallas``).
+  This hashable frozen dataclass is the *only* config key of the cached
+  executables.
+* ``SimAxes`` (``sim.axes()``) — everything that can vary across a figure
+  grid (``epoch_us``, ``sigma``, ``cap_per_ghz``, ``membw``, ``table_ema``,
+  the objective lowered to a weight vector, and the logical epoch count) as
+  a traced pytree of scalars.
+
 ``run_sim`` dispatches through a ``jax.jit`` entry point whose static keys
-are the (hashable, frozen) ``SimConfig`` and the mechanism name; ``Program``
-is a registered pytree traced by shape only. Repeated calls with the same
-config/mechanism — e.g. ``run_workload``'s static17 baseline reuse, or any
-figure sweep that varies only the workload — hit the executable cache and
-never re-trace. The scan body also accepts a *traced* mechanism id (see
-``FORK_MECHS``) so the batched sweep layer (``repro.core.sweep``) can vmap
-one compiled executable across mechanisms as well as workloads and seeds.
+are ``SimStatic`` and the mechanism name; ``Program`` is a registered
+pytree traced by shape only, and ``SimAxes`` rides along as a traced
+operand. Repeated calls that differ only in axis values — a fig-15/17/18
+sweep over epoch granularities or objectives — therefore hit the same
+executable and never re-trace. The scan body also accepts a *traced*
+mechanism id (see ``FORK_MECHS``) so the batched sweep layer
+(``repro.core.sweep``) can vmap one compiled executable across mechanisms,
+workloads, seeds, *and* whole ``SimAxes`` grids (``run_grid``).
+
+The objective is lowered from a string branch to a (3,) weight vector
+``[pbar_weight, use_rate, cap_fraction]`` (see ``objective_weights``) so
+EDP, ED^2P and the perf-cap objectives are a single traced code path.
+
+``n_epochs`` couples to ``epoch_us`` in the paper's granularity sweeps, so
+the scan always runs to the static ``SimStatic.n_epochs`` while
+``SimAxes.n_ep`` carries the *logical* epoch count: epochs past it are
+masked to zero in the outputs (the same pad-and-mask move the sweep layer
+applies to programs of different block counts).
 """
 from __future__ import annotations
 
 import functools
 from dataclasses import dataclass
-from typing import Dict, NamedTuple, Tuple, Union
+from typing import Dict, NamedTuple, Optional, Tuple, Union
 
 import jax
 import jax.numpy as jnp
@@ -77,6 +99,57 @@ _ID_ACCPC = FORK_MECH_IDS["accpc"]
 
 
 @dataclass(frozen=True)
+class SimStatic:
+    """Shape/flag half of ``SimConfig`` — the jit cache key. Everything
+    here changes array shapes or trace structure; everything that doesn't
+    lives in ``SimAxes`` and is traced. Construct via
+    ``SimConfig.static_part()`` (all fields required: defaults live on
+    ``SimConfig`` only, so they cannot drift)."""
+    n_cu: int
+    n_wf: int
+    n_epochs: int                 # static scan length (max over a grid)
+    entries: int
+    offset_blocks: int
+    cus_per_table: int
+    cus_per_domain: int
+    record_wf: bool
+    use_pallas: bool              # fused Pallas PC-table predict/update path
+
+
+class SimAxes(NamedTuple):
+    """Traced sweep axes: one grid point of the figure grid. All scalars
+    (``obj`` is the (3,) lowered objective) so the sweep layer can stack
+    grid points along a leading axis and vmap the scan over them."""
+    epoch_us: jnp.ndarray     # () f32
+    sigma: jnp.ndarray        # () f32
+    cap_per_ghz: jnp.ndarray  # () f32
+    membw: jnp.ndarray        # () f32
+    table_ema: jnp.ndarray    # () f32
+    obj: jnp.ndarray          # (3,) f32 [pbar_weight, use_rate, cap_frac]
+    n_ep: jnp.ndarray         # () i32 logical epochs (<= SimStatic.n_epochs)
+
+
+def objective_weights(objective: str) -> np.ndarray:
+    """Lower an objective name to the traced weight vector
+    ``[pbar_weight, use_rate, cap_frac]`` consumed by ``_select_freq``:
+
+      cost = (P_dom + pbar_weight * Pbar) / where(use_rate, I_sum, 1)
+             + BIG * (I_sum < cap_frac * I_sum[fmax])
+
+    EDP/ED^2P set ``pbar_weight`` to the delay exponent n (the online
+    Lagrangian marginal-cost weight) and divide by the rate; perf-cap
+    objectives drop both and penalize infeasible frequencies instead."""
+    if objective == "edp":
+        return np.asarray([1.0, 1.0, 0.0], np.float32)
+    if objective == "ed2p":
+        return np.asarray([2.0, 1.0, 0.0], np.float32)
+    if objective.startswith("perfcap"):
+        capf = 1.0 - float(objective[-2:]) / 100.0
+        return np.asarray([0.0, 0.0, capf], np.float32)
+    raise ValueError(objective)
+
+
+@dataclass(frozen=True)
 class SimConfig:
     n_cu: int = 64
     n_wf: int = 40
@@ -94,6 +167,28 @@ class SimConfig:
     record_wf: bool = False
     use_pallas: bool = False      # fused Pallas PC-table predict/update path
     seed: int = 0
+
+    def static_part(self, n_epochs: Optional[int] = None) -> SimStatic:
+        """The hashable jit key. ``n_epochs`` overrides the scan length
+        (the sweep layer passes the max over a grid)."""
+        return SimStatic(
+            n_cu=self.n_cu, n_wf=self.n_wf,
+            n_epochs=self.n_epochs if n_epochs is None else n_epochs,
+            entries=self.entries, offset_blocks=self.offset_blocks,
+            cus_per_table=self.cus_per_table,
+            cus_per_domain=self.cus_per_domain,
+            record_wf=self.record_wf, use_pallas=self.use_pallas)
+
+    def axes(self) -> SimAxes:
+        """The traced grid-point operand (logical epochs = ``n_epochs``)."""
+        return SimAxes(
+            epoch_us=jnp.float32(self.epoch_us),
+            sigma=jnp.float32(self.sigma),
+            cap_per_ghz=jnp.float32(self.cap_per_ghz),
+            membw=jnp.float32(self.membw),
+            table_ema=jnp.float32(self.table_ema),
+            obj=jnp.asarray(objective_weights(self.objective)),
+            n_ep=jnp.int32(self.n_epochs))
 
 
 class Carry(NamedTuple):
@@ -120,14 +215,15 @@ class EpochCtx(NamedTuple):
 
 
 def _epoch_context(prog: Program, pos: jnp.ndarray, p_blocks,
-                   seed, sim: SimConfig) -> EpochCtx:
+                   seed) -> EpochCtx:
     blk = (pos.astype(jnp.int32) // INSTR_PER_BLOCK) % p_blocks  # (CU,WF)
     i0_l = prog.i0_rate[blk]
     s_l = prog.sens_rate[blk]
     # one packed gather row per window side: 12 contiguous bytes/index
     # instead of three strided single-float gathers; the low side depends
-    # only on pos, so it is shared by all frequency rows.
-    cum3 = jnp.stack([prog.cum_i0, prog.cum_sens, prog.cum_mem], axis=-1)
+    # only on pos, so it is shared by all frequency rows. The packed
+    # (2P+1,3) stack is a scan-invariant precomputed on Program.
+    cum3 = prog.cum3
     cum_lo = cum3[blk]
     # deterministic (block, loop, wf, cu)-keyed noise — identical for every
     # fork and for the real execution (the paper's fork property)
@@ -154,12 +250,12 @@ class _SteadyParts(NamedTuple):
     mfw: jnp.ndarray
 
 
-def _steady_parts(prog: Program, ctx: EpochCtx, pos: jnp.ndarray,
-                  f_cu: jnp.ndarray, p_blocks, sim: SimConfig) -> _SteadyParts:
+def _steady_parts(ctx: EpochCtx, pos: jnp.ndarray,
+                  f_cu: jnp.ndarray, p_blocks, ax: SimAxes) -> _SteadyParts:
     """Steady-state committed instructions at frequency rows ``f_cu`` of
     shape ``(..., CU)`` against a shared epoch context; all outputs carry
     the batch shape."""
-    T = sim.epoch_us
+    T = ax.epoch_us
     f_b = f_cu[..., :, None]                                  # (...,CU,1)
     est_instr = (ctx.i0_l + ctx.s_l * f_b) * T
     nblk = jnp.clip((est_instr / INSTR_PER_BLOCK).astype(jnp.int32) + 1,
@@ -167,20 +263,20 @@ def _steady_parts(prog: Program, ctx: EpochCtx, pos: jnp.ndarray,
     wavg = (ctx.cum3[ctx.blk + nblk] - ctx.cum_lo) / nblk[..., None]
     i0w, sw, mfw = wavg[..., 0], wavg[..., 1], wavg[..., 2]
     demand = (i0w + sw * f_b) * T
-    demand = demand * (1.0 + sim.sigma * ctx.eps)
+    demand = demand * (1.0 + ax.sigma * ctx.eps)
     # oldest-first issue allocation (slot index = age priority)
-    C = sim.cap_per_ghz * f_cu * T
+    C = ax.cap_per_ghz * f_cu * T
     before = jnp.cumsum(demand, axis=-1) - demand
     alloc = jnp.clip(C[..., :, None] - before, 0.0, demand)
     # shared L2/DRAM bandwidth coupling across all CUs
     traffic = (alloc * mfw).sum(axis=(-2, -1))
-    scale = jnp.minimum(1.0, sim.membw * T / jnp.maximum(traffic, 1e-6))
+    scale = jnp.minimum(1.0, ax.membw * T / jnp.maximum(traffic, 1e-6))
     steady = alloc * (1.0 - mfw * (1.0 - scale[..., None, None]))
     return _SteadyParts(steady, alloc, demand, i0w, sw, mfw)
 
 
 def _row_counters(parts: _SteadyParts, pos: jnp.ndarray, f_cu: jnp.ndarray,
-                  p_blocks, sim: SimConfig
+                  p_blocks
                   ) -> Tuple[jnp.ndarray, Dict[str, jnp.ndarray]]:
     """Complete one frequency row into the full hardware-counter view.
 
@@ -205,35 +301,35 @@ def _row_counters(parts: _SteadyParts, pos: jnp.ndarray, f_cu: jnp.ndarray,
     return committed, counters
 
 
-def _execute_ctx(prog: Program, ctx: EpochCtx, pos: jnp.ndarray,
-                 f_cu: jnp.ndarray, p_blocks, sim: SimConfig
+def _execute_ctx(ctx: EpochCtx, pos: jnp.ndarray,
+                 f_cu: jnp.ndarray, p_blocks, ax: SimAxes
                  ) -> Tuple[jnp.ndarray, Dict[str, jnp.ndarray]]:
     """Full execute (steady + barrier/contention counters) of ``f_cu``
     frequency rows of shape ``(..., CU)`` against a shared epoch context."""
-    parts = _steady_parts(prog, ctx, pos, f_cu, p_blocks, sim)
-    return _row_counters(parts, pos, f_cu, p_blocks, sim)
+    parts = _steady_parts(ctx, pos, f_cu, p_blocks, ax)
+    return _row_counters(parts, pos, f_cu, p_blocks)
 
 
 def epoch_execute(prog: Program, pos: jnp.ndarray, f_cu: jnp.ndarray,
                   sim: SimConfig) -> Tuple[jnp.ndarray, Dict[str, jnp.ndarray]]:
     """Ground-truth execution of one epoch at per-CU frequencies ``f_cu``.
     Deterministic in (pos, f) — this *is* the fork property."""
-    ctx = _epoch_context(prog, pos, prog.n_blocks, sim.seed, sim)
-    committed, counters = _execute_ctx(prog, ctx, pos, f_cu,
-                                       prog.n_blocks, sim)
+    ax = sim.axes()
+    ctx = _epoch_context(prog, pos, prog.n_blocks, sim.seed)
+    committed, counters = _execute_ctx(ctx, pos, f_cu, prog.n_blocks, ax)
     counters = dict(counters, start_block=ctx.blk)
     return committed, counters
 
 
-def _predict_instr(i0_cu, sens_cu, sim: SimConfig):
+def _predict_instr(i0_cu, sens_cu, st: SimStatic, ax: SimAxes):
     """(CU,) linear state -> predicted I at all 10 freqs, capacity-clipped."""
     F = PWR.FREQS_GHZ
-    I = (i0_cu[:, None] + sens_cu[:, None] * F[None, :]) * sim.epoch_us
-    cap = sim.cap_per_ghz * F[None, :] * sim.epoch_us * sim.n_wf
+    I = (i0_cu[:, None] + sens_cu[:, None] * F[None, :]) * ax.epoch_us
+    cap = ax.cap_per_ghz * F[None, :] * ax.epoch_us * st.n_wf
     return jnp.clip(I, 0.0, cap)
 
 
-def _select_freq(I_pred_f: jnp.ndarray, sim: SimConfig,
+def _select_freq(I_pred_f: jnp.ndarray, st: SimStatic, ax: SimAxes,
                  pbar_dom: jnp.ndarray) -> jnp.ndarray:
     """Choose per-domain frequency minimizing the objective.
 
@@ -243,27 +339,27 @@ def _select_freq(I_pred_f: jnp.ndarray, sim: SimConfig,
     domain's accumulated average power (online Lagrangian; a naive P/I^(n+1)
     greedy systematically over/under-clocks heterogeneous phase mixes).
 
+    The objective arrives lowered as ``ax.obj = [w_pbar, use_rate, capf]``
+    (see ``objective_weights``) so all objectives share one traced path:
+    EDP/ED^2P divide the Lagrangian power by the rate (``use_rate=1``,
+    ``capf=0`` never penalizes), perf-cap objectives keep raw power and add
+    a big penalty on frequencies below ``capf`` of the max-frequency rate.
+
     I_pred_f: (CU, 10); pbar_dom: (n_dom,). Returns selected index (CU,).
     """
     F = PWR.FREQS_GHZ
-    n_dom = sim.n_cu // sim.cus_per_domain
-    I_dom = I_pred_f.reshape(n_dom, sim.cus_per_domain, -1)
-    act = I_pred_f / (sim.cap_per_ghz * F[None, :] * sim.epoch_us * sim.n_wf)
+    n_dom = st.n_cu // st.cus_per_domain
+    I_dom = I_pred_f.reshape(n_dom, st.cus_per_domain, -1)
+    act = I_pred_f / (ax.cap_per_ghz * F[None, :] * ax.epoch_us * st.n_wf)
     p_cu = PWR.power(F[None, :], act)                       # (CU,10)
-    P_dom = p_cu.reshape(n_dom, sim.cus_per_domain, -1).sum(1)  # (dom,10)
+    P_dom = p_cu.reshape(n_dom, st.cus_per_domain, -1).sum(1)  # (dom,10)
     I_sum = jnp.maximum(I_dom.sum(1), 1e-3)                 # (dom,10)
-    if sim.objective == "edp":
-        cost = (P_dom + pbar_dom[:, None]) / I_sum
-    elif sim.objective == "ed2p":
-        cost = (P_dom + 2.0 * pbar_dom[:, None]) / I_sum
-    elif sim.objective.startswith("perfcap"):
-        capf = 1.0 - float(sim.objective[-2:]) / 100.0
-        feasible = I_sum >= capf * I_sum[:, -1:]
-        cost = P_dom + 1e9 * (~feasible)
-    else:
-        raise ValueError(sim.objective)
+    w_pbar, use_rate, capf = ax.obj[0], ax.obj[1], ax.obj[2]
+    denom = jnp.where(use_rate > 0.0, I_sum, 1.0)
+    infeasible = I_sum < capf * I_sum[:, -1:]
+    cost = (P_dom + w_pbar * pbar_dom[:, None]) / denom + 1e9 * infeasible
     idx_dom = jnp.argmin(cost, axis=-1)                     # (dom,)
-    return jnp.repeat(idx_dom, sim.cus_per_domain)
+    return jnp.repeat(idx_dom, st.cus_per_domain)
 
 
 def _true_wf_linear(c_f: jnp.ndarray) -> Tuple[jnp.ndarray, jnp.ndarray]:
@@ -274,25 +370,28 @@ def _true_wf_linear(c_f: jnp.ndarray) -> Tuple[jnp.ndarray, jnp.ndarray]:
     return i0, sens
 
 
-def _scan_sim(prog: Program, p_blocks, seed, sim: SimConfig,
+def _scan_sim(prog: Program, p_blocks, seed, st: SimStatic, ax: SimAxes,
               mech: Union[str, jnp.ndarray]) -> Dict[str, jnp.ndarray]:
     """The simulation scan. ``mech`` is either a static mechanism name
     (maximally specialized trace, fused 11-way execute for non-oracle fork
     mechanisms) or a traced int32 id into ``FORK_MECHS`` (one executable
     shared by all fork mechanisms — the batched-sweep hot path).
 
-    ``p_blocks`` (logical block count; array may be padded beyond it) and
-    ``seed`` (noise key) are traced so the sweep layer can vmap over them.
+    ``p_blocks`` (logical block count; array may be padded beyond it),
+    ``seed`` (noise key) and the ``SimAxes`` grid point are all traced so
+    the sweep layer can vmap over them. The scan runs to the static
+    ``st.n_epochs``; epochs at index >= ``ax.n_ep`` are masked to zero in
+    every output channel (the logical-epoch tail of a shorter grid point).
     """
     static_mech = isinstance(mech, str)
     F = PWR.FREQS_GHZ
-    T = sim.epoch_us
-    n_dom = sim.n_cu // sim.cus_per_domain
-    n_tables = max(sim.n_cu // sim.cus_per_table, 1)
-    lat_us = PWR.transition_latency_us(sim.epoch_us)
+    T = ax.epoch_us
+    n_dom = st.n_cu // st.cus_per_domain
+    n_tables = max(st.n_cu // st.cus_per_table, 1)
+    lat_us = PWR.transition_latency_us(ax.epoch_us)
     # hoisted scan-body constants
-    tid = jnp.arange(sim.n_cu) // sim.cus_per_table
-    F_rows = jnp.broadcast_to(F[:, None], (F.shape[0], sim.n_cu))  # (10,CU)
+    tid = jnp.arange(st.n_cu) // st.cus_per_table
+    F_rows = jnp.broadcast_to(F[:, None], (F.shape[0], st.n_cu))  # (10,CU)
 
     if static_mech:
         assert mech in MECHANISMS, mech
@@ -303,8 +402,8 @@ def _scan_sim(prog: Program, p_blocks, seed, sim: SimConfig,
     else:
         is_static_f = False
         is_pc = is_react = is_oracle = None  # resolved per-trace via mech id
-    use_pallas = (sim.use_pallas and static_mech and not is_static_f
-                  and sim.n_cu % sim.cus_per_table == 0)
+    use_pallas = (st.use_pallas and static_mech and not is_static_f
+                  and st.n_cu % st.cus_per_table == 0)
     if use_pallas:
         from repro.kernels import pc_table as KPT
 
@@ -314,59 +413,58 @@ def _scan_sim(prog: Program, p_blocks, seed, sim: SimConfig,
             I_pc = KPT.pc_table_predict(
                 carry.table.i0, carry.table.sens, carry.table.count,
                 tid, idx_lu, carry.wf_i0, carry.wf_sens, F,
-                epoch_us=T, cap_per_ghz=sim.cap_per_ghz)
+                epoch_us=T, cap_per_ghz=ax.cap_per_ghz)
             hit = (carry.table.count[tid[:, None], idx_lu] > 0) \
                 .astype(jnp.float32)
         else:
-            i0t, st, hit = PRED.table_lookup(carry.table, tid, idx_lu,
-                                             carry.wf_i0, carry.wf_sens)
-            I_pc = _predict_instr(i0t.sum(-1), st.sum(-1), sim)
+            i0t, s_t, hit = PRED.table_lookup(carry.table, tid, idx_lu,
+                                              carry.wf_i0, carry.wf_sens)
+            I_pc = _predict_instr(i0t.sum(-1), s_t.sum(-1), st, ax)
         return I_pc, hit
 
     def _table_update(carry, idx_lu, i0_wf, s_wf):
         if use_pallas:
-            G = sim.cus_per_table
-            shp = (n_tables, G * sim.n_wf)
+            G = st.cus_per_table
+            shp = (n_tables, G * st.n_wf)
             i0n, sn, cn = KPT.pc_table_update(
                 carry.table.i0, carry.table.sens, carry.table.count,
                 idx_lu.reshape(shp), i0_wf.reshape(shp), s_wf.reshape(shp),
-                ema=sim.table_ema)
+                ema=ax.table_ema)
             return PRED.PCTable(i0n, sn, cn)
         return PRED.table_update(carry.table, tid, idx_lu, i0_wf, s_wf,
-                                 sim.table_ema)
+                                 ax.table_ema)
 
-    def body(carry: Carry, _):
+    def body(carry: Carry, ep_i):
         pos = carry.pos
-        ctx = _epoch_context(prog, pos, p_blocks, seed, sim)
+        ctx = _epoch_context(prog, pos, p_blocks, seed)
 
         hit_rate = None
         c_f = I_f = I_pred_f = idx_lu = None
         if is_static_f:
-            fidx = jnp.full((sim.n_cu,), _STATIC_F[mech], jnp.int32)
+            fidx = jnp.full((st.n_cu,), _STATIC_F[mech], jnp.int32)
             f_sel = F[fidx]
-            committed, ctr = _execute_ctx(prog, ctx, pos, f_sel, p_blocks, sim)
+            committed, ctr = _execute_ctx(ctx, pos, f_sel, p_blocks, ax)
         else:
             # --- predict I(f) from carry state (no forks needed) ----------
-            idx_lu = PRED.table_index(ctx.blk, sim.entries, sim.offset_blocks)
+            idx_lu = PRED.table_index(ctx.blk, st.entries, st.offset_blocks)
             if (not static_mech) or is_pc:
                 I_pc, hit = _pc_lookup(carry, idx_lu)
                 hit_rate = hit.mean()
             if (not static_mech) or is_react:
-                I_react = _predict_instr(carry.react_i0, carry.react_sens, sim)
+                I_react = _predict_instr(carry.react_i0, carry.react_sens,
+                                         st, ax)
             pbar = (carry.e_acc / jnp.maximum(carry.t_acc, 1e-3)) \
-                .reshape(n_dom, sim.cus_per_domain).sum(1)
+                .reshape(n_dom, st.cus_per_domain).sum(1)
 
             if static_mech and is_oracle:
                 # oracle's prediction IS this epoch's forks -> forks first,
                 # then the mixed-frequency row (still sharing the context).
-                c_f = _steady_parts(prog, ctx, pos, F_rows,
-                                    p_blocks, sim).steady
+                c_f = _steady_parts(ctx, pos, F_rows, p_blocks, ax).steady
                 I_f = c_f.sum(-1).T
                 I_pred_f = I_f
-                fidx = _select_freq(I_pred_f, sim, pbar)
+                fidx = _select_freq(I_pred_f, st, ax, pbar)
                 f_sel = F[fidx]
-                committed, ctr = _execute_ctx(prog, ctx, pos, f_sel,
-                                              p_blocks, sim)
+                committed, ctr = _execute_ctx(ctx, pos, f_sel, p_blocks, ax)
             else:
                 # fused fork--pre-execute: for every non-oracle mechanism the
                 # selection depends only on carry, so the 10 uniform fork
@@ -379,13 +477,13 @@ def _scan_sim(prog: Program, p_blocks, seed, sim: SimConfig,
                     I_pred_f = I_pc if is_pc else I_react
                 else:
                     I_pred_f = jnp.where(mech < _N_REACT, I_react, I_pc)
-                fidx = _select_freq(I_pred_f, sim, pbar)
+                fidx = _select_freq(I_pred_f, st, ax, pbar)
                 f_all = jnp.concatenate([F_rows, F[fidx][None]], axis=0)
-                parts = _steady_parts(prog, ctx, pos, f_all, p_blocks, sim)
+                parts = _steady_parts(ctx, pos, f_all, p_blocks, ax)
                 c_f = parts.steady[:10]                     # (10,CU,WF)
                 sel_parts = _SteadyParts(*(x[10] for x in parts))
                 committed, ctr = _row_counters(sel_parts, pos, f_all[10],
-                                               p_blocks, sim)
+                                               p_blocks)
                 f_sel = f_all[10]
                 I_f = c_f.sum(-1).T                         # (CU,10)
 
@@ -399,9 +497,9 @@ def _scan_sim(prog: Program, p_blocks, seed, sim: SimConfig,
             I_at_sel = jnp.take_along_axis(I_pred_f, fidx[:, None], 1)[:, 0]
             err = jnp.abs(I_at_sel - I_actual) / jnp.maximum(I_actual, 1e-3)
         else:
-            err = jnp.zeros((sim.n_cu,))
+            err = jnp.zeros((st.n_cu,))
         # --- energy --------------------------------------------------------
-        act = work_actual / (sim.cap_per_ghz * f_sel * T * sim.n_wf)
+        act = work_actual / (ax.cap_per_ghz * f_sel * T * st.n_wf)
         energy = PWR.power(f_sel, act) * T \
             + PWR.transition_energy(carry.f_prev, f_sel) * trans
         # --- estimation + state update -------------------------------------
@@ -439,12 +537,11 @@ def _scan_sim(prog: Program, p_blocks, seed, sim: SimConfig,
             r_se = jnp.select(sel, [e[1] / T for e in cu_ests] + [sens_ar],
                               carry.react_sens)
             new = new._replace(react_i0=r_i0, react_sens=r_se)
-            i0_st, s_st = EST.wf_stall_estimate(est_ctrs, f_sel)
+            i0_est, s_est = EST.wf_stall_estimate(est_ctrs, f_sel)
             i0_tr, s_tr = _true_wf_linear(c_f)
-            i0_wf = jnp.where(mech == _ID_PCSTALL, i0_st, i0_tr) / T
-            s_wf = jnp.where(mech == _ID_PCSTALL, s_st, s_tr) / T
-            tbl_u = PRED.table_update(carry.table, tid, idx_lu, i0_wf, s_wf,
-                                      sim.table_ema)
+            i0_wf = jnp.where(mech == _ID_PCSTALL, i0_est, i0_tr) / T
+            s_wf = jnp.where(mech == _ID_PCSTALL, s_est, s_tr) / T
+            tbl_u = _table_update(carry, idx_lu, i0_wf, s_wf)
             pc_now = (mech == _ID_PCSTALL) | (mech == _ID_ACCPC)
             tbl = jax.tree.map(lambda a, b: jnp.where(pc_now, a, b),
                                tbl_u, carry.table)
@@ -454,56 +551,64 @@ def _scan_sim(prog: Program, p_blocks, seed, sim: SimConfig,
                 wf_sens=jnp.where(pc_now, s_wf, carry.wf_sens))
         # true CU sensitivity for phase-variability analyses
         if is_static_f:
-            true_sens_cu = jnp.zeros((sim.n_cu,))
+            true_sens_cu = jnp.zeros((st.n_cu,))
         else:
             true_sens_cu = (I_f[:, -1] - I_f[:, 0]) / ((F[-1] - F[0]) * T)
         ys = {"work": work_actual, "energy": energy, "err": err,
               "fidx": fidx.astype(jnp.int8), "true_sens": true_sens_cu}
         if hit_rate is not None:
             ys["hit_rate"] = hit_rate
-        if sim.record_wf and not is_static_f:
+        if st.record_wf and not is_static_f:
             ys["wf_sens"] = ((c_f[-1] - c_f[0]) / (F[-1] - F[0])) \
                 .astype(jnp.float32)
             ys["wf_blk"] = ctx.blk.astype(jnp.int32)
+        # logical-epoch mask: grid points shorter than the static scan
+        # length report zeros past their tail (state keeps advancing, but
+        # the scan is causal so live epochs are unaffected)
+        live = ep_i < ax.n_ep
+        ys = jax.tree.map(lambda v: jnp.where(live, v, jnp.zeros_like(v)), ys)
         return new, ys
 
     plen = jnp.asarray(p_blocks * INSTR_PER_BLOCK, jnp.float32)
-    cu_off = (jnp.arange(sim.n_cu, dtype=jnp.float32)[:, None] * 97.0) % plen
-    wf_off = jnp.arange(sim.n_wf, dtype=jnp.float32)[None, :] * 1.0
+    cu_off = (jnp.arange(st.n_cu, dtype=jnp.float32)[:, None] * 97.0) % plen
+    wf_off = jnp.arange(st.n_wf, dtype=jnp.float32)[None, :] * 1.0
     pos0 = (cu_off + wf_off) % plen
     carry0 = Carry(
         pos=pos0,
-        react_i0=jnp.full((sim.n_cu,), 50.0),
-        react_sens=jnp.full((sim.n_cu,), 30.0),
-        wf_i0=jnp.full((sim.n_cu, sim.n_wf), 1.2),
-        wf_sens=jnp.full((sim.n_cu, sim.n_wf), 0.8),
-        table=PRED.table_init(n_tables, sim.entries),
-        f_prev=jnp.full((sim.n_cu,), 1.7),
+        react_i0=jnp.full((st.n_cu,), 50.0),
+        react_sens=jnp.full((st.n_cu,), 30.0),
+        wf_i0=jnp.full((st.n_cu, st.n_wf), 1.2),
+        wf_sens=jnp.full((st.n_cu, st.n_wf), 0.8),
+        table=PRED.table_init(n_tables, st.entries),
+        f_prev=jnp.full((st.n_cu,), 1.7),
         # warm-start Pbar near the static-1.7 operating point
-        e_acc=jnp.full((sim.n_cu,), 0.42 * 20.0),
+        e_acc=jnp.full((st.n_cu,), 0.42 * 20.0),
         t_acc=jnp.asarray(20.0),
     )
-    _, ys = lax.scan(body, carry0, None, length=sim.n_epochs)
+    _, ys = lax.scan(body, carry0, jnp.arange(st.n_epochs, dtype=jnp.int32))
     return ys
 
 
-@functools.partial(jax.jit, static_argnames=("sim", "mechanism"))
-def _run_sim_jit(prog: Program, p_blocks, seed, sim: SimConfig,
+@functools.partial(jax.jit, static_argnames=("st", "mechanism"))
+def _run_sim_jit(prog: Program, p_blocks, seed, ax: SimAxes, st: SimStatic,
                  mechanism: str) -> Dict[str, jnp.ndarray]:
-    return _scan_sim(prog, p_blocks, seed, sim, mechanism)
+    return _scan_sim(prog, p_blocks, seed, st, ax, mechanism)
 
 
 def run_sim(prog: Program, sim: SimConfig, mechanism: str
             ) -> Dict[str, np.ndarray]:
     """Simulate ``mechanism`` on ``prog``. Returns per-epoch traces.
 
-    Compile-once: the scan is traced at most once per (SimConfig, mechanism,
-    program shape) — subsequent calls dispatch a cached XLA executable.
+    Compile-once: the scan is traced at most once per (SimStatic, mechanism,
+    program shape) — subsequent calls, *including ones that change only
+    traced axes like epoch_us/sigma/objective*, dispatch a cached XLA
+    executable.
     """
     assert mechanism in MECHANISMS, mechanism
     assert sim.n_cu % sim.cus_per_domain == 0
     ys = _run_sim_jit(prog, jnp.int32(prog.n_blocks),
-                      jnp.float32(sim.seed), sim, mechanism)
+                      jnp.float32(sim.seed), sim.axes(), sim.static_part(),
+                      mechanism)
     return {k: np.asarray(v) for k, v in ys.items()}
 
 

@@ -1,9 +1,10 @@
 """Batched sweep layer: one compiled executable per mechanism *family*
-instead of one trace per (workload, mechanism, seed) tuple.
+for the whole figure grid, instead of one trace per (workload, mechanism,
+seed, grid-point) tuple.
 
-The paper's headline figures (14/15/18) sweep ~10 mechanisms x ~10 workloads
-(x epoch granularities x objectives) through the fork--pre-execute engine.
-Run serially that is ~100 scan traces; ``run_suite`` instead
+The paper's headline figures (14/15/17/18) sweep ~10 mechanisms x ~10
+workloads x epoch granularities x objectives through the fork--pre-execute
+engine. Run serially that is hundreds of scan traces; this layer instead
 
   1. pads every ``Program`` to a common block count (``pad_program`` keeps
      the wrapped prefix-sum window semantics exact by rebuilding the doubled
@@ -16,32 +17,81 @@ Run serially that is ~100 scan traces; ``run_suite`` instead
      mechanisms (``simulate.FORK_MECHS``) share a shape-identical carry and
      run as one executable indexed by a traced mechanism id, while the
      static-frequency mechanisms compile to their own (fork-free, ~10x
-     cheaper) executable per frequency.
+     cheaper) executable per frequency;
+  4. (``run_grid``) stacks whole ``SimAxes`` grid points — epoch_us, sigma,
+     capacity, bandwidth, EMA, lowered objective, logical epoch count —
+     along a leading axis, cartesian-products them with the workloads, and
+     shards the flattened (workload x grid-point) axis across local
+     devices with ``shard_map`` (a 1-device mesh is the identity layout).
+     Points with fewer logical epochs scan to the grid max and mask the
+     tail, the same pad-and-mask move applied to programs.
 
-A full Fig-15 sweep is therefore a handful of XLA executables — typically
-one fork-family compile plus one per requested static point — and repeated
-sweeps with the same ``SimConfig`` hit the jit cache and never re-trace.
+A full Fig-15/17/18-style sweep over several epoch granularities and
+objectives is therefore at most two fork-family executables (the traced-id
+family plus oracle's specialized one) plus one per static frequency point;
+repeated sweeps with the same ``SimStatic`` hit the jit cache and never
+re-trace (``TRACE_COUNTS`` records compiles for tests/benchmarks).
 
 Execution-model / caching contract: see ``repro.core.simulate``'s module
-docstring; ``run_suite`` output is numerically equivalent to calling
-``run_sim`` per (workload, mechanism, seed) — the per-row math is identical
-and batched reductions preserve per-row ordering (tested to 1e-5 by
-``tests/test_sweep.py``).
+docstring. ``run_grid`` output is bitwise-equal to per-point ``run_suite``
+(same traced-id family; vmap/shard_map preserve per-row reduction order —
+tested by ``tests/test_grid.py``), and ``run_suite`` matches the
+specialized per-mechanism ``run_sim`` traces to f32 exactness (tested to
+1e-5 by ``tests/test_sweep.py``). Across *differently specialized*
+executables (traced-id family vs a ``run_sim`` string-mech trace) the math
+is identical at the jaxpr level but XLA may fuse f32 chains differently;
+at epoch_us != 1 the resulting last-ulp differences can compound through
+the closed control loop over hundreds of epochs, so cross-family
+comparisons should use matching dispatch paths.
 """
 from __future__ import annotations
 
+import collections
+import dataclasses
 import functools
-from typing import Dict, Optional, Sequence, Tuple, Union
+import itertools
+from typing import Dict, List, Optional, Sequence, Tuple, Union
 
 import jax
 import jax.numpy as jnp
 import numpy as np
+from jax.experimental.shard_map import shard_map
+from jax.sharding import Mesh, PartitionSpec as P
 
 from repro.core import simulate as SIM
-from repro.core.simulate import MECHANISMS, SimConfig, ednp, prediction_accuracy
+from repro.core.simulate import (MECHANISMS, SimAxes, SimConfig, SimStatic,
+                                 ednp, prediction_accuracy)
 from repro.core.workloads import Program
 
 _STATIC_MECHS = ("static13", "static17", "static22")
+_PC_MECHS = ("pcstall", "accpc")
+
+
+def _unpack_trace(arrs: Dict[str, jnp.ndarray], w: int, mech: str,
+                  squeeze_seed: bool,
+                  n_ep: Optional[int] = None) -> Dict[str, np.ndarray]:
+    """Cut one batch entry down to the ``run_sim`` trace schema: squeeze
+    the seed axis when it was implicit, slice the epoch axis to the
+    logical count (``None`` = full), and drop the ``hit_rate`` telemetry
+    channel for non-PC mechanisms (the traced family computes it for
+    all)."""
+    ep = slice(None) if n_ep is None else slice(None, n_ep)
+    tr = {k: np.asarray(v[w, 0, ep] if squeeze_seed else v[w, :, ep])
+          for k, v in arrs.items()}
+    if mech not in _PC_MECHS:
+        tr.pop("hit_rate", None)
+    return tr
+
+# SimConfig fields that may vary across a grid without re-tracing (they map
+# onto SimAxes); n_epochs is the *logical* epoch count of a point — the
+# executable scans to the grid max and masks the tail.
+AXIS_FIELDS = ("epoch_us", "sigma", "cap_per_ghz", "membw", "table_ema",
+               "objective", "n_epochs")
+
+# executable-compile counter, keyed by family ("suite_forks", "grid_forks",
+# "grid_oracle", ...): incremented at trace time only, so tests and
+# benchmarks can assert cache hits / count fork-family compiles per figure.
+TRACE_COUNTS: collections.Counter = collections.Counter()
 
 
 def pad_program(prog: Program, p_max: int) -> Program:
@@ -65,8 +115,9 @@ def pad_program(prog: Program, p_max: int) -> Program:
 
     arr = lambda a: jnp.concatenate([a, pad1])
     return Program(prog.name, arr(prog.i0_rate), arr(prog.sens_rate),
-                   arr(prog.mem_frac), cum(prog.i0_rate),
-                   cum(prog.sens_rate), cum(prog.mem_frac))
+                   arr(prog.mem_frac),
+                   jnp.stack([cum(prog.i0_rate), cum(prog.sens_rate),
+                              cum(prog.mem_frac)], axis=-1))
 
 
 def _stack_programs(progs: Sequence[Program]) -> Tuple[Program, jnp.ndarray]:
@@ -78,32 +129,35 @@ def _stack_programs(progs: Sequence[Program]) -> Tuple[Program, jnp.ndarray]:
     stacked = Program(
         "suite",
         *(jnp.stack([getattr(p, f) for p in padded])
-          for f in ("i0_rate", "sens_rate", "mem_frac",
-                    "cum_i0", "cum_sens", "cum_mem")))
+          for f in ("i0_rate", "sens_rate", "mem_frac", "cum3")))
     return stacked, p_logical
 
 
-@functools.partial(jax.jit, static_argnames=("sim",))
-def _suite_forks(progs: Program, p_logical, seeds, mech_ids, sim: SimConfig):
+@functools.partial(jax.jit, static_argnames=("st",))
+def _suite_forks(progs: Program, p_logical, seeds, mech_ids, axes: SimAxes,
+                 st: SimStatic):
     """(W workloads) x (S seeds) x (M fork mechanisms) in one executable."""
+    TRACE_COUNTS["suite_forks"] += 1
     def per_prog(prog, p_blocks):
         def per_seed(seed):
             return jax.vmap(
-                lambda m: SIM._scan_sim(prog, p_blocks, seed, sim, m)
+                lambda m: SIM._scan_sim(prog, p_blocks, seed, st, axes, m)
             )(mech_ids)
         return jax.vmap(per_seed)(seeds)
     return jax.vmap(per_prog)(progs, p_logical)
 
 
-@functools.partial(jax.jit, static_argnames=("sim", "mechanism"))
-def _suite_per_mech(progs: Program, p_logical, seeds, sim: SimConfig,
-                    mechanism: str):
+@functools.partial(jax.jit, static_argnames=("st", "mechanism"))
+def _suite_per_mech(progs: Program, p_logical, seeds, axes: SimAxes,
+                    st: SimStatic, mechanism: str):
     """(W workloads) x (S seeds) for one statically-specialized mechanism
     (the fork-free static points, and oracle — whose prediction needs this
     epoch's forks and so can't join the fused traced family)."""
+    TRACE_COUNTS[f"suite_{mechanism}"] += 1
     def per_prog(prog, p_blocks):
         return jax.vmap(
-            lambda seed: SIM._scan_sim(prog, p_blocks, seed, sim, mechanism)
+            lambda seed: SIM._scan_sim(prog, p_blocks, seed, st, axes,
+                                       mechanism)
         )(seeds)
     return jax.vmap(per_prog)(progs, p_logical)
 
@@ -133,6 +187,7 @@ def run_suite(programs: Union[Dict[str, Program], Sequence[Program]],
     seed_arr = jnp.asarray([sim.seed] if seeds is None else list(seeds),
                            jnp.float32)
     stacked, p_logical = _stack_programs(progs)
+    st, axes = sim.static_part(), sim.axes()
 
     fork_mechs = [m for m in mechanisms
                   if m not in _STATIC_MECHS and m != "oracle"]
@@ -140,24 +195,223 @@ def run_suite(programs: Union[Dict[str, Program], Sequence[Program]],
     if fork_mechs:
         ids = jnp.asarray([SIM.FORK_MECH_IDS[m] for m in fork_mechs],
                           jnp.int32)
-        ys = _suite_forks(stacked, p_logical, seed_arr, ids, sim)
+        ys = _suite_forks(stacked, p_logical, seed_arr, ids, axes, st)
         for j, m in enumerate(fork_mechs):
             by_mech[m] = {k: v[:, :, j] for k, v in ys.items()}
     for m in mechanisms:
         if m in _STATIC_MECHS or m == "oracle":
-            by_mech[m] = _suite_per_mech(stacked, p_logical, seed_arr, sim, m)
+            by_mech[m] = _suite_per_mech(stacked, p_logical, seed_arr,
+                                         axes, st, m)
 
     out: Dict[str, Dict[str, Dict[str, np.ndarray]]] = {}
     for w, name in enumerate(names):
-        out[name] = {}
-        for m in mechanisms:
-            tr = {k: np.asarray(v[w, 0] if squeeze_seed else v[w])
-                  for k, v in by_mech[m].items()}
-            if m not in ("pcstall", "accpc"):
-                # match run_sim's trace schema: hit_rate is a PC-mechanism
-                # telemetry channel (the traced family computes it for all)
-                tr.pop("hit_rate", None)
-            out[name][m] = tr
+        out[name] = {m: _unpack_trace(by_mech[m], w, m, squeeze_seed)
+                     for m in mechanisms}
+    return out
+
+
+# ---------------------------------------------------------------------------
+# Device-sharded grid sweeps
+# ---------------------------------------------------------------------------
+
+
+@functools.lru_cache(maxsize=None)
+def _grid_exec(st: SimStatic, n_dev: int, mechanism: Optional[str]):
+    """Build (once per (SimStatic, device count, family)) the sharded grid
+    executable: the flattened (workload x grid-point) axis is split across
+    an ``n_dev``-device mesh with ``shard_map`` (identity on one device),
+    and each local entry vmaps seeds (x traced fork-mechanism ids when
+    ``mechanism`` is None)."""
+    mesh = Mesh(np.asarray(jax.local_devices()[:n_dev]), ("i",))
+    family = "grid_forks" if mechanism is None else f"grid_{mechanism}"
+
+    @jax.jit
+    def dispatch(progs, p_log, axes, seeds, mech_ids):
+        TRACE_COUNTS[family] += 1
+
+        def shard_fn(progs_s, p_log_s, axes_s, seeds_s, mech_ids_s):
+            def per_entry(prog, p_blocks, ax):
+                def per_seed(seed):
+                    if mechanism is None:
+                        return jax.vmap(
+                            lambda m: SIM._scan_sim(prog, p_blocks, seed, st,
+                                                    ax, m))(mech_ids_s)
+                    return SIM._scan_sim(prog, p_blocks, seed, st, ax,
+                                         mechanism)
+                return jax.vmap(per_seed)(seeds_s)
+            return jax.vmap(per_entry)(progs_s, p_log_s, axes_s)
+
+        return shard_map(
+            shard_fn, mesh=mesh,
+            in_specs=(P("i"), P("i"), P("i"), P(), P()),
+            out_specs=P("i"), check_rep=False,
+        )(progs, p_log, axes, seeds, mech_ids)
+
+    return dispatch
+
+
+def _grid_points(axes_grid) -> Tuple[Tuple[str, ...], List[dict]]:
+    """Normalize ``axes_grid`` into (axis names, list of override dicts).
+
+    Dict-of-lists => cartesian product of the values; list-of-dicts =>
+    explicit points (for coupled axes like the paper's epoch_us/n_epochs
+    granularity sweep). Output keys are the point's values in axis order.
+    """
+    if isinstance(axes_grid, dict):
+        names = tuple(axes_grid)
+        for n, vals in axes_grid.items():
+            # catch {"objective": "edp"} (product would iterate the chars)
+            # and bare scalars with a clean assert instead of a late error
+            assert isinstance(vals, (list, tuple)), \
+                f"axis {n!r} needs a list of values, got {vals!r}"
+        points = [dict(zip(names, combo))
+                  for combo in itertools.product(*axes_grid.values())]
+        assert points, "axes_grid needs at least one point"  # empty values
+    else:
+        points = [dict(p) for p in axes_grid]
+        assert points, "axes_grid needs at least one point"
+        names = tuple(points[0])
+        for p in points:
+            assert tuple(p) == names, \
+                f"grid points must share axes: {tuple(p)} vs {names}"
+    for p in points:
+        for k in p:
+            assert k in AXIS_FIELDS, \
+                f"{k!r} is not a traced grid axis (one of {AXIS_FIELDS})"
+    return names, points
+
+
+def _pad_flat(tree, n: int):
+    """Pad a pytree's leading (flattened grid) axis to length ``n`` by
+    cycling its entries (the pad rows are dropped on unpack)."""
+    def pad(a):
+        if a.shape[0] >= n:
+            return a
+        reps = -(-n // a.shape[0])
+        return jnp.concatenate([a] * reps, axis=0)[:n]
+    return jax.tree.map(pad, tree)
+
+
+def run_grid(programs: Union[Dict[str, Program], Sequence[Program]],
+             static_cfg: SimConfig, axes_grid,
+             mechanisms: Sequence[str] = MECHANISMS,
+             seeds: Optional[Sequence[int]] = None,
+             max_mask_ratio: Optional[float] = None
+             ) -> Dict[tuple, Dict[str, Dict[str, Dict[str, np.ndarray]]]]:
+    """One executable family for the whole figure grid.
+
+    ``axes_grid`` is either a dict ``{axis: [values...]}`` whose values are
+    cartesian-producted, or an explicit list of ``{axis: value}`` points
+    (coupled axes); axes are the traced ``SimConfig`` fields in
+    ``AXIS_FIELDS``. ``static_cfg`` supplies the static shape/flag fields
+    and the default value of every axis not named in the grid.
+
+    Each grid point's ``SimAxes`` (with ``n_epochs`` as its logical epoch
+    count — the scan runs to the grid max and the tail is masked/sliced)
+    is stacked and vmapped alongside workloads x seeds x mechanism ids;
+    the flattened (workload x grid-point) axis is sharded across local
+    devices with ``shard_map`` (1-device mesh = identity). Fork--pre-
+    execute mechanisms share one traced-id executable, oracle gets its
+    specialized one, static frequencies one each — for any grid size.
+
+    When logical epoch counts are strongly coupled to an axis (the paper's
+    granularity sweeps pair 1 us with 6x the epochs of 100 us), scanning
+    every point to the grid max wastes masked-tail compute;
+    ``max_mask_ratio`` bounds that waste by partitioning the points into
+    buckets whose max/min ``n_epochs`` ratio stays below it (one
+    executable family per bucket, same merged result dict). ``None``
+    keeps the whole grid in a single executable family.
+
+    Returns ``{grid_key: {workload: {mechanism: trace}}}`` where
+    ``grid_key`` is the tuple of the point's axis values in axis order and
+    each trace matches the per-point ``run_suite`` output (seed axis
+    squeezed unless ``seeds`` is given, epoch axis cut to the point's
+    logical ``n_epochs``).
+    """
+    if isinstance(programs, dict):
+        names_w = list(programs)
+        progs = [programs[n] for n in names_w]
+    else:
+        progs = list(programs)
+        names_w = [p.name for p in progs]
+    assert progs, "run_grid needs at least one program"
+    for m in mechanisms:
+        assert m in MECHANISMS, m
+    assert static_cfg.n_cu % static_cfg.cus_per_domain == 0
+    axis_names, points = _grid_points(axes_grid)
+    keys = [tuple(p[n] for n in axis_names) for p in points]
+    assert len(set(keys)) == len(keys), "duplicate grid points"
+
+    if max_mask_ratio is not None and len(points) > 1:
+        assert max_mask_ratio >= 1.0, max_mask_ratio
+        buckets: List[List[dict]] = []
+        for p in sorted(points, reverse=True,
+                        key=lambda p: p.get("n_epochs", static_cfg.n_epochs)):
+            n_ep = p.get("n_epochs", static_cfg.n_epochs)
+            b_max = buckets[-1][0].get("n_epochs", static_cfg.n_epochs) \
+                if buckets else None
+            if buckets and b_max / n_ep <= max_mask_ratio:
+                buckets[-1].append(p)
+            else:
+                buckets.append([p])
+        if len(buckets) > 1:
+            out: Dict[tuple, Dict] = {}
+            for bucket in buckets:
+                out.update(run_grid(programs, static_cfg, bucket,
+                                    mechanisms, seeds))
+            # restore the caller's grid-point order
+            return {k: out[k] for k in keys}
+
+    squeeze_seed = seeds is None
+    seed_arr = jnp.asarray(
+        [static_cfg.seed] if seeds is None else list(seeds), jnp.float32)
+    stacked, p_logical = _stack_programs(progs)
+    W, G = len(progs), len(points)
+
+    sims = [dataclasses.replace(static_cfg, **p) for p in points]
+    n_ep_max = max(s.n_epochs for s in sims)
+    st = static_cfg.static_part(n_epochs=n_ep_max)
+    axes_g = jax.tree.map(lambda *xs: jnp.stack(xs),
+                          *[s.axes() for s in sims])
+
+    # flatten workload-major: flat index i = w * G + g
+    progs_flat = jax.tree.map(lambda a: jnp.repeat(a, G, axis=0), stacked)
+    p_log_flat = jnp.repeat(p_logical, G, axis=0)
+    axes_flat = jax.tree.map(
+        lambda a: jnp.tile(a, (W,) + (1,) * (a.ndim - 1)), axes_g)
+
+    n_flat = W * G
+    n_dev = jax.local_device_count()
+    n_pad = -(-n_flat // n_dev) * n_dev
+    if n_pad != n_flat:
+        progs_flat = _pad_flat(progs_flat, n_pad)
+        p_log_flat = _pad_flat(p_log_flat, n_pad)
+        axes_flat = _pad_flat(axes_flat, n_pad)
+
+    fork_mechs = [m for m in mechanisms
+                  if m not in _STATIC_MECHS and m != "oracle"]
+    by_mech: Dict[str, Dict[str, jnp.ndarray]] = {}
+    if fork_mechs:
+        ids = jnp.asarray([SIM.FORK_MECH_IDS[m] for m in fork_mechs],
+                          jnp.int32)
+        ys = _grid_exec(st, n_dev, None)(progs_flat, p_log_flat, axes_flat,
+                                         seed_arr, ids)
+        for j, m in enumerate(fork_mechs):
+            by_mech[m] = {k: v[:, :, j] for k, v in ys.items()}
+    no_ids = jnp.zeros((0,), jnp.int32)  # specialized mechs ignore mech_ids
+    for m in mechanisms:
+        if m in _STATIC_MECHS or m == "oracle":
+            by_mech[m] = _grid_exec(st, n_dev, m)(
+                progs_flat, p_log_flat, axes_flat, seed_arr, no_ids)
+
+    out: Dict[tuple, Dict[str, Dict[str, Dict[str, np.ndarray]]]] = {}
+    for g, (key, sim_pt) in enumerate(zip(keys, sims)):
+        out[key] = {}
+        for w, name in enumerate(names_w):
+            i = w * G + g
+            out[key][name] = {
+                m: _unpack_trace(by_mech[m], i, m, squeeze_seed,
+                                 n_ep=sim_pt.n_epochs) for m in mechanisms}
     return out
 
 

@@ -36,14 +36,30 @@ class Program:
     i0_rate: jnp.ndarray    # (P,) instr/us
     sens_rate: jnp.ndarray  # (P,) instr/us/GHz
     mem_frac: jnp.ndarray   # (P,)
-    # prefix sums over a doubled program for O(1) wrapped window averages
-    cum_i0: jnp.ndarray     # (2P+1,)
-    cum_sens: jnp.ndarray
-    cum_mem: jnp.ndarray
+    # prefix sums over a doubled program for O(1) wrapped window averages,
+    # packed as (2P+1, 3) columns (i0, sens, mem): the scan-invariant of
+    # the engine's window gather (12 contiguous bytes/index), precomputed
+    # here so the per-epoch scan body never re-materializes the stack —
+    # and the ONLY prefix-sum leaf, so batched sweeps don't ship three
+    # redundant unpacked copies through every executable
+    cum3: jnp.ndarray
 
     @property
     def n_blocks(self) -> int:
         return self.i0_rate.shape[0]
+
+    # column views for analyses/tests that want one prefix sum
+    @property
+    def cum_i0(self) -> jnp.ndarray:
+        return self.cum3[:, 0]
+
+    @property
+    def cum_sens(self) -> jnp.ndarray:
+        return self.cum3[:, 1]
+
+    @property
+    def cum_mem(self) -> jnp.ndarray:
+        return self.cum3[:, 2]
 
 
 # Register Program as a pytree so it can flow through jit/vmap/scan — the
@@ -55,8 +71,7 @@ class Program:
 # transform therefore carry an empty name (nothing traced reads it).
 jax.tree_util.register_pytree_node(
     Program,
-    lambda p: ((p.i0_rate, p.sens_rate, p.mem_frac,
-                p.cum_i0, p.cum_sens, p.cum_mem), None),
+    lambda p: ((p.i0_rate, p.sens_rate, p.mem_frac, p.cum3), None),
     lambda _, ch: Program("", *ch),
 )
 
@@ -66,7 +81,8 @@ def _finalize(name, i0, sens, mem) -> Program:
     sens = jnp.asarray(sens, jnp.float32)
     mem = jnp.asarray(mem, jnp.float32)
     cum = lambda a: jnp.concatenate([jnp.zeros(1), jnp.cumsum(jnp.tile(a, 2))])
-    return Program(name, i0, sens, mem, cum(i0), cum(sens), cum(mem))
+    return Program(name, i0, sens, mem,
+                   jnp.stack([cum(i0), cum(sens), cum(mem)], axis=-1))
 
 
 # base per-WF rate scale: a wavefront at 1.7 GHz commits ~100 instr/us

@@ -1,17 +1,20 @@
 """DVFS manager: PCSTALL-driven per-device frequency scheduling for a
 training/serving job (simulated — TPUs expose no user DVFS today, so this
 reports what the paper's mechanism would buy on this workload's phase
-structure)."""
+structure). Reports dispatch through the device-sharded grid sweep layer
+(``repro.core.sweep.run_grid``): a single report is a 1-point grid, and
+``grid_report`` evaluates a whole epoch-granularity x objective grid in
+one executable family."""
 from __future__ import annotations
 
 import dataclasses
-from typing import Dict, Optional
+from typing import Dict, Optional, Sequence
 
 import numpy as np
 
 from repro.configs.base import ModelConfig, ShapeConfig
 from repro.core.simulate import SimConfig, ednp, prediction_accuracy
-from repro.core.sweep import run_suite
+from repro.core.sweep import run_grid
 from repro.core.workloads import Program
 from repro.dvfs_runtime.telemetry import arch_program
 
@@ -32,15 +35,11 @@ class DVFSManager:
     def observe_step(self, step: int, seconds: float) -> None:
         self.step_times.append(seconds)
 
-    def report(self) -> Dict[str, float]:
-        """Run PCSTALL vs static-1.7 on this job's phase program (one
-        batched suite dispatch; jit-cached across repeated reports)."""
-        traces = run_suite([self.program], self.sim, ("static17", "pcstall"))
-        trs = traces[self.program.name]
-        base, tr = trs["static17"], trs["pcstall"]
+    def _point_report(self, traces: Dict, epoch_us: float) -> Dict[str, float]:
+        base, tr = traces["static17"], traces["pcstall"]
         budget = 0.9 * base["work"].sum()
-        E0, D0, M0 = ednp(base, budget, self.sim.epoch_us)
-        E, D, M = ednp(tr, budget, self.sim.epoch_us)
+        E0, D0, M0 = ednp(base, budget, epoch_us)
+        E, D, M = ednp(tr, budget, epoch_us)
         h = np.bincount(tr["fidx"].ravel(), minlength=10) / tr["fidx"].size
         return {
             "accuracy": prediction_accuracy(tr),
@@ -50,3 +49,26 @@ class DVFSManager:
             "freq_timeshare": [round(float(x), 3) for x in h],
             "mean_step_s": float(np.mean(self.step_times)) if self.step_times else 0.0,
         }
+
+    def report(self) -> Dict[str, float]:
+        """Run PCSTALL vs static-1.7 on this job's phase program (a
+        1-point grid dispatch; jit-cached across repeated reports)."""
+        grid = run_grid([self.program], self.sim,
+                        {"objective": [self.sim.objective]},
+                        ("static17", "pcstall"))
+        trs = grid[(self.sim.objective,)][self.program.name]
+        return self._point_report(trs, self.sim.epoch_us)
+
+    def grid_report(self, epoch_us: Sequence[float] = (1.0, 10.0),
+                    objectives: Optional[Sequence[str]] = None
+                    ) -> Dict[tuple, Dict[str, float]]:
+        """Sweep epoch granularity x objective for this job in ONE grid
+        executable family (what a deployment would use to pick its DVFS
+        operating point). Returns ``{(epoch_us, objective): report}``."""
+        objectives = [self.sim.objective] if objectives is None \
+            else list(objectives)
+        grid = run_grid([self.program], self.sim,
+                        {"epoch_us": list(epoch_us), "objective": objectives},
+                        ("static17", "pcstall"))
+        return {key: self._point_report(trs[self.program.name], key[0])
+                for key, trs in grid.items()}

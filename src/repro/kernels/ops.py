@@ -51,17 +51,18 @@ def flash_attention(q: jax.Array, k: jax.Array, v: jax.Array, *,
     return out.reshape(B, H, S, hd).transpose(0, 2, 1, 3).astype(q.dtype)
 
 
-@functools.partial(jax.jit, static_argnames=("epoch_us", "cap_per_ghz"))
+@jax.jit
 def pc_table_predict(tbl_i0, tbl_sens, tbl_cnt, tid, idx, fb_i0, fb_sens,
-                     freqs, *, epoch_us: float = 1.0, cap_per_ghz: float = 0.0):
+                     freqs, *, epoch_us=1.0, cap_per_ghz=0.0):
+    # epoch_us / cap_per_ghz are traced operands (sweep axes), not cache
+    # keys: one executable serves every grid point.
     return _pt.pc_table_predict(tbl_i0, tbl_sens, tbl_cnt, tid, idx,
                                 fb_i0, fb_sens, freqs, epoch_us=epoch_us,
                                 cap_per_ghz=cap_per_ghz, interpret=_interpret())
 
 
-@functools.partial(jax.jit, static_argnames=("ema",))
-def pc_table_update(tbl_i0, tbl_sens, tbl_cnt, idx, i0, sens, *,
-                    ema: float = 0.5):
+@jax.jit
+def pc_table_update(tbl_i0, tbl_sens, tbl_cnt, idx, i0, sens, *, ema=0.5):
     return _pt.pc_table_update(tbl_i0, tbl_sens, tbl_cnt, idx, i0, sens,
                                ema=ema, interpret=_interpret())
 

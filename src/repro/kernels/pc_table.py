@@ -33,8 +33,8 @@ def _resolve_interpret(interpret: Optional[bool]) -> bool:
 
 
 def _pc_table_kernel(tbl_i0_ref, tbl_sens_ref, tbl_cnt_ref, idx_ref,
-                     fb_i0_ref, fb_sens_ref, freqs_ref, out_ref, *,
-                     n_wf: int, epoch_us: float, cap_per_ghz: float):
+                     fb_i0_ref, fb_sens_ref, freqs_ref, scal_ref, out_ref, *,
+                     n_wf: int):
     idx = idx_ref[0]                    # (WF,) int32 slots into this table
     ti0 = tbl_i0_ref[0]                 # (E,)
     tse = tbl_sens_ref[0]
@@ -47,25 +47,34 @@ def _pc_table_kernel(tbl_i0_ref, tbl_sens_ref, tbl_cnt_ref, idx_ref,
     i0_sum = jnp.sum(i0)
     sens_sum = jnp.sum(sens)
     f = freqs_ref[...]
+    epoch_us = scal_ref[0]              # traced sweep axes ride in as data
+    cap_per_ghz = scal_ref[1]
     ipred = (i0_sum + sens_sum * f) * epoch_us
-    if cap_per_ghz > 0.0:               # fused capacity clip (I <= cap*f*T*WF)
-        ipred = jnp.clip(ipred, 0.0, cap_per_ghz * f * epoch_us * n_wf)
+    # fused capacity clip (I <= cap*f*T*WF); cap <= 0 disables
+    ipred = jnp.where(cap_per_ghz > 0.0,
+                      jnp.clip(ipred, 0.0, cap_per_ghz * f * epoch_us * n_wf),
+                      ipred)
     out_ref[0] = ipred
 
 
 def pc_table_predict(tbl_i0: jax.Array, tbl_sens: jax.Array,
                      tbl_cnt: jax.Array, tid: jax.Array, idx: jax.Array,
                      fb_i0: jax.Array, fb_sens: jax.Array, freqs: jax.Array,
-                     *, epoch_us: float = 1.0, cap_per_ghz: float = 0.0,
+                     *, epoch_us=1.0, cap_per_ghz=0.0,
                      interpret: Optional[bool] = None) -> jax.Array:
     """tbl_* (T,E); tid (CU,) table id per CU; idx/fb_* (CU,WF); freqs (F,).
     Returns I_pred (CU,F) = clip((sum_wf i0 + sum_wf sens * f) * epoch_us),
-    capacity-clipped when ``cap_per_ghz > 0`` (cap = cap*f*epoch_us*WF)."""
+    capacity-clipped when ``cap_per_ghz > 0`` (cap = cap*f*epoch_us*WF).
+
+    ``epoch_us`` and ``cap_per_ghz`` may be Python floats or traced jnp
+    scalars (the engine sweeps them as ``SimAxes`` grid axes): they enter
+    the kernel as a packed (2,) operand, not as trace-time constants."""
     CU, WF = idx.shape
     T, E = tbl_i0.shape
     F = freqs.shape[0]
-    kernel = functools.partial(_pc_table_kernel, n_wf=WF, epoch_us=epoch_us,
-                               cap_per_ghz=cap_per_ghz)
+    kernel = functools.partial(_pc_table_kernel, n_wf=WF)
+    scal = jnp.stack([jnp.asarray(epoch_us, jnp.float32),
+                      jnp.asarray(cap_per_ghz, jnp.float32)])
     # expand tables per CU via the tid gather (tiny: 128 floats/CU)
     tbl_i0_cu = tbl_i0[tid]     # (CU,E)
     tbl_sens_cu = tbl_sens[tid]
@@ -81,6 +90,7 @@ def pc_table_predict(tbl_i0: jax.Array, tbl_sens: jax.Array,
             pl.BlockSpec((1, WF), lambda c: (c, 0)),
             pl.BlockSpec((1, WF), lambda c: (c, 0)),
             pl.BlockSpec((F,), lambda c: (0,)),
+            pl.BlockSpec((2,), lambda c: (0,)),
         ],
         out_specs=pl.BlockSpec((1, F), lambda c: (c, 0)),
         out_shape=jax.ShapeDtypeStruct((CU, F), jnp.float32),
@@ -88,12 +98,12 @@ def pc_table_predict(tbl_i0: jax.Array, tbl_sens: jax.Array,
     )(tbl_i0_cu.astype(jnp.float32), tbl_sens_cu.astype(jnp.float32),
       tbl_cnt_cu.astype(jnp.float32), idx.astype(jnp.int32),
       fb_i0.astype(jnp.float32), fb_sens.astype(jnp.float32),
-      freqs.astype(jnp.float32))
+      freqs.astype(jnp.float32), scal)
 
 
 def _pc_table_update_kernel(tbl_i0_ref, tbl_sens_ref, tbl_cnt_ref, idx_ref,
-                            i0_ref, sens_ref, out_i0_ref, out_sens_ref,
-                            out_cnt_ref, *, entries: int, ema: float):
+                            i0_ref, sens_ref, ema_ref, out_i0_ref,
+                            out_sens_ref, out_cnt_ref, *, entries: int):
     idx = idx_ref[0]                                    # (N,) slots
     # scatter-free per-slot accumulation: one-hot mask (N,E) + column sums
     slots = jax.lax.broadcasted_iota(jnp.int32, (idx.shape[0], entries), 1)
@@ -105,6 +115,7 @@ def _pc_table_update_kernel(tbl_i0_ref, tbl_sens_ref, tbl_cnt_ref, idx_ref,
     snew = jnp.where(cnt > 0, ssum / jnp.maximum(cnt, 1.0), 0.0)
     tcnt = tbl_cnt_ref[0]
     fresh = (tcnt == 0.0) & (cnt > 0)
+    ema = ema_ref[0]                    # traced sweep axis (table_ema)
     blend = jnp.where(fresh, 1.0, jnp.where(cnt > 0, ema, 0.0))
     out_i0_ref[0] = tbl_i0_ref[0] * (1.0 - blend) + inew * blend
     out_sens_ref[0] = tbl_sens_ref[0] * (1.0 - blend) + snew * blend
@@ -113,7 +124,7 @@ def _pc_table_update_kernel(tbl_i0_ref, tbl_sens_ref, tbl_cnt_ref, idx_ref,
 
 def pc_table_update(tbl_i0: jax.Array, tbl_sens: jax.Array,
                     tbl_cnt: jax.Array, idx: jax.Array, i0: jax.Array,
-                    sens: jax.Array, *, ema: float = 0.5,
+                    sens: jax.Array, *, ema=0.5,
                     interpret: Optional[bool] = None
                     ) -> Tuple[jax.Array, jax.Array, jax.Array]:
     """Fused PC-table update. tbl_* (T,E); idx/i0/sens (T,N) grouped per
@@ -121,12 +132,14 @@ def pc_table_update(tbl_i0: jax.Array, tbl_sens: jax.Array,
     cus_per_table * WF with the contiguous CU->table mapping).
 
     Within-epoch collisions are averaged, then EMA-blended into the table
-    (first touch replaces). Returns the new (i0, sens, count) arrays —
-    semantics identical to ``predictors.table_update``."""
+    (first touch replaces). ``ema`` may be a float or a traced jnp scalar
+    (the ``table_ema`` sweep axis) — it enters the kernel as a (1,)
+    operand. Returns the new (i0, sens, count) arrays — semantics
+    identical to ``predictors.table_update``."""
     T, E = tbl_i0.shape
     Tn, N = idx.shape
     assert Tn == T, (Tn, T)
-    kernel = functools.partial(_pc_table_update_kernel, entries=E, ema=ema)
+    kernel = functools.partial(_pc_table_update_kernel, entries=E)
     out = jax.ShapeDtypeStruct((T, E), jnp.float32)
     return pl.pallas_call(
         kernel,
@@ -138,6 +151,7 @@ def pc_table_update(tbl_i0: jax.Array, tbl_sens: jax.Array,
             pl.BlockSpec((1, N), lambda t: (t, 0)),
             pl.BlockSpec((1, N), lambda t: (t, 0)),
             pl.BlockSpec((1, N), lambda t: (t, 0)),
+            pl.BlockSpec((1,), lambda t: (0,)),
         ],
         out_specs=[
             pl.BlockSpec((1, E), lambda t: (t, 0)),
@@ -148,4 +162,5 @@ def pc_table_update(tbl_i0: jax.Array, tbl_sens: jax.Array,
         interpret=_resolve_interpret(interpret),
     )(tbl_i0.astype(jnp.float32), tbl_sens.astype(jnp.float32),
       tbl_cnt.astype(jnp.float32), idx.astype(jnp.int32),
-      i0.astype(jnp.float32), sens.astype(jnp.float32))
+      i0.astype(jnp.float32), sens.astype(jnp.float32),
+      jnp.asarray(ema, jnp.float32).reshape(1))

@@ -43,3 +43,38 @@ def test_manager_reports_energy_savings():
     assert 0.5 < rep["energy_norm"] < 1.3
     assert rep["accuracy"] > 0.9  # step programs are highly repetitive
     assert abs(sum(rep["freq_timeshare"]) - 1.0) < 1e-2
+
+
+def test_manager_report_well_formed_and_jit_cached():
+    """report(): freq_timeshare is a distribution, metrics are finite, and
+    repeated calls dispatch cached executables (no re-trace)."""
+    from repro.core import sweep as SW
+    cfg = get_config("glm4-9b")
+    mgr = DVFSManager.for_model(cfg, TRAIN_4K, n_cu=8)
+    rep = mgr.report()
+    assert abs(sum(rep["freq_timeshare"]) - 1.0) < 1e-2
+    assert all(x >= 0.0 for x in rep["freq_timeshare"])
+    assert np.isfinite(rep["ed2p_norm"]) and np.isfinite(rep["accuracy"])
+    before = dict(SW.TRACE_COUNTS)
+    rep2 = mgr.report()
+    assert dict(SW.TRACE_COUNTS) == before  # jit cache hit: no new compile
+    assert rep2["ed2p_norm"] == pytest.approx(rep["ed2p_norm"])
+    assert rep2["accuracy"] == pytest.approx(rep["accuracy"])
+
+
+def test_manager_grid_report():
+    """grid_report sweeps (epoch_us x objective) in one executable family
+    and returns a well-formed report per grid point."""
+    cfg = get_config("glm4-9b")
+    mgr = DVFSManager.for_model(cfg, TRAIN_4K, n_cu=8)
+    reps = mgr.grid_report(epoch_us=(1.0, 10.0),
+                           objectives=("ed2p", "perfcap05"))
+    assert set(reps) == {(1.0, "ed2p"), (1.0, "perfcap05"),
+                         (10.0, "ed2p"), (10.0, "perfcap05")}
+    for rep in reps.values():
+        assert np.isfinite(rep["ed2p_norm"])
+        assert abs(sum(rep["freq_timeshare"]) - 1.0) < 1e-2
+    # the 1-point report matches the matching grid point
+    one = mgr.report()
+    assert one["ed2p_norm"] == pytest.approx(
+        reps[(1.0, "ed2p")]["ed2p_norm"])

@@ -1,0 +1,171 @@
+"""Equivalence and caching tests for the device-sharded grid sweep
+(``repro.core.sweep.run_grid``): a whole (epoch_us x objective) figure grid
+must (a) reproduce per-point ``run_suite`` results to 1e-5 — including
+masked logical-epoch tails and padded mixed-size workloads — and (b)
+compile at most two fork-family executables regardless of grid size."""
+import dataclasses
+
+import jax
+import numpy as np
+import pytest
+
+from repro.core import sweep as SW
+from repro.core.simulate import SimConfig, objective_weights
+from repro.core.sweep import run_grid, run_suite
+from repro.core.workloads import get_workload, make_program
+
+SIM = SimConfig(n_cu=16, n_wf=12, n_epochs=48)
+WORKLOADS = ("comd", "xsbench")
+MECHS = ("static17", "crisp", "pcstall", "oracle")
+GRID_2X2 = {"epoch_us": [1.0, 10.0], "objective": ["ed2p", "edp"]}
+
+
+@pytest.fixture(scope="module")
+def progs():
+    return {w: get_workload(w) for w in WORKLOADS}
+
+
+@pytest.fixture(scope="module")
+def grid_2x2(progs):
+    return run_grid(progs, SIM, GRID_2X2, MECHS)
+
+
+def _assert_traces_match(got, want, ctx):
+    assert set(got) == set(want), ctx
+    for k in want:
+        np.testing.assert_allclose(got[k], want[k], rtol=1e-5, atol=1e-5,
+                                   err_msg=f"{ctx}/{k}")
+
+
+@pytest.mark.parametrize("key", [(1.0, "ed2p"), (1.0, "edp"),
+                                 (10.0, "ed2p"), (10.0, "edp")])
+def test_grid_matches_per_point_suite(progs, grid_2x2, key):
+    """2x2 (epoch_us x objective) grid == per-point run_suite, <= 1e-5
+    (empirically bitwise: same traced-id executable family)."""
+    sim_pt = dataclasses.replace(SIM, epoch_us=key[0], objective=key[1])
+    suite = run_suite(progs, sim_pt, MECHS)
+    for wl in WORKLOADS:
+        for m in MECHS:
+            _assert_traces_match(grid_2x2[key][wl][m], suite[wl][m],
+                                 f"{key}/{wl}/{m}")
+
+
+def test_grid_fork_family_executable_count(progs):
+    """Acceptance: a >= 2x2 grid compiles <= 2 fork-family executables
+    (the traced-id family + oracle's specialized one) and at least one,
+    and repeated calls hit the jit cache (no new traces).
+
+    Uses a SimStatic no other test shares (n_cu=8) so the executables are
+    compiled *inside this test* — a cached fixture grid would make the
+    count vacuous."""
+    sim = dataclasses.replace(SIM, n_cu=8)
+    SW.TRACE_COUNTS.clear()
+    run_grid(progs, sim, GRID_2X2, MECHS)
+    fork_traces = {k: v for k, v in SW.TRACE_COUNTS.items()
+                   if k in ("grid_forks", "grid_oracle")}
+    assert 1 <= sum(fork_traces.values()) <= 2, fork_traces
+    before = dict(SW.TRACE_COUNTS)
+    run_grid(progs, sim, GRID_2X2, MECHS)
+    assert dict(SW.TRACE_COUNTS) == before  # cache hit: zero new compiles
+
+
+def test_grid_masked_epoch_tail(progs):
+    """Coupled (epoch_us, n_epochs) points: the shorter point scans to the
+    grid max with its tail masked, and still matches a run_suite sized
+    exactly to its logical epoch count."""
+    points = [{"epoch_us": 1.0, "n_epochs": 32},
+              {"epoch_us": 10.0, "n_epochs": 48}]
+    grid = run_grid(progs, SIM, points, ("static17", "pcstall"))
+    for pt in points:
+        key = (pt["epoch_us"], pt["n_epochs"])
+        sim_pt = dataclasses.replace(SIM, **pt)
+        suite = run_suite(progs, sim_pt, ("static17", "pcstall"))
+        for wl in WORKLOADS:
+            for m in ("static17", "pcstall"):
+                got = grid[key][wl][m]
+                assert got["work"].shape[0] == pt["n_epochs"]
+                _assert_traces_match(got, suite[wl][m], f"{key}/{wl}/{m}")
+
+
+def test_grid_mask_ratio_bucketing(progs):
+    """max_mask_ratio splits strongly-coupled n_epochs points into
+    bounded-waste buckets without changing results or key order."""
+    points = [{"epoch_us": 1.0, "n_epochs": 48},
+              {"epoch_us": 10.0, "n_epochs": 12},
+              {"epoch_us": 50.0, "n_epochs": 12}]
+    whole = run_grid(progs, SIM, points, ("pcstall",))
+    bucketed = run_grid(progs, SIM, points, ("pcstall",), max_mask_ratio=2.0)
+    assert list(bucketed) == list(whole)  # caller's point order preserved
+    for key in whole:
+        for wl in WORKLOADS:
+            _assert_traces_match(bucketed[key][wl]["pcstall"],
+                                 whole[key][wl]["pcstall"], f"bucket/{key}")
+
+
+def test_grid_padded_workload_mix():
+    """Mixed block counts ride the grid unchanged: padding must not change
+    the wrapped window semantics of the shorter program."""
+    small = make_program("small", "phased", 5, P=256)
+    big = get_workload("comd")  # P=1024
+    grid = run_grid([small, big], SIM, {"epoch_us": [1.0, 10.0]},
+                    ("pcstall",))
+    for T in (1.0, 10.0):
+        suite = run_suite([small, big],
+                          dataclasses.replace(SIM, epoch_us=T), ("pcstall",))
+        for prog in (small, big):
+            _assert_traces_match(grid[(T,)][prog.name]["pcstall"],
+                                 suite[prog.name]["pcstall"],
+                                 f"{T}/{prog.name}")
+
+
+def test_grid_seed_axis(progs):
+    out = run_grid(progs, SIM, {"objective": ["ed2p"]}, ("pcstall",),
+                   seeds=[0, 3])
+    tr = out[("ed2p",)]["comd"]["pcstall"]
+    assert tr["work"].shape[:2] == (2, SIM.n_epochs)
+    want = run_suite(progs, SIM, ("pcstall",), seeds=[0, 3])
+    np.testing.assert_allclose(tr["work"], want["comd"]["pcstall"]["work"],
+                               rtol=1e-5, atol=1e-5)
+
+
+@pytest.mark.skipif(jax.local_device_count() != 1,
+                    reason="identity-mesh check is 1-device-specific "
+                           "(multi-device equivalence holds too — run this "
+                           "file under a forced multi-device config)")
+def test_grid_runs_under_one_device_shard_map(progs):
+    """The flattened (workload x grid-point) axis is sharded via shard_map;
+    on this host that is a 1-device mesh, which must be the identity
+    layout — results already checked against run_suite above."""
+    res = run_grid(progs, SIM, {"epoch_us": [1.0]}, ("pcstall",))
+    ser = run_suite(progs, SIM, ("pcstall",))
+    for wl in WORKLOADS:
+        _assert_traces_match(res[(1.0,)][wl]["pcstall"],
+                             ser[wl]["pcstall"], wl)
+
+
+def test_grid_rejects_static_axis(progs):
+    with pytest.raises(AssertionError, match="not a traced grid axis"):
+        run_grid(progs, SIM, {"n_cu": [8, 16]}, ("pcstall",))
+
+
+def test_objective_weights_lowering():
+    np.testing.assert_allclose(objective_weights("edp"), [1.0, 1.0, 0.0])
+    np.testing.assert_allclose(objective_weights("ed2p"), [2.0, 1.0, 0.0])
+    np.testing.assert_allclose(objective_weights("perfcap05"),
+                               [0.0, 0.0, 0.95])
+    np.testing.assert_allclose(objective_weights("perfcap10"),
+                               [0.0, 0.0, 0.90])
+    with pytest.raises(ValueError):
+        objective_weights("nope")
+
+
+def test_axis_change_does_not_retrace(progs):
+    """The SimConfig split: sweeping any traced axis through run_suite
+    reuses the same executable (no new compile)."""
+    run_suite(progs, SIM, ("pcstall",))
+    before = dict(SW.TRACE_COUNTS)
+    for repl in ({"epoch_us": 3.0}, {"objective": "perfcap10"},
+                 {"sigma": 0.01}, {"membw": 2e5}, {"table_ema": 0.3},
+                 {"cap_per_ghz": 4000.0}):
+        run_suite(progs, dataclasses.replace(SIM, **repl), ("pcstall",))
+    assert dict(SW.TRACE_COUNTS) == before

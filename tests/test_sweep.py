@@ -128,7 +128,8 @@ def test_pc_table_predict_matches_lookup_plus_predict_instr(T, E, CU, WF):
                                cap_per_ghz=sim.cap_per_ghz)
     i0w, sw, _ = PRED.table_lookup(PRED.PCTable(ti0, tse, tcnt), tid, idx,
                                    fb0, fbs)
-    want = _predict_instr(i0w.sum(-1), sw.sum(-1), sim)
+    want = _predict_instr(i0w.sum(-1), sw.sum(-1), sim.static_part(),
+                          sim.axes())
     np.testing.assert_allclose(np.asarray(out), np.asarray(want),
                                rtol=1e-4, atol=1e-2)
 
