@@ -1,13 +1,15 @@
 """One function per paper table/figure. Results cached to experiments/results/.
 
 All multi-(workload x mechanism) figures dispatch through the batched sweep
-layer: single-point figures through ``run_suite`` (one compiled executable
-per mechanism family), and every figure whose grid spans traced SimConfig
-axes — epoch granularity (fig01/07), objective (fig18a) — through
-``run_grid``, which runs the whole grid as one device-sharded executable
-family instead of one dispatch per grid point. Only fig18b still loops in
-Python: its V/f-domain-granularity axis reshapes arrays and so is a static
-(shape) axis by design.
+layer — and there is only ONE dispatch path: single-point figures call
+``run_suite`` (literally a 1-point ``run_grid``), and every figure whose
+grid spans traced SimConfig axes — epoch granularity (fig01/07), objective
+(fig18a) — calls ``run_grid`` directly, which runs the whole grid as one
+device-sharded executable family instead of one dispatch per grid point
+(static-frequency mechanisms additionally scan once per execution class,
+not once per objective point). Only fig18b still loops in Python: its
+V/f-domain-granularity axis reshapes arrays and so is a static (shape)
+axis by design.
 
 Figures:
   fig01a  ED2P opportunity vs DVFS epoch duration
@@ -217,9 +219,9 @@ def fig18a_energy_caps() -> Dict:
         wls = ["comd", "hacc", "lulesh", "dgemm", "xsbench", "BwdBN"]
         progs = _progs(wls)
         cfg = SimConfig(n_epochs=N_EPOCHS)
-        # baseline through the same grid dispatch family as the traces it
-        # is divided against (cross-family comparisons can pick up last-ulp
-        # fusion noise — see sweep.py's module docstring)
+        # every sweep dispatches through the one grid family, so this
+        # baseline is bitwise-consistent with the traces it is divided
+        # against by construction (run_suite would be the same executable)
         bases = run_grid(progs, cfg, {"epoch_us": [cfg.epoch_us]},
                          ("static22",))[(cfg.epoch_us,)]
         # both perf-cap objectives in one grid executable family

@@ -6,12 +6,14 @@ experiments/results/*.json (delete to re-run). ``--figs`` selects a subset.
 Perf micros report first-call compile time *separately* from steady-state
 us/epoch (the jit-cached engine pays tracing once per (SimStatic, mechanism);
 the seed engine paid it on every call), the sweep benchmark times the
-batched ``run_suite`` fig15 path against the seed-style serial path
+batched ``run_suite`` fig15 path (a 1-point ``run_grid`` — the single
+dispatch family every sweep uses) against the seed-style serial path
 (re-traced per call), and the grid benchmark times a whole
 (epoch_us x objective) figure grid through the device-sharded ``run_grid``
-against a per-point ``run_suite`` loop (interleaved timings). Results are
-also written to ``BENCH_sweep.json`` at the repo root so the speedups are
-recorded in the repo's perf trajectory.
+against a per-point ``run_suite`` loop (interleaved timings; the grid side
+additionally dedupes static mechanisms to one scan per execution-class).
+Results are also written to ``BENCH_sweep.json`` at the repo root so the
+speedups are recorded in the repo's perf trajectory.
 
 ``--quick`` is the CI smoke mode: tiny sweep, no figure cache, <=30 s —
 pair it with ``pytest -m "not slow"`` for a single fast CI job.
@@ -54,7 +56,7 @@ def _perf_micros(quick: bool = False):
     # the seed engine did for each of its ~100 sweep calls)
     def seed_style():
         jax.block_until_ready(SIM._scan_sim(
-            prog, jnp.int32(prog.n_blocks), jnp.float32(0),
+            prog, jnp.int32(prog.n_blocks), jnp.int32(0),
             sim.static_part(), sim.axes(), "pcstall"))
     seed_us = _time_once(seed_style) / n_ep * 1e6
 
@@ -121,7 +123,7 @@ def _bench_sweep(quick: bool = False):
 
         def serial_seed_style():
             return {w: {m: {k: np.asarray(v) for k, v in SIM._scan_sim(
-                progs[w], jnp.int32(progs[w].n_blocks), jnp.float32(0),
+                progs[w], jnp.int32(progs[w].n_blocks), jnp.int32(0),
                 sim.static_part(), sim.axes(), m).items()}
                 for m in mechs} for w in wls}
         serial_s = _time_once(serial_seed_style)
@@ -168,10 +170,13 @@ def _bench_grid(quick: bool = False):
     dispatch vs a per-point ``run_suite`` loop.
 
     Both paths benefit from the SimConfig split (the loop re-dispatches but
-    does not re-trace across grid points), so this isolates the win of
-    batching the grid axes into one executable + fewer dispatches. Timings
-    are interleaved A/B/A/B (2-core box — never benchmark concurrently,
-    and alternation cancels slow drift); min of each is reported.
+    does not re-trace across grid points) and both dispatch through the
+    same grid executable family (run_suite IS a 1-point run_grid), so this
+    isolates the win of batching the grid axes into one executable + fewer
+    dispatches + the static-mechanism dedup (the 2x2 grid has 2 static
+    execution classes, so static17 scans half its points). Timings are
+    interleaved A/B/A/B (2-core box — never benchmark concurrently, and
+    alternation cancels slow drift); min of each is reported.
 
     Returns (rows, record)."""
     import dataclasses
@@ -207,11 +212,15 @@ def _bench_grid(quick: bool = False):
         return run_grid(progs, cfg, grid, mechs)
 
     SW.TRACE_COUNTS.clear()
+    SW.DISPATCH_ROWS.clear()
     t0 = time.perf_counter()
     res_grid = grid_call()
     grid_cold_s = time.perf_counter() - t0
     fork_compiles = sum(v for k, v in SW.TRACE_COUNTS.items()
                         if k in ("grid_forks", "grid_oracle"))
+    static_rows = sum(v for k, v in SW.DISPATCH_ROWS.items()
+                      if k.startswith("grid_static"))
+    fork_rows = SW.DISPATCH_ROWS["grid_forks"]
     t0 = time.perf_counter()
     res_loop = loop_points()
     loop_cold_s = time.perf_counter() - t0
@@ -241,7 +250,8 @@ def _bench_grid(quick: bool = False):
          "run_suite loop"),
         (f"grid_2x2_total", grid_cold_s * 1e6,
          f"run_grid cold incl compile ({loop_cold_s / grid_cold_s:.1f}x); "
-         f"{fork_compiles} fork-family compiles for the whole grid"),
+         f"{fork_compiles} fork-family compiles for the whole grid; "
+         f"static dedup {static_rows} rows vs {fork_rows} fork rows"),
         (f"grid_2x2_warm", grid_s * 1e6,
          f"run_grid jit-cache hit ({loop_s / grid_s:.1f}x vs warm loop); "
          f"max|dev| vs loop {dev:.2g}"),
@@ -254,6 +264,8 @@ def _bench_grid(quick: bool = False):
               "speedup_cold": loop_cold_s / grid_cold_s,
               "speedup_warm": loop_s / grid_s,
               "fork_family_compiles": fork_compiles,
+              "static_mech_rows_deduped": static_rows,
+              "fork_mech_rows": fork_rows,
               "max_abs_dev_vs_loop": dev}
     return rows, record
 

@@ -4,7 +4,10 @@ granularities, epoch durations and objectives on a phased workload.
 The V/f-domain size reshapes (CU -> domain) arrays, so it is a static shape
 axis looped in Python; everything else — epoch duration and objective —
 is a traced ``run_grid`` axis, so each domain size runs its whole
-(epoch_us x objective) grid as one device-sharded executable family.
+(epoch_us x objective) grid as one device-sharded executable family (the
+same family a single ``run_suite`` point would use — there is only one
+dispatch path). The static-1.7 baseline is deduplicated across the two
+objectives: it scans once per epoch duration, not once per grid point.
 
   PYTHONPATH=src python examples/dvfs_granularity.py
 """

@@ -226,12 +226,28 @@ def _epoch_context(prog: Program, pos: jnp.ndarray, p_blocks,
     cum3 = prog.cum3
     cum_lo = cum3[blk]
     # deterministic (block, loop, wf, cu)-keyed noise — identical for every
-    # fork and for the real execution (the paper's fork property)
+    # fork and for the real execution (the paper's fork property). The seed
+    # is carried as int32 end-to-end (a float32 seed aliases integers above
+    # 2^24 to the same noise stream: consecutive large seeds silently share
+    # a stream) and cast only here, split into exactly-representable
+    # halves folded into ONE scalar phase: the low half keeps the
+    # historical ``seed * 3.7`` term (seeds < 65536 reproduce the pre-int32
+    # stream bitwise — the high term is an exact +0, and the array-side
+    # graph is unchanged: one scalar-broadcast add, so XLA fusion and the
+    # downstream reduction orders stay put); the high half rotates by a
+    # golden-ratio multiple of 3.7 so nearby (lo, hi) pairs stay ulp-
+    # separated. f32 cannot hold 2^32 distinct phases, so pathological
+    # distant pairs can still collide — but no *consecutive* seeds do,
+    # at any magnitude.
     loop = (pos // (INSTR_PER_BLOCK * p_blocks)).astype(jnp.float32)
     wf_id = jnp.arange(pos.shape[1], dtype=jnp.float32)[None, :]
     cu_id = jnp.arange(pos.shape[0], dtype=jnp.float32)[:, None]
+    seed = jnp.asarray(seed, jnp.int32)
+    s_lo = (seed % 65536).astype(jnp.float32)
+    s_hi = (seed // 65536).astype(jnp.float32)
+    seed_phase = s_lo * 3.7 + s_hi * 2.2867257  # 3.7 * golden ratio
     h = jnp.sin(blk * 12.9898 + loop * 78.233 + wf_id * 37.719
-                + cu_id * 9.131 + seed * 3.7) * 43758.5453
+                + cu_id * 9.131 + seed_phase) * 43758.5453
     eps = (h - jnp.floor(h)) * 2.0 - 1.0
     return EpochCtx(blk=blk, i0_l=i0_l, s_l=s_l, eps=eps,
                     cum3=cum3, cum_lo=cum_lo)
@@ -370,18 +386,50 @@ def _true_wf_linear(c_f: jnp.ndarray) -> Tuple[jnp.ndarray, jnp.ndarray]:
     return i0, sens
 
 
+def init_carry(p_blocks, st: SimStatic) -> Carry:
+    """The scan-initial state for a ``p_blocks``-block program.
+
+    Exposed so the sweep layer can build the (batched) initial carry
+    *outside* the grid executables and donate its buffers to the dispatch
+    (``jax.jit(..., donate_argnums)``): the runtime may then release the
+    carry allocation as soon as the scan consumes it instead of pinning a
+    protected input copy for the whole dispatch (it cannot alias into the
+    trace outputs, whose shapes differ). Values are bitwise-identical to
+    the in-trace construction (same ops, same dtypes)."""
+    n_tables = max(st.n_cu // st.cus_per_table, 1)
+    plen = jnp.asarray(p_blocks * INSTR_PER_BLOCK, jnp.float32)
+    cu_off = (jnp.arange(st.n_cu, dtype=jnp.float32)[:, None] * 97.0) % plen
+    wf_off = jnp.arange(st.n_wf, dtype=jnp.float32)[None, :] * 1.0
+    pos0 = (cu_off + wf_off) % plen
+    return Carry(
+        pos=pos0,
+        react_i0=jnp.full((st.n_cu,), 50.0),
+        react_sens=jnp.full((st.n_cu,), 30.0),
+        wf_i0=jnp.full((st.n_cu, st.n_wf), 1.2),
+        wf_sens=jnp.full((st.n_cu, st.n_wf), 0.8),
+        table=PRED.table_init(n_tables, st.entries),
+        f_prev=jnp.full((st.n_cu,), 1.7),
+        # warm-start Pbar near the static-1.7 operating point
+        e_acc=jnp.full((st.n_cu,), 0.42 * 20.0),
+        t_acc=jnp.asarray(20.0),
+    )
+
+
 def _scan_sim(prog: Program, p_blocks, seed, st: SimStatic, ax: SimAxes,
-              mech: Union[str, jnp.ndarray]) -> Dict[str, jnp.ndarray]:
+              mech: Union[str, jnp.ndarray],
+              carry0: Optional[Carry] = None) -> Dict[str, jnp.ndarray]:
     """The simulation scan. ``mech`` is either a static mechanism name
     (maximally specialized trace, fused 11-way execute for non-oracle fork
     mechanisms) or a traced int32 id into ``FORK_MECHS`` (one executable
     shared by all fork mechanisms — the batched-sweep hot path).
 
     ``p_blocks`` (logical block count; array may be padded beyond it),
-    ``seed`` (noise key) and the ``SimAxes`` grid point are all traced so
-    the sweep layer can vmap over them. The scan runs to the static
+    ``seed`` (int32 noise key) and the ``SimAxes`` grid point are all traced
+    so the sweep layer can vmap over them. The scan runs to the static
     ``st.n_epochs``; epochs at index >= ``ax.n_ep`` are masked to zero in
     every output channel (the logical-epoch tail of a shorter grid point).
+    ``carry0`` overrides the initial state (the sweep layer passes a
+    donated ``init_carry``); ``None`` builds it in-trace.
     """
     static_mech = isinstance(mech, str)
     F = PWR.FREQS_GHZ
@@ -569,22 +617,8 @@ def _scan_sim(prog: Program, p_blocks, seed, st: SimStatic, ax: SimAxes,
         ys = jax.tree.map(lambda v: jnp.where(live, v, jnp.zeros_like(v)), ys)
         return new, ys
 
-    plen = jnp.asarray(p_blocks * INSTR_PER_BLOCK, jnp.float32)
-    cu_off = (jnp.arange(st.n_cu, dtype=jnp.float32)[:, None] * 97.0) % plen
-    wf_off = jnp.arange(st.n_wf, dtype=jnp.float32)[None, :] * 1.0
-    pos0 = (cu_off + wf_off) % plen
-    carry0 = Carry(
-        pos=pos0,
-        react_i0=jnp.full((st.n_cu,), 50.0),
-        react_sens=jnp.full((st.n_cu,), 30.0),
-        wf_i0=jnp.full((st.n_cu, st.n_wf), 1.2),
-        wf_sens=jnp.full((st.n_cu, st.n_wf), 0.8),
-        table=PRED.table_init(n_tables, st.entries),
-        f_prev=jnp.full((st.n_cu,), 1.7),
-        # warm-start Pbar near the static-1.7 operating point
-        e_acc=jnp.full((st.n_cu,), 0.42 * 20.0),
-        t_acc=jnp.asarray(20.0),
-    )
+    if carry0 is None:
+        carry0 = init_carry(p_blocks, st)
     _, ys = lax.scan(body, carry0, jnp.arange(st.n_epochs, dtype=jnp.int32))
     return ys
 
@@ -593,6 +627,19 @@ def _scan_sim(prog: Program, p_blocks, seed, st: SimStatic, ax: SimAxes,
 def _run_sim_jit(prog: Program, p_blocks, seed, ax: SimAxes, st: SimStatic,
                  mechanism: str) -> Dict[str, jnp.ndarray]:
     return _scan_sim(prog, p_blocks, seed, st, ax, mechanism)
+
+
+def seed_i32(seeds) -> np.ndarray:
+    """Fold integer seeds of any width into int32 by keeping the low 32
+    bits (two's complement; masked in Python so arbitrary-width ints never
+    overflow). The noise hash keys on int32; a deterministic wrap for
+    hash/time-derived 64-bit seeds beats both an OverflowError and the old
+    silent float32 aliasing."""
+    scalar = np.ndim(seeds) == 0
+    vals = [seeds] if scalar else list(seeds)
+    folded = np.asarray([int(s) & 0xFFFFFFFF for s in vals],
+                        np.uint32).astype(np.int32)
+    return folded[0] if scalar else folded
 
 
 def run_sim(prog: Program, sim: SimConfig, mechanism: str
@@ -607,8 +654,8 @@ def run_sim(prog: Program, sim: SimConfig, mechanism: str
     assert mechanism in MECHANISMS, mechanism
     assert sim.n_cu % sim.cus_per_domain == 0
     ys = _run_sim_jit(prog, jnp.int32(prog.n_blocks),
-                      jnp.float32(sim.seed), sim.axes(), sim.static_part(),
-                      mechanism)
+                      jnp.asarray(seed_i32(sim.seed)), sim.axes(),
+                      sim.static_part(), mechanism)
     return {k: np.asarray(v) for k, v in ys.items()}
 
 

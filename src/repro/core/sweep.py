@@ -1,6 +1,6 @@
-"""Batched sweep layer: one compiled executable per mechanism *family*
-for the whole figure grid, instead of one trace per (workload, mechanism,
-seed, grid-point) tuple.
+"""Batched sweep layer: ONE dispatch path — the device-sharded grid
+executable family — for every sweep, from a single ``run_suite`` call to a
+whole figure grid.
 
 The paper's headline figures (14/15/17/18) sweep ~10 mechanisms x ~10
 workloads x epoch granularities x objectives through the fork--pre-execute
@@ -10,39 +10,51 @@ engine. Run serially that is hundreds of scan traces; this layer instead
      the wrapped prefix-sum window semantics exact by rebuilding the doubled
      cumulative arrays at the *logical* length before padding, and threads
      the logical block count through the scan as a traced scalar);
-  2. stacks the padded programs into one pytree and ``vmap``s the
-     simulation scan across workloads and seeds (both traced: the noise
-     hash takes the seed as a scalar operand);
-  3. vmaps across mechanisms *within a family*: all fork--pre-execute
-     mechanisms (``simulate.FORK_MECHS``) share a shape-identical carry and
-     run as one executable indexed by a traced mechanism id, while the
-     static-frequency mechanisms compile to their own (fork-free, ~10x
-     cheaper) executable per frequency;
-  4. (``run_grid``) stacks whole ``SimAxes`` grid points — epoch_us, sigma,
-     capacity, bandwidth, EMA, lowered objective, logical epoch count —
-     along a leading axis, cartesian-products them with the workloads, and
-     shards the flattened (workload x grid-point) axis across local
-     devices with ``shard_map`` (a 1-device mesh is the identity layout).
-     Points with fewer logical epochs scan to the grid max and mask the
-     tail, the same pad-and-mask move applied to programs.
+  2. stacks whole ``SimAxes`` grid points — epoch_us, sigma, capacity,
+     bandwidth, EMA, lowered objective, logical epoch count — along a
+     leading axis, cartesian-products them with the workloads, and shards
+     the flattened (workload x grid-point) axis across local devices with
+     ``shard_map`` (a 1-device mesh is the identity layout). Points with
+     fewer logical epochs scan to the grid max and mask the tail, the same
+     pad-and-mask move applied to programs;
+  3. vmaps seeds and, within the fork family, mechanisms: all
+     fork--pre-execute mechanisms (``simulate.FORK_MECHS``) share a
+     shape-identical carry and run as one executable indexed by a traced
+     mechanism id, while oracle (whose prediction needs this epoch's forks)
+     and the static frequencies compile to their own executables;
+  4. deduplicates the static-frequency mechanisms across grid points: a
+     static mech's trace depends only on the execution-relevant axes
+     (``STATIC_EXEC_AXES``: epoch_us, sigma, cap_per_ghz, membw — never on
+     objective or table_ema), so each static mech scans once per
+     equivalence class of points and the result is broadcast back to every
+     grid key in the class (a 3-objective grid would otherwise triple
+     static-mech compute for bitwise-identical traces). ``DISPATCH_ROWS``
+     records the logical rows actually executed per family;
+  5. builds the initial scan carry outside the executables
+     (``simulate.init_carry``, jitted once per ``SimStatic``) and donates
+     it (``donate_argnums``), so the runtime can release the carry buffers
+     as soon as the scan consumes them instead of pinning a protected
+     input copy for the whole dispatch.
 
-A full Fig-15/17/18-style sweep over several epoch granularities and
-objectives is therefore at most two fork-family executables (the traced-id
-family plus oracle's specialized one) plus one per static frequency point;
-repeated sweeps with the same ``SimStatic`` hit the jit cache and never
-re-trace (``TRACE_COUNTS`` records compiles for tests/benchmarks).
+``run_suite`` IS a 1-point ``run_grid``: there is no parallel suite
+executable family, so every consumer — figures, benchmarks, the DVFS
+runtime manager, examples — dispatches through the same executables and
+cross-path comparisons are bitwise by construction. A full
+Fig-15/17/18-style sweep over several epoch granularities and objectives is
+at most two fork-family executables (the traced-id family plus oracle's
+specialized one) plus one per static mechanism; repeated sweeps with the
+same ``SimStatic`` and grid shape hit the jit cache and never re-trace
+(``TRACE_COUNTS`` records compiles for tests/benchmarks).
 
 Execution-model / caching contract: see ``repro.core.simulate``'s module
-docstring. ``run_grid`` output is bitwise-equal to per-point ``run_suite``
-(same traced-id family; vmap/shard_map preserve per-row reduction order —
-tested by ``tests/test_grid.py``), and ``run_suite`` matches the
-specialized per-mechanism ``run_sim`` traces to f32 exactness (tested to
-1e-5 by ``tests/test_sweep.py``). Across *differently specialized*
-executables (traced-id family vs a ``run_sim`` string-mech trace) the math
-is identical at the jaxpr level but XLA may fuse f32 chains differently;
-at epoch_us != 1 the resulting last-ulp differences can compound through
-the closed control loop over hundreds of epochs, so cross-family
-comparisons should use matching dispatch paths.
+docstring. The only remaining cross-family numerics boundary is the
+specialized per-mechanism ``run_sim`` string-mech trace: its math is
+identical to the traced-id family at the jaxpr level, but XLA may fuse f32
+chains differently, and at epoch_us != 1 the resulting last-ulp differences
+can compound through the closed control loop over hundreds of epochs.
+``run_suite``/``run_grid`` results agree with ``run_sim`` to f32 exactness
+(tested to 1e-5 by ``tests/test_sweep.py``); comparisons *among* sweep-layer
+results need no tolerance at all (bitwise, ``tests/test_grid.py``).
 """
 from __future__ import annotations
 
@@ -50,6 +62,7 @@ import collections
 import dataclasses
 import functools
 import itertools
+import warnings
 from typing import Dict, List, Optional, Sequence, Tuple, Union
 
 import jax
@@ -66,17 +79,25 @@ from repro.core.workloads import Program
 _STATIC_MECHS = ("static13", "static17", "static22")
 _PC_MECHS = ("pcstall", "accpc")
 
+# The SimAxes fields a static-frequency mechanism's trace actually depends
+# on: its frequency is fixed, so the objective lowering and the table EMA
+# are dead inputs to its executable. Grid points agreeing on these axes are
+# one equivalence class and share one static-mech scan (the class
+# representative runs with the class-max logical epoch count; shorter
+# points slice their prefix of it).
+STATIC_EXEC_AXES = ("epoch_us", "sigma", "cap_per_ghz", "membw")
 
-def _unpack_trace(arrs: Dict[str, jnp.ndarray], w: int, mech: str,
+
+def _unpack_trace(arrs: Dict[str, jnp.ndarray], i: int, mech: str,
                   squeeze_seed: bool,
                   n_ep: Optional[int] = None) -> Dict[str, np.ndarray]:
-    """Cut one batch entry down to the ``run_sim`` trace schema: squeeze
-    the seed axis when it was implicit, slice the epoch axis to the
+    """Cut flat-row ``i`` of a batch down to the ``run_sim`` trace schema:
+    squeeze the seed axis when it was implicit, slice the epoch axis to the
     logical count (``None`` = full), and drop the ``hit_rate`` telemetry
     channel for non-PC mechanisms (the traced family computes it for
     all)."""
     ep = slice(None) if n_ep is None else slice(None, n_ep)
-    tr = {k: np.asarray(v[w, 0, ep] if squeeze_seed else v[w, :, ep])
+    tr = {k: np.asarray(v[i, 0, ep] if squeeze_seed else v[i, :, ep])
           for k, v in arrs.items()}
     if mech not in _PC_MECHS:
         tr.pop("hit_rate", None)
@@ -88,10 +109,15 @@ def _unpack_trace(arrs: Dict[str, jnp.ndarray], w: int, mech: str,
 AXIS_FIELDS = ("epoch_us", "sigma", "cap_per_ghz", "membw", "table_ema",
                "objective", "n_epochs")
 
-# executable-compile counter, keyed by family ("suite_forks", "grid_forks",
-# "grid_oracle", ...): incremented at trace time only, so tests and
+# executable-compile counter, keyed by family ("grid_forks", "grid_oracle",
+# "grid_static17", ...): incremented at trace time only, so tests and
 # benchmarks can assert cache hits / count fork-family compiles per figure.
 TRACE_COUNTS: collections.Counter = collections.Counter()
+
+# logical (workload x grid-point) rows dispatched per family, incremented on
+# every dispatch (cached or not): the static-mechanism dedup shows up here
+# as W x n_classes rows per static family instead of W x n_points.
+DISPATCH_ROWS: collections.Counter = collections.Counter()
 
 
 def pad_program(prog: Program, p_max: int) -> Program:
@@ -133,85 +159,8 @@ def _stack_programs(progs: Sequence[Program]) -> Tuple[Program, jnp.ndarray]:
     return stacked, p_logical
 
 
-@functools.partial(jax.jit, static_argnames=("st",))
-def _suite_forks(progs: Program, p_logical, seeds, mech_ids, axes: SimAxes,
-                 st: SimStatic):
-    """(W workloads) x (S seeds) x (M fork mechanisms) in one executable."""
-    TRACE_COUNTS["suite_forks"] += 1
-    def per_prog(prog, p_blocks):
-        def per_seed(seed):
-            return jax.vmap(
-                lambda m: SIM._scan_sim(prog, p_blocks, seed, st, axes, m)
-            )(mech_ids)
-        return jax.vmap(per_seed)(seeds)
-    return jax.vmap(per_prog)(progs, p_logical)
-
-
-@functools.partial(jax.jit, static_argnames=("st", "mechanism"))
-def _suite_per_mech(progs: Program, p_logical, seeds, axes: SimAxes,
-                    st: SimStatic, mechanism: str):
-    """(W workloads) x (S seeds) for one statically-specialized mechanism
-    (the fork-free static points, and oracle — whose prediction needs this
-    epoch's forks and so can't join the fused traced family)."""
-    TRACE_COUNTS[f"suite_{mechanism}"] += 1
-    def per_prog(prog, p_blocks):
-        return jax.vmap(
-            lambda seed: SIM._scan_sim(prog, p_blocks, seed, st, axes,
-                                       mechanism)
-        )(seeds)
-    return jax.vmap(per_prog)(progs, p_logical)
-
-
-def run_suite(programs: Union[Dict[str, Program], Sequence[Program]],
-              sim: SimConfig, mechanisms: Sequence[str] = MECHANISMS,
-              seeds: Optional[Sequence[int]] = None
-              ) -> Dict[str, Dict[str, Dict[str, np.ndarray]]]:
-    """Batched-sweep counterpart of calling ``run_sim`` in nested loops.
-
-    Returns ``{workload_name: {mechanism: trace}}`` with the same per-trace
-    arrays ``run_sim`` produces. If ``seeds`` is given, every trace array
-    gains a leading seed axis; otherwise ``sim.seed`` is used and the axis
-    is squeezed away.
-    """
-    if isinstance(programs, dict):
-        names = list(programs)
-        progs = [programs[n] for n in names]
-    else:
-        progs = list(programs)
-        names = [p.name for p in progs]
-    assert progs, "run_suite needs at least one program"
-    for m in mechanisms:
-        assert m in MECHANISMS, m
-    assert sim.n_cu % sim.cus_per_domain == 0
-    squeeze_seed = seeds is None
-    seed_arr = jnp.asarray([sim.seed] if seeds is None else list(seeds),
-                           jnp.float32)
-    stacked, p_logical = _stack_programs(progs)
-    st, axes = sim.static_part(), sim.axes()
-
-    fork_mechs = [m for m in mechanisms
-                  if m not in _STATIC_MECHS and m != "oracle"]
-    by_mech: Dict[str, Dict[str, jnp.ndarray]] = {}
-    if fork_mechs:
-        ids = jnp.asarray([SIM.FORK_MECH_IDS[m] for m in fork_mechs],
-                          jnp.int32)
-        ys = _suite_forks(stacked, p_logical, seed_arr, ids, axes, st)
-        for j, m in enumerate(fork_mechs):
-            by_mech[m] = {k: v[:, :, j] for k, v in ys.items()}
-    for m in mechanisms:
-        if m in _STATIC_MECHS or m == "oracle":
-            by_mech[m] = _suite_per_mech(stacked, p_logical, seed_arr,
-                                         axes, st, m)
-
-    out: Dict[str, Dict[str, Dict[str, np.ndarray]]] = {}
-    for w, name in enumerate(names):
-        out[name] = {m: _unpack_trace(by_mech[m], w, m, squeeze_seed)
-                     for m in mechanisms}
-    return out
-
-
 # ---------------------------------------------------------------------------
-# Device-sharded grid sweeps
+# The grid executable family — the only dispatch path
 # ---------------------------------------------------------------------------
 
 
@@ -221,31 +170,34 @@ def _grid_exec(st: SimStatic, n_dev: int, mechanism: Optional[str]):
     executable: the flattened (workload x grid-point) axis is split across
     an ``n_dev``-device mesh with ``shard_map`` (identity on one device),
     and each local entry vmaps seeds (x traced fork-mechanism ids when
-    ``mechanism`` is None)."""
+    ``mechanism`` is None). The initial scan carry arrives pre-built and
+    donated (see ``simulate.init_carry``)."""
     mesh = Mesh(np.asarray(jax.local_devices()[:n_dev]), ("i",))
     family = "grid_forks" if mechanism is None else f"grid_{mechanism}"
 
-    @jax.jit
-    def dispatch(progs, p_log, axes, seeds, mech_ids):
+    @functools.partial(jax.jit, donate_argnums=(0,))
+    def dispatch(carry0, progs, p_log, axes, seeds, mech_ids):
         TRACE_COUNTS[family] += 1
 
-        def shard_fn(progs_s, p_log_s, axes_s, seeds_s, mech_ids_s):
-            def per_entry(prog, p_blocks, ax):
+        def shard_fn(carry0_s, progs_s, p_log_s, axes_s, seeds_s,
+                     mech_ids_s):
+            def per_entry(c0, prog, p_blocks, ax):
                 def per_seed(seed):
                     if mechanism is None:
                         return jax.vmap(
                             lambda m: SIM._scan_sim(prog, p_blocks, seed, st,
-                                                    ax, m))(mech_ids_s)
+                                                    ax, m, carry0=c0)
+                        )(mech_ids_s)
                     return SIM._scan_sim(prog, p_blocks, seed, st, ax,
-                                         mechanism)
+                                         mechanism, carry0=c0)
                 return jax.vmap(per_seed)(seeds_s)
-            return jax.vmap(per_entry)(progs_s, p_log_s, axes_s)
+            return jax.vmap(per_entry)(carry0_s, progs_s, p_log_s, axes_s)
 
         return shard_map(
             shard_fn, mesh=mesh,
-            in_specs=(P("i"), P("i"), P("i"), P(), P()),
+            in_specs=(P("i"), P("i"), P("i"), P("i"), P(), P()),
             out_specs=P("i"), check_rep=False,
-        )(progs, p_log, axes, seeds, mech_ids)
+        )(carry0, progs, p_log, axes, seeds, mech_ids)
 
     return dispatch
 
@@ -255,7 +207,10 @@ def _grid_points(axes_grid) -> Tuple[Tuple[str, ...], List[dict]]:
 
     Dict-of-lists => cartesian product of the values; list-of-dicts =>
     explicit points (for coupled axes like the paper's epoch_us/n_epochs
-    granularity sweep). Output keys are the point's values in axis order.
+    granularity sweep). Points must share the same axis *set*; their key
+    insertion order is normalized to the first point's (callers building
+    points from heterogeneous sources are describing the same grid).
+    Output keys are the point's values in axis order.
     """
     if isinstance(axes_grid, dict):
         names = tuple(axes_grid)
@@ -272,8 +227,9 @@ def _grid_points(axes_grid) -> Tuple[Tuple[str, ...], List[dict]]:
         assert points, "axes_grid needs at least one point"
         names = tuple(points[0])
         for p in points:
-            assert tuple(p) == names, \
-                f"grid points must share axes: {tuple(p)} vs {names}"
+            assert set(p) == set(names), \
+                f"grid points must share axes: {sorted(p)} vs {sorted(names)}"
+        points = [{n: p[n] for n in names} for p in points]
     for p in points:
         for k in p:
             assert k in AXIS_FIELDS, \
@@ -290,6 +246,95 @@ def _pad_flat(tree, n: int):
         reps = -(-n // a.shape[0])
         return jnp.concatenate([a] * reps, axis=0)[:n]
     return jax.tree.map(pad, tree)
+
+
+def _flat_operands(stacked: Program, p_logical: jnp.ndarray,
+                   sims: Sequence[SimConfig], n_dev: int):
+    """Flatten workload-major (flat index i = w * G + g for G grid points)
+    and pad the flat axis to a device multiple for ``shard_map``."""
+    W, G = int(p_logical.shape[0]), len(sims)
+    axes_g = jax.tree.map(lambda *xs: jnp.stack(xs),
+                          *[s.axes() for s in sims])
+    progs_flat = jax.tree.map(lambda a: jnp.repeat(a, G, axis=0), stacked)
+    p_log_flat = jnp.repeat(p_logical, G, axis=0)
+    axes_flat = jax.tree.map(
+        lambda a: jnp.tile(a, (W,) + (1,) * (a.ndim - 1)), axes_g)
+    n_flat = W * G
+    n_pad = -(-n_flat // n_dev) * n_dev
+    if n_pad != n_flat:
+        progs_flat = _pad_flat(progs_flat, n_pad)
+        p_log_flat = _pad_flat(p_log_flat, n_pad)
+        axes_flat = _pad_flat(axes_flat, n_pad)
+    return progs_flat, p_log_flat, axes_flat, n_flat
+
+
+@functools.lru_cache(maxsize=None)
+def _carry_builder(st: SimStatic):
+    """Jitted batched ``init_carry`` (compiled once per SimStatic + flat
+    shape): the carry is rebuilt on every dispatch because it is donated,
+    so the build itself must not re-trace on the warm path."""
+    return jax.jit(jax.vmap(lambda pb: SIM.init_carry(pb, st)))
+
+
+def _run_family(st: SimStatic, n_dev: int, mechanism: Optional[str],
+                operands, seed_arr: jnp.ndarray, mech_ids: jnp.ndarray
+                ) -> Dict[str, jnp.ndarray]:
+    """Dispatch one executable family over pre-flattened grid operands."""
+    progs_flat, p_log_flat, axes_flat, n_flat = operands
+    family = "grid_forks" if mechanism is None else f"grid_{mechanism}"
+    DISPATCH_ROWS[family] += n_flat
+    # the initial scan carry is rebuilt per dispatch: it is donated to the
+    # executable, which invalidates its buffers
+    carry0 = _carry_builder(st)(p_log_flat)
+    with warnings.catch_warnings():
+        # The donated carry can never alias into the executable's outputs
+        # (the traces carry epoch/seed/mech axes the carry lacks), so XLA's
+        # "not usable" warning is expected by construction on every
+        # backend; donation still releases the init buffers to the runtime
+        # as soon as the scan consumes them instead of pinning them for
+        # the whole dispatch.
+        warnings.filterwarnings(
+            "ignore", message="Some donated buffers were not usable")
+        return _grid_exec(st, n_dev, mechanism)(
+            carry0, progs_flat, p_log_flat, axes_flat, seed_arr, mech_ids)
+
+
+def _static_classes(sims: Sequence[SimConfig]
+                    ) -> Tuple[List[int], List[SimConfig]]:
+    """Partition grid points into static-mechanism equivalence classes.
+
+    Returns ``(class_of, class_sims)``: ``class_of[g]`` is the class index
+    of point ``g``, and ``class_sims[c]`` the class representative — the
+    point's execution-relevant axes with the class-max logical epoch count
+    (the mask only zeroes outputs past ``n_ep``; the scan state is causal,
+    so every member's trace is a prefix slice of the representative's)."""
+    class_of: List[int] = []
+    class_sims: List[SimConfig] = []
+    index: Dict[tuple, int] = {}
+    for s in sims:
+        ck = tuple(getattr(s, a) for a in STATIC_EXEC_AXES)
+        c = index.setdefault(ck, len(class_sims))
+        if c == len(class_sims):
+            class_sims.append(s)
+        elif s.n_epochs > class_sims[c].n_epochs:
+            class_sims[c] = s
+        class_of.append(c)
+    return class_of, class_sims
+
+
+def run_suite(programs: Union[Dict[str, Program], Sequence[Program]],
+              sim: SimConfig, mechanisms: Sequence[str] = MECHANISMS,
+              seeds: Optional[Sequence[int]] = None
+              ) -> Dict[str, Dict[str, Dict[str, np.ndarray]]]:
+    """Batched-sweep counterpart of calling ``run_sim`` in nested loops.
+
+    This IS a 1-point ``run_grid`` — same executables, same numerics, no
+    parallel dispatch family. Returns ``{workload_name: {mechanism: trace}}``
+    with the same per-trace arrays ``run_sim`` produces. If ``seeds`` is
+    given, every trace array gains a leading seed axis; otherwise
+    ``sim.seed`` is used and the axis is squeezed away.
+    """
+    return run_grid(programs, sim, [{}], mechanisms, seeds)[()]
 
 
 def run_grid(programs: Union[Dict[str, Program], Sequence[Program]],
@@ -312,7 +357,11 @@ def run_grid(programs: Union[Dict[str, Program], Sequence[Program]],
     the flattened (workload x grid-point) axis is sharded across local
     devices with ``shard_map`` (1-device mesh = identity). Fork--pre-
     execute mechanisms share one traced-id executable, oracle gets its
-    specialized one, static frequencies one each — for any grid size.
+    specialized one — for any grid size. Static-frequency mechanisms are
+    deduplicated across grid points first: they scan once per
+    ``STATIC_EXEC_AXES`` equivalence class and the class trace is broadcast
+    back to every member's grid key (bitwise — the class axes are the only
+    live inputs of a static mech's executable).
 
     When logical epoch counts are strongly coupled to an axis (the paper's
     granularity sweeps pair 1 us with 6x the epochs of 100 us), scanning
@@ -363,54 +412,57 @@ def run_grid(programs: Union[Dict[str, Program], Sequence[Program]],
             return {k: out[k] for k in keys}
 
     squeeze_seed = seeds is None
-    seed_arr = jnp.asarray(
-        [static_cfg.seed] if seeds is None else list(seeds), jnp.float32)
+    seed_arr = jnp.asarray(SIM.seed_i32(
+        [static_cfg.seed] if seeds is None else list(seeds)))
     stacked, p_logical = _stack_programs(progs)
     W, G = len(progs), len(points)
 
     sims = [dataclasses.replace(static_cfg, **p) for p in points]
     n_ep_max = max(s.n_epochs for s in sims)
     st = static_cfg.static_part(n_epochs=n_ep_max)
-    axes_g = jax.tree.map(lambda *xs: jnp.stack(xs),
-                          *[s.axes() for s in sims])
-
-    # flatten workload-major: flat index i = w * G + g
-    progs_flat = jax.tree.map(lambda a: jnp.repeat(a, G, axis=0), stacked)
-    p_log_flat = jnp.repeat(p_logical, G, axis=0)
-    axes_flat = jax.tree.map(
-        lambda a: jnp.tile(a, (W,) + (1,) * (a.ndim - 1)), axes_g)
-
-    n_flat = W * G
-    n_dev = jax.local_device_count()
-    n_pad = -(-n_flat // n_dev) * n_dev
-    if n_pad != n_flat:
-        progs_flat = _pad_flat(progs_flat, n_pad)
-        p_log_flat = _pad_flat(p_log_flat, n_pad)
-        axes_flat = _pad_flat(axes_flat, n_pad)
+    # never shard wider than the flat axis: a 1-point manager report on an
+    # 8-device host would otherwise pad one row to 8 identical scans
+    n_dev = min(jax.local_device_count(), W * G)
+    full_ops = _flat_operands(stacked, p_logical, sims, n_dev)
 
     fork_mechs = [m for m in mechanisms
                   if m not in _STATIC_MECHS and m != "oracle"]
+    static_mechs = [m for m in mechanisms if m in _STATIC_MECHS]
     by_mech: Dict[str, Dict[str, jnp.ndarray]] = {}
+    no_ids = jnp.zeros((0,), jnp.int32)  # specialized mechs ignore mech_ids
     if fork_mechs:
         ids = jnp.asarray([SIM.FORK_MECH_IDS[m] for m in fork_mechs],
                           jnp.int32)
-        ys = _grid_exec(st, n_dev, None)(progs_flat, p_log_flat, axes_flat,
-                                         seed_arr, ids)
+        ys = _run_family(st, n_dev, None, full_ops, seed_arr, ids)
         for j, m in enumerate(fork_mechs):
             by_mech[m] = {k: v[:, :, j] for k, v in ys.items()}
-    no_ids = jnp.zeros((0,), jnp.int32)  # specialized mechs ignore mech_ids
-    for m in mechanisms:
-        if m in _STATIC_MECHS or m == "oracle":
-            by_mech[m] = _grid_exec(st, n_dev, m)(
-                progs_flat, p_log_flat, axes_flat, seed_arr, no_ids)
+    if "oracle" in mechanisms:
+        by_mech["oracle"] = _run_family(st, n_dev, "oracle", full_ops,
+                                        seed_arr, no_ids)
+    class_of: List[int] = list(range(G))
+    C = G
+    if static_mechs:
+        class_of, class_sims = _static_classes(sims)
+        C = len(class_sims)
+        if C == G:
+            static_ops, static_dev = full_ops, n_dev
+        else:
+            static_dev = min(jax.local_device_count(), W * C)
+            static_ops = _flat_operands(stacked, p_logical, class_sims,
+                                        static_dev)
+        for m in static_mechs:
+            by_mech[m] = _run_family(st, static_dev, m, static_ops,
+                                     seed_arr, no_ids)
 
     out: Dict[tuple, Dict[str, Dict[str, Dict[str, np.ndarray]]]] = {}
     for g, (key, sim_pt) in enumerate(zip(keys, sims)):
         out[key] = {}
         for w, name in enumerate(names_w):
-            i = w * G + g
+            i_full, i_cls = w * G + g, w * C + class_of[g]
             out[key][name] = {
-                m: _unpack_trace(by_mech[m], i, m, squeeze_seed,
+                m: _unpack_trace(by_mech[m],
+                                 i_cls if m in _STATIC_MECHS else i_full,
+                                 m, squeeze_seed,
                                  n_ep=sim_pt.n_epochs) for m in mechanisms}
     return out
 

@@ -13,6 +13,7 @@ from typing import Dict, Optional, Sequence
 import numpy as np
 
 from repro.configs.base import ModelConfig, ShapeConfig
+from repro.core import power as PWR
 from repro.core.simulate import SimConfig, ednp, prediction_accuracy
 from repro.core.sweep import run_grid
 from repro.core.workloads import Program
@@ -40,7 +41,10 @@ class DVFSManager:
         budget = 0.9 * base["work"].sum()
         E0, D0, M0 = ednp(base, budget, epoch_us)
         E, D, M = ednp(tr, budget, epoch_us)
-        h = np.bincount(tr["fidx"].ravel(), minlength=10) / tr["fidx"].size
+        # one bin per V/f state of the simulator's ladder: a ladder change
+        # must not silently truncate or mislabel freq_timeshare
+        h = np.bincount(tr["fidx"].ravel(),
+                        minlength=len(PWR.FREQS_GHZ)) / tr["fidx"].size
         return {
             "accuracy": prediction_accuracy(tr),
             "energy_norm": E / E0,

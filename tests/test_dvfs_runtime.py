@@ -48,10 +48,13 @@ def test_manager_reports_energy_savings():
 def test_manager_report_well_formed_and_jit_cached():
     """report(): freq_timeshare is a distribution, metrics are finite, and
     repeated calls dispatch cached executables (no re-trace)."""
+    from repro.core import power as PWR
     from repro.core import sweep as SW
     cfg = get_config("glm4-9b")
     mgr = DVFSManager.for_model(cfg, TRAIN_4K, n_cu=8)
     rep = mgr.report()
+    # one histogram bin per V/f state of the simulator's ladder
+    assert len(rep["freq_timeshare"]) == len(PWR.FREQS_GHZ)
     assert abs(sum(rep["freq_timeshare"]) - 1.0) < 1e-2
     assert all(x >= 0.0 for x in rep["freq_timeshare"])
     assert np.isfinite(rep["ed2p_norm"]) and np.isfinite(rep["accuracy"])

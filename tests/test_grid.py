@@ -1,8 +1,11 @@
 """Equivalence and caching tests for the device-sharded grid sweep
-(``repro.core.sweep.run_grid``): a whole (epoch_us x objective) figure grid
-must (a) reproduce per-point ``run_suite`` results to 1e-5 — including
-masked logical-epoch tails and padded mixed-size workloads — and (b)
-compile at most two fork-family executables regardless of grid size."""
+(``repro.core.sweep.run_grid`` — the ONE dispatch path every sweep uses):
+a whole (epoch_us x objective) figure grid must (a) reproduce per-point
+``run_suite`` results (bitwise — run_suite is itself a 1-point run_grid) —
+including masked logical-epoch tails and padded mixed-size workloads —
+(b) compile at most two fork-family executables regardless of grid size,
+and (c) execute each static-frequency mechanism once per
+``STATIC_EXEC_AXES`` equivalence class, not once per grid point."""
 import dataclasses
 
 import jax
@@ -10,7 +13,7 @@ import numpy as np
 import pytest
 
 from repro.core import sweep as SW
-from repro.core.simulate import SimConfig, objective_weights
+from repro.core.simulate import SimConfig, objective_weights, run_sim
 from repro.core.sweep import run_grid, run_suite
 from repro.core.workloads import get_workload, make_program
 
@@ -69,6 +72,80 @@ def test_grid_fork_family_executable_count(progs):
     assert dict(SW.TRACE_COUNTS) == before  # cache hit: zero new compiles
 
 
+def test_static_mech_dedup_rows_and_broadcast(progs):
+    """Acceptance: on a multi-objective grid each static mechanism compiles
+    AND executes once per (epoch_us, sigma, cap_per_ghz, membw) equivalence
+    class — a 3-objective grid must not triple static-mech compute — and
+    the class trace is broadcast bitwise to every member grid key."""
+    sim = dataclasses.replace(SIM, n_cu=4)  # SimStatic unique to this test
+    grid = {"epoch_us": [1.0, 10.0],
+            "objective": ["ed2p", "edp", "perfcap05"]}
+    W, G, C = len(WORKLOADS), 6, 2
+    SW.TRACE_COUNTS.clear()
+    SW.DISPATCH_ROWS.clear()
+    res = run_grid(progs, sim, grid, ("static17", "pcstall"))
+    assert SW.DISPATCH_ROWS["grid_forks"] == W * G
+    assert SW.DISPATCH_ROWS["grid_static17"] == W * C   # deduped rows
+    assert SW.TRACE_COUNTS["grid_static17"] == 1        # one compile
+    run_grid(progs, sim, grid, ("static17", "pcstall"))
+    assert SW.TRACE_COUNTS["grid_static17"] == 1        # jit cache hit
+    assert SW.DISPATCH_ROWS["grid_static17"] == 2 * W * C
+    for T in (1.0, 10.0):
+        for wl in WORKLOADS:
+            a = res[(T, "ed2p")][wl]["static17"]
+            for obj in ("edp", "perfcap05"):
+                b = res[(T, obj)][wl]["static17"]
+                for k in a:
+                    np.testing.assert_array_equal(
+                        a[k], b[k], err_msg=f"{T}/{obj}/{wl}/{k}")
+        # the deduped trace still equals a per-point run_suite
+        suite = run_suite(progs, dataclasses.replace(sim, epoch_us=T),
+                          ("static17",))
+        for wl in WORKLOADS:
+            _assert_traces_match(res[(T, "ed2p")][wl]["static17"],
+                                 suite[wl]["static17"], f"dedup/{T}/{wl}")
+
+
+def test_static_dedup_coupled_epoch_counts(progs):
+    """Points sharing execution axes but differing in logical n_epochs form
+    ONE class: the representative scans to the class max and each member
+    slices its logical prefix."""
+    points = [{"epoch_us": 1.0, "n_epochs": 24, "objective": "ed2p"},
+              {"epoch_us": 1.0, "n_epochs": 48, "objective": "edp"}]
+    SW.DISPATCH_ROWS.clear()
+    res = run_grid(progs, SIM, points, ("static17",))
+    assert SW.DISPATCH_ROWS["grid_static17"] == len(WORKLOADS)  # one class
+    for pt in points:
+        key = (1.0, pt["n_epochs"], pt["objective"])
+        suite = run_suite(progs,
+                          dataclasses.replace(SIM, n_epochs=pt["n_epochs"]),
+                          ("static17",))
+        for wl in WORKLOADS:
+            got = res[key][wl]["static17"]
+            assert got["work"].shape[0] == pt["n_epochs"]
+            _assert_traces_match(got, suite[wl]["static17"], f"{key}/{wl}")
+
+
+def test_grid_point_key_order_normalized(progs):
+    """List-of-dicts points delivering the same axes in different key
+    insertion order describe the same grid (keys follow the first point's
+    axis order); genuinely different axis *sets* still assert."""
+    a = run_grid(progs, SIM, [{"epoch_us": 1.0, "n_epochs": 32},
+                              {"n_epochs": 48, "epoch_us": 10.0}],
+                 ("pcstall",))
+    assert list(a) == [(1.0, 32), (10.0, 48)]
+    b = run_grid(progs, SIM, [{"epoch_us": 1.0, "n_epochs": 32},
+                              {"epoch_us": 10.0, "n_epochs": 48}],
+                 ("pcstall",))
+    for key in a:
+        for wl in WORKLOADS:
+            for k, v in a[key][wl]["pcstall"].items():
+                np.testing.assert_array_equal(v, b[key][wl]["pcstall"][k])
+    with pytest.raises(AssertionError, match="share axes"):
+        run_grid(progs, SIM, [{"epoch_us": 1.0}, {"sigma": 0.1}],
+                 ("pcstall",))
+
+
 def test_grid_masked_epoch_tail(progs):
     """Coupled (epoch_us, n_epochs) points: the shorter point scans to the
     grid max with its tail masked, and still matches a run_suite sized
@@ -116,6 +193,21 @@ def test_grid_padded_workload_mix():
             _assert_traces_match(grid[(T,)][prog.name]["pcstall"],
                                  suite[prog.name]["pcstall"],
                                  f"{T}/{prog.name}")
+
+
+def test_grid_odd_flat_axis(progs):
+    """A flat (workload x grid-point) axis that is not a device multiple
+    exercises the _pad_flat cycling path on multi-device hosts (and is the
+    identity on one device, where the mesh is capped at the flat length);
+    either way every row matches the serial engine."""
+    three = {**progs, "small": make_program("small", "phased", 5, P=256)}
+    res = run_grid(three, SIM, {"epoch_us": [1.0]}, ("pcstall",))[(1.0,)]
+    for name, prog in three.items():
+        ser = run_sim(prog, SIM, "pcstall")
+        for k in ser:
+            np.testing.assert_allclose(res[name]["pcstall"][k], ser[k],
+                                       rtol=1e-5, atol=1e-5,
+                                       err_msg=f"{name}/{k}")
 
 
 def test_grid_seed_axis(progs):

@@ -1,6 +1,9 @@
 """Equivalence tests for the batched sweep layer and the fused Pallas
 PC-table kernels: the batched/compiled fast paths must reproduce the serial
-reference paths bitwise (or to f32-roundoff tolerance)."""
+reference paths bitwise (or to f32-roundoff tolerance). ``run_suite`` is a
+1-point ``run_grid`` — there is no parallel suite dispatch family — so the
+suite/grid equivalence here is bitwise by construction and asserted as
+such."""
 import dataclasses
 
 import jax.numpy as jnp
@@ -9,7 +12,7 @@ import pytest
 
 from repro.core import predictors as PRED
 from repro.core.simulate import SimConfig, _predict_instr, run_sim
-from repro.core.sweep import pad_program, run_suite, suite_metrics
+from repro.core.sweep import pad_program, run_grid, run_suite, suite_metrics
 from repro.core.workloads import get_workload, make_program
 
 RNG = np.random.default_rng(7)
@@ -86,6 +89,45 @@ def test_seed_axis(progs):
                                rtol=1e-5, atol=1e-5)
     # different seeds produce different noise realizations
     assert not np.allclose(tr["work"][0], tr["work"][1])
+
+
+@pytest.mark.parametrize("epoch_us", [1.0, 10.0, 50.0])
+def test_suite_is_one_point_grid_bitwise(progs, epoch_us):
+    """run_suite IS a 1-point run_grid: every mechanism family (static,
+    traced-id fork, oracle) is bitwise-equal between the two entry points —
+    the cross-family last-ulp footgun is unrepresentable."""
+    mechs = MECHS + ("oracle",)
+    sim = dataclasses.replace(SIM, epoch_us=epoch_us)
+    suite = run_suite(progs, sim, mechs)
+    grid = run_grid(progs, SIM, {"epoch_us": [epoch_us]}, mechs)[(epoch_us,)]
+    for wl in WORKLOADS:
+        for m in mechs:
+            assert set(suite[wl][m]) == set(grid[wl][m])
+            for k, v in suite[wl][m].items():
+                np.testing.assert_array_equal(
+                    v, grid[wl][m][k], err_msg=f"{epoch_us}/{wl}/{m}/{k}")
+
+
+def test_large_seeds_with_colliding_f32_images(progs):
+    """Regression: seeds ride int32 end-to-end. Two integer seeds above
+    2^24 whose float32 images collide (the old path cast seeds to f32 and
+    silently aliased them onto one noise stream) must produce distinct
+    traces."""
+    s1, s2 = 3 * 2 ** 24, 3 * 2 ** 24 + 1
+    assert np.float32(s1) == np.float32(s2)  # they DO collide in f32
+    out = run_suite(progs, SIM, ("pcstall",), seeds=[s1, s2])
+    tr = out["comd"]["pcstall"]
+    assert not np.allclose(tr["work"][0], tr["work"][1])
+    # and the int32 path matches the serial engine at a large seed too
+    ser = run_sim(progs["comd"], dataclasses.replace(SIM, seed=s2), "pcstall")
+    np.testing.assert_allclose(tr["work"][1], ser["work"],
+                               rtol=1e-5, atol=1e-5)
+    # seeds beyond int32 — including >= 2^63 hash-derived ones — fold
+    # deterministically to their low 32 bits (no OverflowError) and still
+    # get distinct streams
+    out64 = run_suite(progs, SIM, ("pcstall",), seeds=[2 ** 63, 2 ** 63 + 1])
+    tr64 = out64["comd"]["pcstall"]
+    assert not np.allclose(tr64["work"][0], tr64["work"][1])
 
 
 def test_suite_metrics_matches_run_workload(progs):
