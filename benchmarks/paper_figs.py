@@ -34,6 +34,7 @@ from typing import Dict, List
 
 import numpy as np
 
+from repro.core import mechanisms as MECH
 from repro.core.simulate import (SimConfig, ednp, prediction_accuracy,
                                  run_sim)
 from repro.core.sweep import run_grid, run_suite, suite_metrics
@@ -42,10 +43,13 @@ from repro.core.workloads import get_workload
 RESULTS = Path(__file__).resolve().parents[1] / "experiments" / "results"
 RESULTS.mkdir(parents=True, exist_ok=True)
 
-CORE_MECHS = ("static13", "static17", "static22", "stall", "lead", "crit",
-              "crisp", "accreac", "pcstall", "accpc", "oracle")
-FAST_MECHS = ("static13", "static17", "static22", "crisp", "accreac",
-              "pcstall", "accpc", "oracle")
+# the figure suites come from the MechanismSpec registry: the full paper
+# family, and the fast subset that drops the three slowest-to-separate
+# CU-reactive baselines (kept: the best reactive, CRISP, and the
+# fork-accurate ACCREAC)
+CORE_MECHS = MECH.BUILTIN_NAMES
+FAST_MECHS = tuple(m for m in CORE_MECHS if m not in ("stall", "lead",
+                                                      "crit"))
 N_EPOCHS = 800
 
 
@@ -74,7 +78,8 @@ def _progs(names: List[str]) -> Dict:
 def fig14_accuracy() -> Dict:
     """Prediction accuracy by mechanism (paper Fig 14)."""
     def run():
-        mechs = tuple(m for m in CORE_MECHS if not m.startswith("static"))
+        mechs = tuple(m for m in CORE_MECHS
+                      if MECH.get(m).family != "static")
         # single-point grid: same sharded dispatch path as the sweeps
         traces = run_grid(_progs(WORKLOADS_FAST), SimConfig(n_epochs=N_EPOCHS),
                           {"epoch_us": [1.0]}, mechs)[(1.0,)]

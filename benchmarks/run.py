@@ -8,10 +8,12 @@ us/epoch (the jit-cached engine pays tracing once per (SimStatic, mechanism);
 the seed engine paid it on every call), the sweep benchmark times the
 batched ``run_suite`` fig15 path (a 1-point ``run_grid`` — the single
 dispatch family every sweep uses) against the seed-style serial path
-(re-traced per call), and the grid benchmark times a whole
+(re-traced per call), the grid benchmark times a whole
 (epoch_us x objective) figure grid through the device-sharded ``run_grid``
 against a per-point ``run_suite`` loop (interleaved timings; the grid side
-additionally dedupes static mechanisms to one scan per execution-class).
+additionally dedupes mechanisms to one scan per exec-axes equivalence
+class), and the grid_ema benchmark isolates the spec-driven reactive
+dedup on a table_ema-only axis (``dedup=True`` vs ``dedup=False``).
 Results are also written to ``BENCH_sweep.json`` at the repo root so the
 speedups are recorded in the repo's perf trajectory.
 
@@ -251,7 +253,8 @@ def _bench_grid(quick: bool = False):
         (f"grid_2x2_total", grid_cold_s * 1e6,
          f"run_grid cold incl compile ({loop_cold_s / grid_cold_s:.1f}x); "
          f"{fork_compiles} fork-family compiles for the whole grid; "
-         f"static dedup {static_rows} rows vs {fork_rows} fork rows"),
+         f"static dedup {static_rows} scan rows vs {fork_rows} fork "
+         "mech-rows"),
         (f"grid_2x2_warm", grid_s * 1e6,
          f"run_grid jit-cache hit ({loop_s / grid_s:.1f}x vs warm loop); "
          f"max|dev| vs loop {dev:.2g}"),
@@ -267,6 +270,86 @@ def _bench_grid(quick: bool = False):
               "static_mech_rows_deduped": static_rows,
               "fork_mech_rows": fork_rows,
               "max_abs_dev_vs_loop": dev}
+    return rows, record
+
+
+def _bench_grid_ema(quick: bool = False):
+    """table_ema grid: spec-driven reactive dedup ON vs OFF.
+
+    A table_ema axis is dead for reactive (table-free) mechanisms, so the
+    spec registry's exec_axes dedup collapses their rows to one class per
+    point set (``run_grid(dedup=False)`` forces the old one-scan-per-point
+    behavior). PC mechanisms keep one scan per point either way — the
+    deltas below are pure reactive-row savings. Timings interleaved
+    A/B/A/B per the bench-box protocol (2-core box, alternation cancels
+    drift); min of each side reported.
+
+    Returns (rows, record)."""
+    import numpy as np
+    from repro.core import sweep as SW
+    from repro.core.simulate import SimConfig
+    from repro.core.sweep import run_grid
+    from repro.core.workloads import get_workload
+    from benchmarks.paper_figs import WORKLOADS_FAST
+
+    if quick:
+        wls, mechs, n_ep, emas = WORKLOADS_FAST[:2], \
+            ("crisp", "pcstall"), 60, [0.3, 0.5]
+    else:
+        wls, mechs, n_ep, emas = WORKLOADS_FAST[:6], \
+            ("crisp", "accreac", "pcstall"), 200, [0.2, 0.5, 0.8]
+    progs = {w: get_workload(w) for w in wls}
+    # n_ep matches _bench_grid's scale on purpose: the executables are
+    # shared with it, so this benchmark isolates dispatch-row savings
+    # (the dedup wins rows, not compiles)
+    cfg = SimConfig(n_epochs=n_ep)
+    grid = {"table_ema": emas}
+
+    def dedup_call():
+        return run_grid(progs, cfg, grid, mechs)
+
+    def full_call():
+        return run_grid(progs, cfg, grid, mechs, dedup=False)
+
+    SW.DISPATCH_ROWS.clear()
+    res_dedup = dedup_call()   # warm both sides before interleaving
+    rows_dedup = sum(SW.DISPATCH_ROWS.values())
+    SW.DISPATCH_ROWS.clear()
+    res_full = full_call()
+    rows_full = sum(SW.DISPATCH_ROWS.values())
+
+    reps = 2 if quick else 3
+    full_t, dedup_t = [], []
+    for _ in range(reps):
+        full_t.append(_time_once(full_call))
+        dedup_t.append(_time_once(dedup_call))
+    full_s, dedup_s = min(full_t), min(dedup_t)
+
+    # numerics: the broadcast class traces equal the per-point scans
+    dev = 0.0
+    for key, suite in res_full.items():
+        for w in wls:
+            for m in mechs:
+                for k in suite[w][m]:
+                    dev = max(dev, float(np.max(np.abs(
+                        np.asarray(suite[w][m][k], np.float64)
+                        - np.asarray(res_dedup[key][w][m][k], np.float64)))))
+
+    g = len(emas)
+    rows = [
+        ("grid_ema_dedup", dedup_s * 1e6,
+         f"{g}pt table_ema x {len(wls)}wl x {len(mechs)}mech x {n_ep}ep; "
+         f"{rows_dedup} scan rows ({full_s / dedup_s:.2f}x vs no-dedup); "
+         f"max|dev| {dev:.2g}"),
+        ("grid_ema_full", full_s * 1e6,
+         f"dedup=False: {rows_full} scan rows (one per mech x point)"),
+    ]
+    record = {"workloads": wls, "mechanisms": list(mechs), "n_epochs": n_ep,
+              "table_ema_points": g,
+              "dedup_warm_s": dedup_s, "full_warm_s": full_s,
+              "speedup_warm": full_s / dedup_s,
+              "scan_rows_dedup": rows_dedup, "scan_rows_full": rows_full,
+              "max_abs_dev": dev}
     return rows, record
 
 
@@ -300,6 +383,10 @@ def main() -> None:
         sys.stdout.flush()
     if not args.skip_grid:
         rows, bench["grid_2x2"] = _bench_grid(args.quick)
+        for name, us, derived in rows:
+            print(f"{name},{us:.1f},{derived}")
+        sys.stdout.flush()
+        rows, bench["grid_ema"] = _bench_grid_ema(args.quick)
         for name, us, derived in rows:
             print(f"{name},{us:.1f},{derived}")
         sys.stdout.flush()

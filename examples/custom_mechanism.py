@@ -1,0 +1,74 @@
+"""Register a NEW DVFS mechanism without touching the engine or the sweep
+layer — the extension path the MechanismSpec registry exists for.
+
+The mechanism here is a DSO-style fused static+dynamic estimator (after
+Wang et al., "DSO: A GPU Energy Efficiency Optimizer by Fusing Dynamic and
+Static Information", arXiv:2407.13096): next-epoch instructions are
+predicted from a blend of
+
+  * a *static code feature* — the per-CU linear (i0, sens) model the
+    program text implies at the wavefronts' current PC blocks (available
+    to every predictor through the epoch context), and
+  * the *dynamic* CU-level reactive state digested from hardware counters
+    (the CRISP estimator feeding the standard reactive carry).
+
+Registration is pure data: a ``MechanismSpec`` with ``predict``/``update``
+hooks. The spec's ``exec_axes`` declare it table-free, so the sweep layer
+automatically dedups it across ``table_ema``-only grid axes, it gets its
+own jit-cached specialized executable (exactly like oracle), and every
+consumer — ``run_grid``, ``suite_metrics``, the DVFS manager — accepts it
+by name or spec with no engine edits.
+
+  PYTHONPATH=src python examples/custom_mechanism.py
+"""
+from repro.core import estimators as EST
+from repro.core import mechanisms as MECH
+from repro.core import simulate as SIM
+from repro.core.mechanisms import MechanismSpec
+from repro.core.simulate import SimConfig
+from repro.core.sweep import run_grid, suite_metrics
+from repro.core.workloads import get_workload
+
+ALPHA = 0.5  # static-code-feature weight of the blend
+
+
+def dso_predict(carry, ctx, st, ax):
+    """Blend static code features with the dynamic reactive state and
+    lower to the capacity-clipped (CU, 10) prediction."""
+    # static part: the program's local block rates under the wavefronts
+    # right now, aggregated to CU level like the reactive estimators
+    i0_code = ctx.i0_l.sum(-1)
+    s_code = ctx.s_l.sum(-1)
+    i0 = ALPHA * i0_code + (1.0 - ALPHA) * carry.react_i0
+    sens = ALPHA * s_code + (1.0 - ALPHA) * carry.react_sens
+    return SIM.predict_instr(i0, sens, st, ax)
+
+
+def dso_update(counters, f_sel, I_f, carry, ctx, st, ax):
+    """Digest this epoch's counters with the CRISP model into the dynamic
+    half of the blend (rate units: instr/us, instr/us/GHz)."""
+    i0_cu, s_cu = EST.cu_estimate(counters, f_sel, "crisp")
+    return i0_cu / ax.epoch_us, s_cu / ax.epoch_us
+
+
+DSO = MECH.register(MechanismSpec(
+    "dso", "reactive",
+    exec_axes=("epoch_us", "sigma", "cap_per_ghz", "membw", "obj", "n_ep"),
+    label="DSO (static+dynamic blend)",
+    predict=dso_predict, update=dso_update))
+
+
+if __name__ == "__main__":
+    progs = {w: get_workload(w) for w in ("comd", "hacc", "xsbench")}
+    cfg = SimConfig(n_epochs=400)
+    MECHS = ("static17", "crisp", "dso", "pcstall")
+    grid = run_grid(progs, cfg, {"objective": ["ed2p", "edp"]}, MECHS)
+    for obj, n in (("ed2p", 2), ("edp", 1)):
+        import dataclasses
+        r = suite_metrics(None, dataclasses.replace(cfg, objective=obj),
+                          MECHS, n=n, traces=grid[(obj,)])
+        for wl in progs:
+            row = "  ".join(
+                f"{MECH.get(m).label}={r[wl][m]['ednp_norm']:.3f}"
+                for m in MECHS if m != "static17")
+            print(f"{obj:4s} {wl:8s} ED^{n}P vs static1.7: {row}")

@@ -13,13 +13,17 @@ objectives: it scans once per epoch duration, not once per grid point.
 """
 import dataclasses
 
+from repro.core import mechanisms as MECH
 from repro.core.simulate import SimConfig
 from repro.core.sweep import run_grid, suite_metrics
 from repro.core.workloads import get_workload
 
 prog = get_workload("hacc")
 GRID = {"epoch_us": [1.0, 10.0], "objective": ["ed2p", "edp"]}
-MECHS = ("static17", "pcstall", "oracle")
+# resolved through the MechanismSpec registry: the baseline and the two
+# predictors, addressable by name or spec everywhere below
+MECHS = tuple(MECH.get(m) for m in ("static17", "pcstall", "oracle"))
+BASELINE = MECHS[0]
 
 for g in (1, 4, 16):
     cfg = SimConfig(n_epochs=500, cus_per_domain=g, cus_per_table=g)
@@ -28,7 +32,8 @@ for g in (1, 4, 16):
         n = 2 if obj == "ed2p" else 1
         r = suite_metrics(None, dataclasses.replace(cfg, epoch_us=T,
                                                     objective=obj),
-                          MECHS, n=n, traces=traces)[prog.name]
+                          MECHS, n=n, traces=traces,
+                          baseline=BASELINE)[prog.name]
         print(f"{g:2d}-CU domains {T:5.1f}us {obj:4s}: "
               f"pcstall ED^{n}P={r['pcstall']['ednp_norm']:.3f} "
               f"oracle={r['oracle']['ednp_norm']:.3f}")

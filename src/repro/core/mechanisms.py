@@ -1,0 +1,363 @@
+"""Mechanism-as-data: the declarative ``MechanismSpec`` registry.
+
+The paper's contribution is a *family* of DVFS mechanisms — three static
+frequencies, five reactive estimators (STALL/LEAD/CRIT/CRISP plus the
+fork-derived ACCREAC), two PC-table predictors (PCSTALL/ACCPC) and the
+fork oracle. This module is the single source of truth for that family:
+each mechanism is one frozen :class:`MechanismSpec` value, and the engine
+(``repro.core.simulate``), the sweep layer (``repro.core.sweep``), the
+DVFS runtime manager, figures and benchmarks all *derive* their dispatch
+structure from the registry instead of hardcoding name tuples and magic
+ids.
+
+What a spec declares
+--------------------
+``family``
+    One of :data:`FAMILIES`. ``static`` mechanisms pin one V/f index and
+    never predict; ``reactive`` mechanisms predict from CU-level linear
+    state; ``pc`` mechanisms predict from the PC-indexed table; ``oracle``
+    predicts from this epoch's own forks (and therefore cannot ride the
+    fused 11-way execute).
+``traced_id``
+    The mechanism's stable integer id in the traced fork-family scan.
+    These ids are **part of the bitwise contract**: the batched sweep
+    layer vmaps one compiled executable over them, and the scan body's
+    branch selection compares against them — renumbering would change
+    compiled graphs and invalidate captured reference traces
+    (``tests/data/grid_reference.npz``). Builtin ids are frozen at
+    registration; user-registered mechanisms never get one (they dispatch
+    as their own specialized executable, like oracle).
+``exec_axes``
+    The :data:`SIM_AXES_FIELDS` the mechanism's trace actually depends
+    on. Everything else is a *dead input* to its executable, which is
+    what the sweep layer's generic deduplication exploits: grid points
+    agreeing on a spec's live axes form one equivalence class and share
+    one scan, with the result broadcast to every member grid key. A
+    static frequency ignores the objective and the table EMA; a reactive
+    (table-free) mechanism ignores the table EMA; PC mechanisms consume
+    everything.
+``predict`` / ``update``
+    Optional hooks that make the family user-extensible *without touching
+    the engine*: a registered mechanism with a ``predict`` hook runs
+    through the same fused fork--pre-execute scan as the builtin
+    mechanisms, its hook supplying the ``(CU, 10)`` next-epoch
+    instruction prediction (see `Hook contract`_ below).
+
+Hook contract
+-------------
+``predict(carry, ctx, st, ax) -> (n_cu, n_freqs) array``
+    Predicted instructions committed next epoch at every V/f state of
+    ``repro.core.power.FREQS_GHZ``. ``carry`` is the scan state
+    (``simulate.Carry``: per-CU reactive rates ``react_i0``/``react_sens``
+    in instr/us(/GHz), the PC table, per-WF fallbacks), ``ctx`` the
+    frequency-independent epoch context (``simulate.EpochCtx``: starting
+    blocks and the program's local ``i0_l``/``s_l`` code rates), ``st``/
+    ``ax`` the static config and traced grid point. Use
+    ``simulate.predict_instr(i0_cu, sens_cu, st, ax)`` to lower a per-CU
+    linear model to the capacity-clipped prediction the controller
+    expects.
+``update(counters, f_sel, I_f, carry, ctx, st, ax) -> (i0, sens) | None``
+    Digest this epoch's hardware counters (estimator view: ``committed``
+    is the steady-state counter) plus the fork results ``I_f``
+    (``(CU, 10)`` committed instructions per uniform V/f row) into new
+    per-CU reactive state, in instr/us(/GHz) *rate* units; ``None``
+    leaves the carry unchanged.
+
+Both hooks are traced by JAX inside the scan body: they must be pure
+jax-traceable functions of their operands. A custom ``family='pc'`` spec
+additionally gets the standard PC-table machinery maintained around its
+hooks — counter-driven table updates and lookup hit telemetry (the
+``hit_rate`` channel, surfaced by ``hit_telemetry=True``) — so its
+``predict`` can read a live ``carry.table`` without reimplementing the
+estimator plumbing.
+
+The registry
+------------
+:func:`register` validates and adds a spec (duplicate names error unless
+``allow_override=True``); :func:`resolve` accepts a name or a spec
+uniformly and is what every dispatch path calls; :func:`specs` /
+:func:`names` enumerate; :func:`mechanism_table` renders the registry as
+the markdown table embedded in the README (``python -m
+repro.core.mechanisms`` prints it). ``BUILTIN_NAMES`` is the frozen
+paper set (the default mechanism suite of ``run_suite``/``run_grid``).
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Callable, Dict, Optional, Tuple, Union
+
+from repro.core import power as PWR
+
+# The traced SimAxes fields, declared here (the registry is the dependency
+# root) and asserted against simulate.SimAxes._fields at engine import so
+# the two can never drift.
+SIM_AXES_FIELDS = ("epoch_us", "sigma", "cap_per_ghz", "membw", "table_ema",
+                   "obj", "n_ep")
+
+# SimAxes field -> SimConfig field, for the sweep layer's equivalence-class
+# keys (the grid API speaks SimConfig names).
+AXIS_TO_CONFIG = {"obj": "objective", "n_ep": "n_epochs"}
+
+FAMILIES = ("static", "reactive", "pc", "oracle")
+
+N_FREQS = int(PWR.FREQS_GHZ.shape[0])
+
+# Engine-imposed live axes: the scan unconditionally reads these for every
+# mechanism (execution model + logical-epoch mask), plus the objective for
+# anything that selects a frequency and the table EMA for anything the
+# engine maintains a PC table for. exec_axes may declare MORE liveness
+# (costing only dedup opportunity) but never less — an omitted live axis
+# would make the sweep layer broadcast wrong results.
+_REQUIRED_AXES = ("epoch_us", "sigma", "cap_per_ghz", "membw", "n_ep")
+
+
+@dataclass(frozen=True)
+class MechanismSpec:
+    """One DVFS mechanism, as data. Frozen and hashable: specs are jit
+    static arguments of the engine's cached executables."""
+    name: str
+    family: str                              # one of FAMILIES
+    exec_axes: Tuple[str, ...]               # live SIM_AXES_FIELDS
+    label: str = ""                          # plot/report label
+    color: Optional[str] = None              # plot metadata
+    static_fidx: Optional[int] = None        # family='static': V/f index
+    traced_id: Optional[int] = None          # fork-family scan id (builtin)
+    cu_model: Optional[str] = None           # reactive estimator name
+    fork_estimator: bool = False             # estimate from fork rows (acc*)
+    hit_telemetry: bool = False              # emits the hit_rate channel
+    predict: Optional[Callable] = None       # custom predictor hook
+    update: Optional[Callable] = None        # custom estimator hook
+
+    def __post_init__(self):
+        assert self.family in FAMILIES, \
+            f"family {self.family!r} not in {FAMILIES}"
+        bad = [a for a in self.exec_axes if a not in SIM_AXES_FIELDS]
+        assert not bad, \
+            f"exec_axes {bad} not SimAxes fields (one of {SIM_AXES_FIELDS})"
+        assert len(set(self.exec_axes)) == len(self.exec_axes), \
+            f"duplicate exec_axes in {self.exec_axes}"
+        # canonicalize to SimAxes field order so equal axis *sets* compare
+        # and hash equal regardless of declaration order
+        canon = tuple(a for a in SIM_AXES_FIELDS if a in self.exec_axes)
+        object.__setattr__(self, "exec_axes", canon)
+        if self.family == "static":
+            assert self.static_fidx is not None and \
+                0 <= self.static_fidx < N_FREQS, \
+                f"static mechanism needs static_fidx in [0, {N_FREQS})"
+            assert self.predict is None and self.update is None, \
+                "static mechanisms take no predictor hooks"
+        else:
+            assert self.static_fidx is None, \
+                f"{self.family} mechanism must not set static_fidx"
+        if self.update is not None:
+            assert self.predict is not None, \
+                "an update hook requires a predict hook"
+        # hook requirements hold by construction (not just at register
+        # time): without them an unregistered custom-looking spec would
+        # silently trace a builtin predictor path instead of its own
+        if self.family in ("reactive", "pc") and self.predict is None \
+                and self.traced_id is None:
+            raise ValueError(
+                f"custom {self.family} mechanism {self.name!r} needs a "
+                "predict hook (builtin predictor paths are traced-id "
+                "dispatch only)")
+        if self.hit_telemetry and self.family != "pc":
+            raise ValueError(
+                "hit_telemetry requires family='pc' — only the PC-table "
+                "path emits the hit_rate channel")
+        required = set(_REQUIRED_AXES)
+        if self.family != "static":
+            required.add("obj")         # _select_freq reads the objective
+        if self.family == "pc":
+            required.add("table_ema")   # table maintenance reads the EMA
+        missing = [a for a in SIM_AXES_FIELDS
+                   if a in required and a not in self.exec_axes]
+        if missing:
+            raise ValueError(
+                f"{self.family} mechanism {self.name!r} must declare the "
+                f"engine-imposed live axes {missing} in exec_axes — an "
+                "omitted live axis makes the grid dedup broadcast wrong "
+                "results")
+        if not self.label:
+            object.__setattr__(self, "label", self.name)
+
+    @property
+    def is_traced(self) -> bool:
+        """True if the mechanism rides the shared traced-id fork
+        executable (builtin non-oracle fork mechanisms)."""
+        return (self.traced_id is not None and self.family != "oracle"
+                and self.predict is None)
+
+    @property
+    def config_axes(self) -> Tuple[str, ...]:
+        """``exec_axes`` mapped to SimConfig field names."""
+        return tuple(AXIS_TO_CONFIG.get(a, a) for a in self.exec_axes)
+
+    @property
+    def dedup_axes(self) -> Tuple[str, ...]:
+        """The SimConfig fields keying this spec's grid equivalence
+        classes. ``n_epochs`` is excluded: the scan is causal, so a class
+        representative runs to the class-max logical epoch count and every
+        member slices its prefix (see ``sweep._exec_classes``)."""
+        return tuple(a for a in self.config_axes if a != "n_epochs")
+
+
+# ---------------------------------------------------------------------------
+# Registry
+# ---------------------------------------------------------------------------
+
+_REGISTRY: Dict[str, MechanismSpec] = {}
+
+
+def register(spec: MechanismSpec, *,
+             allow_override: bool = False) -> MechanismSpec:
+    """Add ``spec`` to the registry and return it.
+
+    Duplicate names raise unless ``allow_override=True`` (builtins can
+    never be overridden — their traced ids and numerics are contract).
+    User-registered mechanisms cannot claim a traced id: the traced fork
+    family is a closed, bitwise-frozen set; custom mechanisms dispatch as
+    their own specialized executable (exactly like oracle does).
+
+    Cache note: compiled executables are keyed on the spec value, and
+    hook functions compare by identity — re-registering with freshly
+    created lambdas makes a new jit entry per registration (the old
+    executable stays cached for the process lifetime). In long-running
+    processes reuse hook *functions* and pass varying parameters through
+    carry state or SimAxes, not by rebinding closures."""
+    if spec.name in _REGISTRY:
+        if not allow_override or spec.name in BUILTIN_NAMES:
+            raise ValueError(
+                f"mechanism {spec.name!r} is already registered"
+                + ("" if allow_override else
+                   " (pass allow_override=True to replace)"))
+    if spec.name not in BUILTIN_NAMES:
+        assert spec.traced_id is None, \
+            "traced ids are reserved for the builtin fork family " \
+            "(they are part of the bitwise dispatch contract)"
+        assert spec.family != "oracle", \
+            "the oracle family is the builtin fork oracle"
+    _REGISTRY[spec.name] = spec
+    return spec
+
+
+def unregister(name: str) -> None:
+    """Remove a user-registered mechanism (builtins are permanent)."""
+    assert name not in BUILTIN_NAMES, f"cannot unregister builtin {name!r}"
+    _REGISTRY.pop(name, None)
+
+
+def get(name: str) -> MechanismSpec:
+    try:
+        return _REGISTRY[name]
+    except KeyError:
+        raise KeyError(
+            f"unknown mechanism {name!r}; registered: {names()}") from None
+
+
+def resolve(mech: Union[str, MechanismSpec]) -> MechanismSpec:
+    """Accept a mechanism name or spec uniformly; names look up the
+    registry, spec instances are validated by construction. A spec whose
+    name is registered must BE the registered spec (field-equal): silently
+    substituting the registry entry — or running a variant under a
+    registered name — would attribute one mechanism's results to
+    another."""
+    if isinstance(mech, MechanismSpec):
+        reg = _REGISTRY.get(mech.name)
+        if reg is not None:
+            if reg != mech:
+                raise ValueError(
+                    f"spec {mech.name!r} differs from the registered "
+                    "mechanism of that name; register the variant under "
+                    "its own name (or allow_override=True)")
+            return reg
+        assert mech.traced_id is None, \
+            "traced ids are reserved for the registered builtin fork family"
+        return mech
+    return get(mech)
+
+
+def names() -> Tuple[str, ...]:
+    return tuple(_REGISTRY)
+
+
+def specs() -> Tuple[MechanismSpec, ...]:
+    return tuple(_REGISTRY.values())
+
+
+def fork_specs() -> Tuple[MechanismSpec, ...]:
+    """Builtin fork--pre-execute mechanisms in traced-id order (the order
+    IS the contract: the sweep layer's mech_ids index this tuple)."""
+    forks = sorted((s for s in _REGISTRY.values() if s.traced_id is not None),
+                   key=lambda s: s.traced_id)
+    ids = [s.traced_id for s in forks]
+    assert ids == list(range(len(forks))), \
+        f"traced ids must be contiguous from 0, got {ids}"
+    return tuple(forks)
+
+
+def traced_reactive_count() -> int:
+    """Number of traced reactive ids. They must be 0..n-1: the scan body's
+    reactive/pc branch select is a single ``mech < n`` compare."""
+    react = [s.traced_id for s in _REGISTRY.values()
+             if s.is_traced and s.family == "reactive"]
+    assert sorted(react) == list(range(len(react))), react
+    return len(react)
+
+
+# ---------------------------------------------------------------------------
+# Builtin paper mechanisms
+# ---------------------------------------------------------------------------
+
+_EXEC = ("epoch_us", "sigma", "cap_per_ghz", "membw", "n_ep")
+_CTRL = _EXEC + ("obj",)          # + objective: drives frequency selection
+_TABLE = _CTRL + ("table_ema",)   # + table EMA: drives the PC table
+
+BUILTIN_NAMES = ("static13", "static17", "static22",
+                 "stall", "lead", "crit", "crisp",
+                 "accreac", "pcstall", "accpc", "oracle")
+
+for _s in (
+    MechanismSpec("static13", "static", _EXEC, static_fidx=0,
+                  label="static 1.3 GHz"),
+    MechanismSpec("static17", "static", _EXEC, static_fidx=4,
+                  label="static 1.7 GHz"),
+    MechanismSpec("static22", "static", _EXEC, static_fidx=9,
+                  label="static 2.2 GHz"),
+    MechanismSpec("stall", "reactive", _CTRL, traced_id=0, cu_model="stall",
+                  label="STALL (reactive)"),
+    MechanismSpec("lead", "reactive", _CTRL, traced_id=1, cu_model="lead",
+                  label="LEAD (reactive)"),
+    MechanismSpec("crit", "reactive", _CTRL, traced_id=2, cu_model="crit",
+                  label="CRIT (reactive)"),
+    MechanismSpec("crisp", "reactive", _CTRL, traced_id=3, cu_model="crisp",
+                  label="CRISP (reactive)"),
+    MechanismSpec("accreac", "reactive", _CTRL, traced_id=4,
+                  fork_estimator=True, label="ACC-REAC (fork-accurate)"),
+    MechanismSpec("pcstall", "pc", _TABLE, traced_id=5,
+                  hit_telemetry=True, label="PCSTALL (predictive)"),
+    MechanismSpec("accpc", "pc", _TABLE, traced_id=6, fork_estimator=True,
+                  hit_telemetry=True, label="ACC-PC (fork-accurate table)"),
+    MechanismSpec("oracle", "oracle", _CTRL, traced_id=7,
+                  label="fork oracle"),
+):
+    _REGISTRY[_s.name] = _s
+del _s
+
+assert names() == BUILTIN_NAMES
+
+
+def mechanism_table() -> str:
+    """The registry as a markdown table (embedded in the README)."""
+    rows = ["| name | family | traced id | live axes | label |",
+            "|---|---|---|---|---|"]
+    for s in specs():
+        tid = "—" if s.traced_id is None else str(s.traced_id)
+        axes = ", ".join(a for a in s.exec_axes if a != "n_ep")
+        rows.append(f"| `{s.name}` | {s.family} | {tid} | {axes} "
+                    f"| {s.label} |")
+    return "\n".join(rows)
+
+
+if __name__ == "__main__":
+    print(mechanism_table())

@@ -42,13 +42,26 @@ Caching contract
   the objective lowered to a weight vector, and the logical epoch count) as
   a traced pytree of scalars.
 
+Mechanism dispatch contract
+---------------------------
+Mechanisms are *data*: every mechanism is a frozen ``MechanismSpec`` in
+the ``repro.core.mechanisms`` registry, and this engine derives its whole
+dispatch structure from the specs — the family branch taken by the scan
+body (static / reactive / pc / oracle), the static V/f index, the traced
+fork-family ids the branch selects compare against (frozen by the
+registry: they are part of the bitwise contract, verified against
+captured reference traces in ``tests/data``), and the predictor/estimator
+hooks of user-registered mechanisms (which trace into their own
+specialized executable without any engine edit — see
+``mechanisms.register``).
+
 ``run_sim`` dispatches through a ``jax.jit`` entry point whose static keys
-are ``SimStatic`` and the mechanism name; ``Program`` is a registered
-pytree traced by shape only, and ``SimAxes`` rides along as a traced
-operand. Repeated calls that differ only in axis values — a fig-15/17/18
-sweep over epoch granularities or objectives — therefore hit the same
-executable and never re-trace. The scan body also accepts a *traced*
-mechanism id (see ``FORK_MECHS``) so the batched sweep layer
+are ``SimStatic`` and the resolved ``MechanismSpec``; ``Program`` is a
+registered pytree traced by shape only, and ``SimAxes`` rides along as a
+traced operand. Repeated calls that differ only in axis values — a
+fig-15/17/18 sweep over epoch granularities or objectives — therefore hit
+the same executable and never re-trace. The scan body also accepts a
+*traced* mechanism id (see ``FORK_MECHS``) so the batched sweep layer
 (``repro.core.sweep``) can vmap one compiled executable across mechanisms,
 workloads, seeds, *and* whole ``SimAxes`` grids (``run_grid``).
 
@@ -74,28 +87,45 @@ import numpy as np
 from jax import lax
 
 from repro.core import estimators as EST
+from repro.core import mechanisms as MECH
 from repro.core import power as PWR
 from repro.core import predictors as PRED
+from repro.core.mechanisms import MechanismSpec
 from repro.core.workloads import INSTR_PER_BLOCK, Program
 
-MECHANISMS = ("static13", "static17", "static22",
-              "stall", "lead", "crit", "crisp",
-              "accreac", "pcstall", "accpc", "oracle")
-
-_STATIC_F = {"static13": 0, "static17": 4, "static22": 9}
+# The mechanism family is DATA (repro.core.mechanisms): every dispatch
+# structure below — name tuples, static frequency indices, traced fork ids,
+# predictor-branch selection — derives from the MechanismSpec registry.
+# The derived VALUES are part of the bitwise contract (captured reference
+# traces in tests/data/): the registry freezes builtin traced ids, so the
+# compiled graphs cannot drift.
+MECHANISMS = MECH.BUILTIN_NAMES
 
 # Mechanisms that run the fork--pre-execute step, in traced-id order: the
 # batched sweep layer vmaps the scan over these integer ids (the carry is
 # shape-identical across all of them). The traced path only accepts
 # non-oracle ids (0..6): oracle predicts from this epoch's forks, which
 # breaks the fused 11-way execute, so run_suite gives it its own
-# specialized executable.
-FORK_MECHS = ("stall", "lead", "crit", "crisp",
-              "accreac", "pcstall", "accpc", "oracle")
+# specialized executable (user-registered mechanisms dispatch the same
+# way — see mechanisms.register).
+FORK_MECHS = tuple(s.name for s in MECH.fork_specs())
 FORK_MECH_IDS = {m: i for i, m in enumerate(FORK_MECHS)}
-_N_REACT = 5          # ids 0..4 predict from CU-level reactive state
-_ID_PCSTALL = FORK_MECH_IDS["pcstall"]
-_ID_ACCPC = FORK_MECH_IDS["accpc"]
+# traced ids 0.._N_REACT-1 predict from CU-level reactive state (registry
+# asserts contiguity: the branch select is a single `mech < n` compare)
+_N_REACT = MECH.traced_reactive_count()
+_REACT_SPECS = tuple(s for s in MECH.fork_specs()
+                     if s.is_traced and s.family == "reactive")
+_PC_IDS = tuple(s.traced_id for s in MECH.fork_specs()
+                if s.is_traced and s.family == "pc")
+# the one traced PC mechanism estimating from hardware counters (pcstall);
+# the other (accpc) takes the exact per-WF linear model from the forks
+_ID_CTR_PC = next(s.traced_id for s in MECH.fork_specs()
+                  if s.is_traced and s.family == "pc"
+                  and not s.fork_estimator)
+# the traced scan body builds its reactive-estimator select in this order:
+# counter models at ids 0..n-2, the fork-accurate reactive (accreac) last
+assert all(s.cu_model for s in _REACT_SPECS[:-1]) and \
+    _REACT_SPECS[-1].fork_estimator, _REACT_SPECS
 
 
 @dataclass(frozen=True)
@@ -127,6 +157,12 @@ class SimAxes(NamedTuple):
     table_ema: jnp.ndarray    # () f32
     obj: jnp.ndarray          # (3,) f32 [pbar_weight, use_rate, cap_frac]
     n_ep: jnp.ndarray         # () i32 logical epochs (<= SimStatic.n_epochs)
+
+
+# the registry declares the axis vocabulary MechanismSpec.exec_axes is
+# validated against; it must be exactly the traced grid-point fields
+assert SimAxes._fields == MECH.SIM_AXES_FIELDS, \
+    (SimAxes._fields, MECH.SIM_AXES_FIELDS)
 
 
 def objective_weights(objective: str) -> np.ndarray:
@@ -345,6 +381,12 @@ def _predict_instr(i0_cu, sens_cu, st: SimStatic, ax: SimAxes):
     return jnp.clip(I, 0.0, cap)
 
 
+# public alias for MechanismSpec.predict hooks: lower a per-CU linear model
+# (rates in instr/us and instr/us/GHz) to the capacity-clipped (CU, 10)
+# prediction the frequency controller consumes
+predict_instr = _predict_instr
+
+
 def _select_freq(I_pred_f: jnp.ndarray, st: SimStatic, ax: SimAxes,
                  pbar_dom: jnp.ndarray) -> jnp.ndarray:
     """Choose per-domain frequency minimizing the objective.
@@ -416,12 +458,16 @@ def init_carry(p_blocks, st: SimStatic) -> Carry:
 
 
 def _scan_sim(prog: Program, p_blocks, seed, st: SimStatic, ax: SimAxes,
-              mech: Union[str, jnp.ndarray],
+              mech: Union[str, MechanismSpec, jnp.ndarray],
               carry0: Optional[Carry] = None) -> Dict[str, jnp.ndarray]:
-    """The simulation scan. ``mech`` is either a static mechanism name
-    (maximally specialized trace, fused 11-way execute for non-oracle fork
-    mechanisms) or a traced int32 id into ``FORK_MECHS`` (one executable
-    shared by all fork mechanisms — the batched-sweep hot path).
+    """The simulation scan. ``mech`` is either a concrete mechanism — a
+    name or :class:`MechanismSpec`, resolved through the registry to a
+    maximally specialized trace (fused 11-way execute for non-oracle fork
+    mechanisms; ``predict``/``update`` hooks traced in for registered
+    custom mechanisms) — or a traced int32 id into ``FORK_MECHS`` (one
+    executable shared by all builtin fork mechanisms — the batched-sweep
+    hot path; branch selection compares against the registry's frozen
+    traced ids).
 
     ``p_blocks`` (logical block count; array may be padded beyond it),
     ``seed`` (int32 noise key) and the ``SimAxes`` grid point are all traced
@@ -431,7 +477,7 @@ def _scan_sim(prog: Program, p_blocks, seed, st: SimStatic, ax: SimAxes,
     ``carry0`` overrides the initial state (the sweep layer passes a
     donated ``init_carry``); ``None`` builds it in-trace.
     """
-    static_mech = isinstance(mech, str)
+    static_mech = isinstance(mech, (str, MechanismSpec))
     F = PWR.FREQS_GHZ
     T = ax.epoch_us
     n_dom = st.n_cu // st.cus_per_domain
@@ -442,16 +488,18 @@ def _scan_sim(prog: Program, p_blocks, seed, st: SimStatic, ax: SimAxes,
     F_rows = jnp.broadcast_to(F[:, None], (F.shape[0], st.n_cu))  # (10,CU)
 
     if static_mech:
-        assert mech in MECHANISMS, mech
-        is_static_f = mech in _STATIC_F
-        is_pc = mech in ("pcstall", "accpc")
-        is_react = mech in ("stall", "lead", "crit", "crisp", "accreac")
-        is_oracle = mech == "oracle"
+        spec = MECH.resolve(mech)
+        is_static_f = spec.family == "static"
+        is_custom = spec.predict is not None
+        is_pc = spec.family == "pc" and not is_custom
+        is_react = spec.family == "reactive" and not is_custom
+        is_oracle = spec.family == "oracle"
     else:
-        is_static_f = False
+        spec = None
+        is_static_f = is_custom = False
         is_pc = is_react = is_oracle = None  # resolved per-trace via mech id
     use_pallas = (st.use_pallas and static_mech and not is_static_f
-                  and st.n_cu % st.cus_per_table == 0)
+                  and not is_custom and st.n_cu % st.cus_per_table == 0)
     if use_pallas:
         from repro.kernels import pc_table as KPT
 
@@ -489,18 +537,26 @@ def _scan_sim(prog: Program, p_blocks, seed, st: SimStatic, ax: SimAxes,
         hit_rate = None
         c_f = I_f = I_pred_f = idx_lu = None
         if is_static_f:
-            fidx = jnp.full((st.n_cu,), _STATIC_F[mech], jnp.int32)
+            fidx = jnp.full((st.n_cu,), spec.static_fidx, jnp.int32)
             f_sel = F[fidx]
             committed, ctr = _execute_ctx(ctx, pos, f_sel, p_blocks, ax)
         else:
             # --- predict I(f) from carry state (no forks needed) ----------
             idx_lu = PRED.table_index(ctx.blk, st.entries, st.offset_blocks)
-            if (not static_mech) or is_pc:
+            # custom pc-family specs keep the standard table machinery
+            # (lookup telemetry here, counter-driven update below): their
+            # predict hook reads carry.table and customizes only prediction
+            if (not static_mech) or is_pc or (is_custom
+                                              and spec.family == "pc"):
                 I_pc, hit = _pc_lookup(carry, idx_lu)
                 hit_rate = hit.mean()
             if (not static_mech) or is_react:
                 I_react = _predict_instr(carry.react_i0, carry.react_sens,
                                          st, ax)
+            if static_mech and is_custom:
+                # registered mechanism: the spec's predictor hook supplies
+                # I(f) from the same carry/context view the builtins see
+                I_hook = spec.predict(carry, ctx, st, ax)
             pbar = (carry.e_acc / jnp.maximum(carry.t_acc, 1e-3)) \
                 .reshape(n_dom, st.cus_per_domain).sum(1)
 
@@ -522,7 +578,8 @@ def _scan_sim(prog: Program, p_blocks, seed, st: SimStatic, ax: SimAxes,
                 # therefore excludes oracle — run_suite routes it to its own
                 # specialized executable.)
                 if static_mech:
-                    I_pred_f = I_pc if is_pc else I_react
+                    I_pred_f = I_hook if is_custom else \
+                        (I_pc if is_pc else I_react)
                 else:
                     I_pred_f = jnp.where(mech < _N_REACT, I_react, I_pc)
                 fidx = _select_freq(I_pred_f, st, ax, pbar)
@@ -556,17 +613,33 @@ def _scan_sim(prog: Program, p_blocks, seed, st: SimStatic, ax: SimAxes,
                              t_acc=carry.t_acc + T)
         est_ctrs = dict(ctr, committed=ctr["steady"])
         if static_mech:
-            if mech in ("stall", "lead", "crit", "crisp"):
-                i0_cu, s_cu = EST.cu_estimate(est_ctrs, f_sel, mech)
+            if is_custom:
+                if spec.family == "pc":
+                    # standard counter-driven table maintenance (pcstall's
+                    # estimator path) so a registered pc-family predictor
+                    # sees a live table without reimplementing it
+                    i0_wf, s_wf = EST.wf_stall_estimate(est_ctrs, f_sel)
+                    i0_wf, s_wf = i0_wf / T, s_wf / T
+                    tbl = _table_update(carry, idx_lu, i0_wf, s_wf)
+                    new = new._replace(table=tbl, wf_i0=i0_wf,
+                                       wf_sens=s_wf)
+                if spec.update is not None:
+                    upd = spec.update(est_ctrs, f_sel, I_f, carry, ctx,
+                                      st, ax)
+                    if upd is not None:
+                        new = new._replace(react_i0=upd[0],
+                                           react_sens=upd[1])
+            elif is_react and not spec.fork_estimator:
+                i0_cu, s_cu = EST.cu_estimate(est_ctrs, f_sel, spec.cu_model)
                 new = new._replace(react_i0=i0_cu / T, react_sens=s_cu / T)
-            elif mech == "accreac":
+            elif is_react:  # fork-accurate reactive: exact linear from forks
                 sens_cu = (I_f[:, -1] - I_f[:, 0]) / ((F[-1] - F[0]) * T)
                 i0_cu = I_f[:, 0] / T - sens_cu * F[0]
                 new = new._replace(react_i0=i0_cu, react_sens=sens_cu)
             elif is_pc:
-                if mech == "pcstall":
+                if not spec.fork_estimator:  # counter-driven (pcstall)
                     i0_wf, s_wf = EST.wf_stall_estimate(est_ctrs, f_sel)
-                else:  # accpc: exact per-WF linear model from the forks
+                else:  # exact per-WF linear model from the forks (accpc)
                     i0_wf, s_wf = _true_wf_linear(c_f)
                 i0_wf, s_wf = i0_wf / T, s_wf / T
                 tbl = _table_update(carry, idx_lu, i0_wf, s_wf)
@@ -574,9 +647,11 @@ def _scan_sim(prog: Program, p_blocks, seed, st: SimStatic, ax: SimAxes,
         else:
             # traced mechanism id: evaluate every estimator (cheap next to
             # the batched executes) and select, so one executable serves the
-            # whole fork-mechanism family under vmap.
-            cu_ests = [EST.cu_estimate(est_ctrs, f_sel, m)
-                       for m in EST.CU_MODELS]
+            # whole fork-mechanism family under vmap. Case order follows
+            # the registry's traced ids (asserted at import: counter models
+            # 0..n-2, the fork-accurate reactive last).
+            cu_ests = [EST.cu_estimate(est_ctrs, f_sel, s.cu_model)
+                       for s in _REACT_SPECS if not s.fork_estimator]
             sens_ar = (I_f[:, -1] - I_f[:, 0]) / ((F[-1] - F[0]) * T)
             i0_ar = I_f[:, 0] / T - sens_ar * F[0]
             sel = [mech == k for k in range(_N_REACT)]
@@ -587,10 +662,11 @@ def _scan_sim(prog: Program, p_blocks, seed, st: SimStatic, ax: SimAxes,
             new = new._replace(react_i0=r_i0, react_sens=r_se)
             i0_est, s_est = EST.wf_stall_estimate(est_ctrs, f_sel)
             i0_tr, s_tr = _true_wf_linear(c_f)
-            i0_wf = jnp.where(mech == _ID_PCSTALL, i0_est, i0_tr) / T
-            s_wf = jnp.where(mech == _ID_PCSTALL, s_est, s_tr) / T
+            i0_wf = jnp.where(mech == _ID_CTR_PC, i0_est, i0_tr) / T
+            s_wf = jnp.where(mech == _ID_CTR_PC, s_est, s_tr) / T
             tbl_u = _table_update(carry, idx_lu, i0_wf, s_wf)
-            pc_now = (mech == _ID_PCSTALL) | (mech == _ID_ACCPC)
+            pc_now = functools.reduce(
+                lambda a, b: a | b, [mech == i for i in _PC_IDS])
             tbl = jax.tree.map(lambda a, b: jnp.where(pc_now, a, b),
                                tbl_u, carry.table)
             new = new._replace(
@@ -604,7 +680,11 @@ def _scan_sim(prog: Program, p_blocks, seed, st: SimStatic, ax: SimAxes,
             true_sens_cu = (I_f[:, -1] - I_f[:, 0]) / ((F[-1] - F[0]) * T)
         ys = {"work": work_actual, "energy": energy, "err": err,
               "fidx": fidx.astype(jnp.int8), "true_sens": true_sens_cu}
-        if hit_rate is not None:
+        # emit the channel only when the spec declares it (custom pc specs
+        # may decline), so run_sim and the sweep layer agree on the trace
+        # schema; the traced family (spec is None) emits for all and the
+        # sweep layer filters per spec on unpack
+        if hit_rate is not None and (spec is None or spec.hit_telemetry):
             ys["hit_rate"] = hit_rate
         if st.record_wf and not is_static_f:
             ys["wf_sens"] = ((c_f[-1] - c_f[0]) / (F[-1] - F[0])) \
@@ -625,7 +705,7 @@ def _scan_sim(prog: Program, p_blocks, seed, st: SimStatic, ax: SimAxes,
 
 @functools.partial(jax.jit, static_argnames=("st", "mechanism"))
 def _run_sim_jit(prog: Program, p_blocks, seed, ax: SimAxes, st: SimStatic,
-                 mechanism: str) -> Dict[str, jnp.ndarray]:
+                 mechanism: MechanismSpec) -> Dict[str, jnp.ndarray]:
     return _scan_sim(prog, p_blocks, seed, st, ax, mechanism)
 
 
@@ -642,20 +722,21 @@ def seed_i32(seeds) -> np.ndarray:
     return folded[0] if scalar else folded
 
 
-def run_sim(prog: Program, sim: SimConfig, mechanism: str
-            ) -> Dict[str, np.ndarray]:
-    """Simulate ``mechanism`` on ``prog``. Returns per-epoch traces.
+def run_sim(prog: Program, sim: SimConfig,
+            mechanism: Union[str, MechanismSpec]) -> Dict[str, np.ndarray]:
+    """Simulate ``mechanism`` (a registered name or a ``MechanismSpec``)
+    on ``prog``. Returns per-epoch traces.
 
-    Compile-once: the scan is traced at most once per (SimStatic, mechanism,
-    program shape) — subsequent calls, *including ones that change only
-    traced axes like epoch_us/sigma/objective*, dispatch a cached XLA
+    Compile-once: the scan is traced at most once per (SimStatic, mechanism
+    spec, program shape) — subsequent calls, *including ones that change
+    only traced axes like epoch_us/sigma/objective*, dispatch a cached XLA
     executable.
     """
-    assert mechanism in MECHANISMS, mechanism
+    spec = MECH.resolve(mechanism)
     assert sim.n_cu % sim.cus_per_domain == 0
     ys = _run_sim_jit(prog, jnp.int32(prog.n_blocks),
                       jnp.asarray(seed_i32(sim.seed)), sim.axes(),
-                      sim.static_part(), mechanism)
+                      sim.static_part(), spec)
     return {k: np.asarray(v) for k, v in ys.items()}
 
 
@@ -691,18 +772,22 @@ def ednp(trace: Dict[str, np.ndarray], work_budget: float, epoch_us: float,
 
 
 def run_workload(prog: Program, sim: SimConfig, mechanisms=MECHANISMS,
-                 n: int = 2) -> Dict[str, Dict[str, float]]:
-    """Run a mechanism suite; ED^nP normalized to static17."""
-    base = run_sim(prog, sim, "static17")
+                 n: int = 2, baseline: Union[str, MechanismSpec] = "static17"
+                 ) -> Dict[str, Dict[str, float]]:
+    """Run a mechanism suite; ED^nP normalized to ``baseline`` (any
+    registered mechanism; default the paper's static 1.7 GHz)."""
+    base_spec = MECH.resolve(baseline)
+    base = run_sim(prog, sim, base_spec)
     budget = 0.9 * base["work"].sum()
     out: Dict[str, Dict[str, float]] = {}
     E0, D0, M0 = ednp(base, budget, sim.epoch_us, n)
     for mech in mechanisms:
-        tr = base if mech == "static17" else run_sim(prog, sim, mech)
+        spec = MECH.resolve(mech)
+        tr = base if spec.name == base_spec.name else run_sim(prog, sim, spec)
         E, D, M = ednp(tr, budget, sim.epoch_us, n)
-        out[mech] = {
-            "accuracy": prediction_accuracy(tr) if mech not in
-            ("static13", "static17", "static22") else float("nan"),
+        out[spec.name] = {
+            "accuracy": prediction_accuracy(tr)
+            if spec.family != "static" else float("nan"),
             "E": E, "D": D, "ednp": M, "ednp_norm": M / M0,
             "energy_norm": E / E0, "delay_norm": D / D0,
         }

@@ -17,19 +17,26 @@ engine. Run serially that is hundreds of scan traces; this layer instead
      ``shard_map`` (a 1-device mesh is the identity layout). Points with
      fewer logical epochs scan to the grid max and mask the tail, the same
      pad-and-mask move applied to programs;
-  3. vmaps seeds and, within the fork family, mechanisms: all
-     fork--pre-execute mechanisms (``simulate.FORK_MECHS``) share a
-     shape-identical carry and run as one executable indexed by a traced
-     mechanism id, while oracle (whose prediction needs this epoch's forks)
-     and the static frequencies compile to their own executables;
-  4. deduplicates the static-frequency mechanisms across grid points: a
-     static mech's trace depends only on the execution-relevant axes
-     (``STATIC_EXEC_AXES``: epoch_us, sigma, cap_per_ghz, membw — never on
-     objective or table_ema), so each static mech scans once per
-     equivalence class of points and the result is broadcast back to every
-     grid key in the class (a 3-objective grid would otherwise triple
-     static-mech compute for bitwise-identical traces). ``DISPATCH_ROWS``
-     records the logical rows actually executed per family;
+  3. vmaps seeds and, within the fork family, mechanisms: all traced
+     fork--pre-execute mechanisms (``simulate.FORK_MECHS``, ids frozen by
+     the ``repro.core.mechanisms`` registry) share a shape-identical carry
+     and run as executables indexed by a traced mechanism id, while oracle
+     (whose prediction needs this epoch's forks), the static frequencies
+     and registered custom mechanisms (``MechanismSpec.predict`` hooks)
+     compile to their own specialized executables;
+  4. deduplicates every mechanism across grid points by its spec's
+     declared live axes (``MechanismSpec.exec_axes``): points agreeing on
+     a mechanism's live axes form one equivalence class and share one
+     scan, broadcast back to every member grid key. A static frequency
+     never reads the objective or the table EMA (a 3-objective grid would
+     otherwise triple static-mech compute for bitwise-identical traces);
+     reactive (table-free) mechanisms and oracle never read the table EMA,
+     so a table_ema-only grid axis stops multiplying their rows too.
+     Traced mechanisms inducing the same point partition share one
+     dispatch — on a grid with no dead axes the whole fork family is ONE
+     dispatch over the full operands, exactly as before the spec redesign.
+     ``DISPATCH_ROWS`` records the logical scan rows actually executed per
+     family (the dedup savings show up here);
   5. builds the initial scan carry outside the executables
      (``simulate.init_carry``, jitted once per ``SimStatic``) and donates
      it (``donate_argnums``), so the runtime can release the carry buffers
@@ -71,35 +78,33 @@ import numpy as np
 from jax.experimental.shard_map import shard_map
 from jax.sharding import Mesh, PartitionSpec as P
 
+from repro.core import mechanisms as MECH
 from repro.core import simulate as SIM
+from repro.core.mechanisms import MechanismSpec
 from repro.core.simulate import (MECHANISMS, SimAxes, SimConfig, SimStatic,
                                  ednp, prediction_accuracy)
 from repro.core.workloads import Program
 
-_STATIC_MECHS = ("static13", "static17", "static22")
-_PC_MECHS = ("pcstall", "accpc")
-
-# The SimAxes fields a static-frequency mechanism's trace actually depends
-# on: its frequency is fixed, so the objective lowering and the table EMA
-# are dead inputs to its executable. Grid points agreeing on these axes are
-# one equivalence class and share one static-mech scan (the class
-# representative runs with the class-max logical epoch count; shorter
-# points slice their prefix of it).
-STATIC_EXEC_AXES = ("epoch_us", "sigma", "cap_per_ghz", "membw")
+# Back-compat alias: the SimAxes fields a static-frequency mechanism's
+# trace depends on. Since the spec redesign this is just the static
+# builtin's declared ``exec_axes`` (minus the specially-handled logical
+# epoch count) — the dedup below is generic over every spec's axes.
+STATIC_EXEC_AXES = MECH.get("static17").dedup_axes
 
 
-def _unpack_trace(arrs: Dict[str, jnp.ndarray], i: int, mech: str,
+def _unpack_trace(arrs: Dict[str, jnp.ndarray], i: int, spec: MechanismSpec,
                   squeeze_seed: bool,
                   n_ep: Optional[int] = None) -> Dict[str, np.ndarray]:
     """Cut flat-row ``i`` of a batch down to the ``run_sim`` trace schema:
     squeeze the seed axis when it was implicit, slice the epoch axis to the
     logical count (``None`` = full), and drop the ``hit_rate`` telemetry
-    channel for non-PC mechanisms (the traced family computes it for
-    all)."""
+    channel for mechanisms whose spec doesn't declare it (the traced
+    family computes it for all; registered PC-family mechanisms get the
+    channel by setting ``hit_telemetry`` — no sweep-layer edit needed)."""
     ep = slice(None) if n_ep is None else slice(None, n_ep)
     tr = {k: np.asarray(v[i, 0, ep] if squeeze_seed else v[i, :, ep])
           for k, v in arrs.items()}
-    if mech not in _PC_MECHS:
+    if not spec.hit_telemetry:
         tr.pop("hit_rate", None)
     return tr
 
@@ -114,9 +119,12 @@ AXIS_FIELDS = ("epoch_us", "sigma", "cap_per_ghz", "membw", "table_ema",
 # benchmarks can assert cache hits / count fork-family compiles per figure.
 TRACE_COUNTS: collections.Counter = collections.Counter()
 
-# logical (workload x grid-point) rows dispatched per family, incremented on
-# every dispatch (cached or not): the static-mechanism dedup shows up here
-# as W x n_classes rows per static family instead of W x n_points.
+# logical (workload x grid-point x mechanism) scan rows dispatched per
+# family, incremented on every dispatch (cached or not): the spec-driven
+# dedup shows up here as W x n_classes rows per mechanism instead of
+# W x n_points — for static mechanisms AND for any fork mechanism whose
+# ``exec_axes`` make a grid axis dead (e.g. reactive mechanisms on a
+# table_ema-only axis).
 DISPATCH_ROWS: collections.Counter = collections.Counter()
 
 
@@ -165,15 +173,19 @@ def _stack_programs(progs: Sequence[Program]) -> Tuple[Program, jnp.ndarray]:
 
 
 @functools.lru_cache(maxsize=None)
-def _grid_exec(st: SimStatic, n_dev: int, mechanism: Optional[str]):
+def _grid_exec(st: SimStatic, n_dev: int,
+               mechanism: Optional[MechanismSpec]):
     """Build (once per (SimStatic, device count, family)) the sharded grid
     executable: the flattened (workload x grid-point) axis is split across
     an ``n_dev``-device mesh with ``shard_map`` (identity on one device),
     and each local entry vmaps seeds (x traced fork-mechanism ids when
-    ``mechanism`` is None). The initial scan carry arrives pre-built and
+    ``mechanism`` is None). ``mechanism`` is a spec for the specialized
+    families — static frequencies, oracle, and registered custom
+    mechanisms (whose predict/update hooks trace in here without any
+    sweep-layer change). The initial scan carry arrives pre-built and
     donated (see ``simulate.init_carry``)."""
     mesh = Mesh(np.asarray(jax.local_devices()[:n_dev]), ("i",))
-    family = "grid_forks" if mechanism is None else f"grid_{mechanism}"
+    family = "grid_forks" if mechanism is None else f"grid_{mechanism.name}"
 
     @functools.partial(jax.jit, donate_argnums=(0,))
     def dispatch(carry0, progs, p_log, axes, seeds, mech_ids):
@@ -276,13 +288,14 @@ def _carry_builder(st: SimStatic):
     return jax.jit(jax.vmap(lambda pb: SIM.init_carry(pb, st)))
 
 
-def _run_family(st: SimStatic, n_dev: int, mechanism: Optional[str],
+def _run_family(st: SimStatic, n_dev: int,
+                mechanism: Optional[MechanismSpec],
                 operands, seed_arr: jnp.ndarray, mech_ids: jnp.ndarray
                 ) -> Dict[str, jnp.ndarray]:
     """Dispatch one executable family over pre-flattened grid operands."""
     progs_flat, p_log_flat, axes_flat, n_flat = operands
-    family = "grid_forks" if mechanism is None else f"grid_{mechanism}"
-    DISPATCH_ROWS[family] += n_flat
+    family = "grid_forks" if mechanism is None else f"grid_{mechanism.name}"
+    DISPATCH_ROWS[family] += n_flat * max(int(mech_ids.shape[0]), 1)
     # the initial scan carry is rebuilt per dispatch: it is donated to the
     # executable, which invalidates its buffers
     carry0 = _carry_builder(st)(p_log_flat)
@@ -299,9 +312,13 @@ def _run_family(st: SimStatic, n_dev: int, mechanism: Optional[str],
             carry0, progs_flat, p_log_flat, axes_flat, seed_arr, mech_ids)
 
 
-def _static_classes(sims: Sequence[SimConfig]
-                    ) -> Tuple[List[int], List[SimConfig]]:
-    """Partition grid points into static-mechanism equivalence classes.
+def _exec_classes(sims: Sequence[SimConfig], dedup_axes: Tuple[str, ...]
+                  ) -> Tuple[List[int], List[SimConfig]]:
+    """Partition grid points into equivalence classes of a mechanism's
+    live axes (``MechanismSpec.dedup_axes`` — its declared ``exec_axes``
+    mapped to SimConfig fields, minus the logical epoch count): points
+    agreeing on every live axis produce bitwise-identical traces, so the
+    mechanism scans once per class.
 
     Returns ``(class_of, class_sims)``: ``class_of[g]`` is the class index
     of point ``g``, and ``class_sims[c]`` the class representative — the
@@ -312,7 +329,7 @@ def _static_classes(sims: Sequence[SimConfig]
     class_sims: List[SimConfig] = []
     index: Dict[tuple, int] = {}
     for s in sims:
-        ck = tuple(getattr(s, a) for a in STATIC_EXEC_AXES)
+        ck = tuple(getattr(s, a) for a in dedup_axes)
         c = index.setdefault(ck, len(class_sims))
         if c == len(class_sims):
             class_sims.append(s)
@@ -323,7 +340,8 @@ def _static_classes(sims: Sequence[SimConfig]
 
 
 def run_suite(programs: Union[Dict[str, Program], Sequence[Program]],
-              sim: SimConfig, mechanisms: Sequence[str] = MECHANISMS,
+              sim: SimConfig,
+              mechanisms: Sequence[Union[str, MechanismSpec]] = MECHANISMS,
               seeds: Optional[Sequence[int]] = None
               ) -> Dict[str, Dict[str, Dict[str, np.ndarray]]]:
     """Batched-sweep counterpart of calling ``run_sim`` in nested loops.
@@ -339,9 +357,10 @@ def run_suite(programs: Union[Dict[str, Program], Sequence[Program]],
 
 def run_grid(programs: Union[Dict[str, Program], Sequence[Program]],
              static_cfg: SimConfig, axes_grid,
-             mechanisms: Sequence[str] = MECHANISMS,
+             mechanisms: Sequence[Union[str, MechanismSpec]] = MECHANISMS,
              seeds: Optional[Sequence[int]] = None,
-             max_mask_ratio: Optional[float] = None
+             max_mask_ratio: Optional[float] = None,
+             dedup: bool = True
              ) -> Dict[tuple, Dict[str, Dict[str, Dict[str, np.ndarray]]]]:
     """One executable family for the whole figure grid.
 
@@ -350,18 +369,26 @@ def run_grid(programs: Union[Dict[str, Program], Sequence[Program]],
     (coupled axes); axes are the traced ``SimConfig`` fields in
     ``AXIS_FIELDS``. ``static_cfg`` supplies the static shape/flag fields
     and the default value of every axis not named in the grid.
+    ``mechanisms`` are registered names or ``MechanismSpec`` values
+    (resolved uniformly through ``repro.core.mechanisms``); results are
+    keyed by spec name.
 
     Each grid point's ``SimAxes`` (with ``n_epochs`` as its logical epoch
     count — the scan runs to the grid max and the tail is masked/sliced)
     is stacked and vmapped alongside workloads x seeds x mechanism ids;
     the flattened (workload x grid-point) axis is sharded across local
-    devices with ``shard_map`` (1-device mesh = identity). Fork--pre-
-    execute mechanisms share one traced-id executable, oracle gets its
-    specialized one — for any grid size. Static-frequency mechanisms are
-    deduplicated across grid points first: they scan once per
-    ``STATIC_EXEC_AXES`` equivalence class and the class trace is broadcast
-    back to every member's grid key (bitwise — the class axes are the only
-    live inputs of a static mech's executable).
+    devices with ``shard_map`` (1-device mesh = identity). Traced
+    fork--pre-execute mechanisms share executables; oracle, static
+    frequencies and registered custom mechanisms compile specialized ones
+    — for any grid size. Every mechanism is deduplicated across grid
+    points by its spec's declared live axes (``MechanismSpec.exec_axes``):
+    it scans once per equivalence class of points agreeing on those axes
+    and the class trace is broadcast back to every member's grid key
+    (bitwise — the other axes are dead inputs to its executable). A
+    static frequency collapses objective and table_ema axes; a reactive
+    (table-free) mechanism and oracle collapse table_ema axes; PC
+    mechanisms consume every axis. ``dedup=False`` forces one scan per
+    (mechanism x grid point), for A/B benchmarking.
 
     When logical epoch counts are strongly coupled to an axis (the paper's
     granularity sweeps pair 1 us with 6x the epochs of 100 us), scanning
@@ -384,8 +411,7 @@ def run_grid(programs: Union[Dict[str, Program], Sequence[Program]],
         progs = list(programs)
         names_w = [p.name for p in progs]
     assert progs, "run_grid needs at least one program"
-    for m in mechanisms:
-        assert m in MECHANISMS, m
+    specs = [MECH.resolve(m) for m in mechanisms]
     assert static_cfg.n_cu % static_cfg.cus_per_domain == 0
     axis_names, points = _grid_points(axes_grid)
     keys = [tuple(p[n] for n in axis_names) for p in points]
@@ -407,7 +433,7 @@ def run_grid(programs: Union[Dict[str, Program], Sequence[Program]],
             out: Dict[tuple, Dict] = {}
             for bucket in buckets:
                 out.update(run_grid(programs, static_cfg, bucket,
-                                    mechanisms, seeds))
+                                    mechanisms, seeds, dedup=dedup))
             # restore the caller's grid-point order
             return {k: out[k] for k in keys}
 
@@ -425,71 +451,114 @@ def run_grid(programs: Union[Dict[str, Program], Sequence[Program]],
     n_dev = min(jax.local_device_count(), W * G)
     full_ops = _flat_operands(stacked, p_logical, sims, n_dev)
 
-    fork_mechs = [m for m in mechanisms
-                  if m not in _STATIC_MECHS and m != "oracle"]
-    static_mechs = [m for m in mechanisms if m in _STATIC_MECHS]
-    by_mech: Dict[str, Dict[str, jnp.ndarray]] = {}
+    def classes_of(spec: MechanismSpec):
+        """Grid-point equivalence classes of one spec's live axes."""
+        if not dedup:
+            return list(range(G)), sims
+        return _exec_classes(sims, spec.dedup_axes)
+
+    ops_cache: Dict[tuple, tuple] = {}
+
+    def class_operands(class_of, class_sims):
+        """(operands, n_dev) for a partition — the shared full-grid
+        operands when it is trivial (so the common no-dead-axis case
+        dispatches exactly the full-grid executable), memoized per
+        partition so specs sharing one (all three statics, say) build the
+        flattened arrays once."""
+        if len(class_sims) == G:
+            return full_ops, n_dev
+        key = tuple(class_of)
+        if key not in ops_cache:
+            dev = min(jax.local_device_count(), W * len(class_sims))
+            ops_cache[key] = (_flat_operands(stacked, p_logical, class_sims,
+                                             dev), dev)
+        return ops_cache[key]
+
+    # per-mechanism result row-lookup: name -> (arrays, class_of, n_classes)
+    by_mech: Dict[str, Tuple[Dict[str, jnp.ndarray], List[int], int]] = {}
     no_ids = jnp.zeros((0,), jnp.int32)  # specialized mechs ignore mech_ids
-    if fork_mechs:
-        ids = jnp.asarray([SIM.FORK_MECH_IDS[m] for m in fork_mechs],
+
+    # Traced fork-family mechanisms share executables; group them by the
+    # *partition* their live axes induce on this grid (not by the axes
+    # themselves), so mechanisms that agree on which points are equivalent
+    # ride one dispatch. On a grid with no dead axes every traced spec
+    # induces the identity partition and the whole family is ONE dispatch
+    # over the full operands — bitwise-identical to the pre-spec dispatch;
+    # a table_ema-only axis collapses the reactive (table-free) group to
+    # one class per point set while PC mechanisms still span every point.
+    groups: Dict[tuple, List[MechanismSpec]] = {}
+    group_classes: Dict[tuple, Tuple[List[int], List[SimConfig]]] = {}
+    for s in specs:
+        if s.is_traced:
+            class_of, class_sims = classes_of(s)
+            gk = tuple(class_of)
+            groups.setdefault(gk, []).append(s)
+            group_classes[gk] = (class_of, class_sims)
+    for gk, group in groups.items():
+        class_of, class_sims = group_classes[gk]
+        ops, dev = class_operands(class_of, class_sims)
+        ids = jnp.asarray([SIM.FORK_MECH_IDS[s.name] for s in group],
                           jnp.int32)
-        ys = _run_family(st, n_dev, None, full_ops, seed_arr, ids)
-        for j, m in enumerate(fork_mechs):
-            by_mech[m] = {k: v[:, :, j] for k, v in ys.items()}
-    if "oracle" in mechanisms:
-        by_mech["oracle"] = _run_family(st, n_dev, "oracle", full_ops,
-                                        seed_arr, no_ids)
-    class_of: List[int] = list(range(G))
-    C = G
-    if static_mechs:
-        class_of, class_sims = _static_classes(sims)
-        C = len(class_sims)
-        if C == G:
-            static_ops, static_dev = full_ops, n_dev
-        else:
-            static_dev = min(jax.local_device_count(), W * C)
-            static_ops = _flat_operands(stacked, p_logical, class_sims,
-                                        static_dev)
-        for m in static_mechs:
-            by_mech[m] = _run_family(st, static_dev, m, static_ops,
-                                     seed_arr, no_ids)
+        ys = _run_family(st, dev, None, ops, seed_arr, ids)
+        for j, s in enumerate(group):
+            by_mech[s.name] = ({k: v[:, :, j] for k, v in ys.items()},
+                               class_of, len(class_sims))
+
+    # Specialized families — static frequencies, oracle, and registered
+    # custom mechanisms — compile their own executable and dedup the same
+    # generic way (a static mech ignores objective AND table_ema; oracle
+    # ignores table_ema).
+    for s in specs:
+        if s.is_traced:
+            continue
+        class_of, class_sims = classes_of(s)
+        ops, dev = class_operands(class_of, class_sims)
+        ys = _run_family(st, dev, s, ops, seed_arr, no_ids)
+        by_mech[s.name] = (ys, class_of, len(class_sims))
 
     out: Dict[tuple, Dict[str, Dict[str, Dict[str, np.ndarray]]]] = {}
     for g, (key, sim_pt) in enumerate(zip(keys, sims)):
         out[key] = {}
         for w, name in enumerate(names_w):
-            i_full, i_cls = w * G + g, w * C + class_of[g]
-            out[key][name] = {
-                m: _unpack_trace(by_mech[m],
-                                 i_cls if m in _STATIC_MECHS else i_full,
-                                 m, squeeze_seed,
-                                 n_ep=sim_pt.n_epochs) for m in mechanisms}
+            trs = {}
+            for s in specs:
+                arrs, class_of, C = by_mech[s.name]
+                trs[s.name] = _unpack_trace(arrs, w * C + class_of[g], s,
+                                            squeeze_seed,
+                                            n_ep=sim_pt.n_epochs)
+            out[key][name] = trs
     return out
 
 
 def suite_metrics(programs: Union[Dict[str, Program], Sequence[Program]],
-                  sim: SimConfig, mechanisms: Sequence[str] = MECHANISMS,
+                  sim: SimConfig,
+                  mechanisms: Sequence[Union[str, MechanismSpec]] = MECHANISMS,
                   n: int = 2,
-                  traces: Optional[Dict] = None
+                  traces: Optional[Dict] = None,
+                  baseline: Union[str, MechanismSpec] = "static17"
                   ) -> Dict[str, Dict[str, Dict[str, float]]]:
     """Batched counterpart of ``run_workload`` over a whole suite: ED^nP
-    normalized to static17 per workload. Pass ``traces`` (a ``run_suite``
-    result that includes static17) to reuse already-computed traces."""
-    mechs = tuple(mechanisms)
+    per workload, normalized to ``baseline`` (any registered mechanism;
+    default the paper's static 1.7 GHz). Pass ``traces`` (a ``run_suite``
+    result that includes the baseline) to reuse already-computed traces."""
+    mech_specs = [MECH.resolve(m) for m in mechanisms]
+    base_spec = MECH.resolve(baseline)
     if traces is None:
-        need = mechs if "static17" in mechs else ("static17",) + mechs
+        need = tuple(mechanisms)
+        if all(s.name != base_spec.name for s in mech_specs):
+            need = (base_spec,) + need
         traces = run_suite(programs, sim, need)
     out: Dict[str, Dict[str, Dict[str, float]]] = {}
     for name, trs in traces.items():
-        base = trs["static17"]
+        base = trs[base_spec.name]
         budget = 0.9 * base["work"].sum()
         E0, D0, M0 = ednp(base, budget, sim.epoch_us, n)
         out[name] = {}
-        for m in mechs:
-            E, D, M = ednp(trs[m], budget, sim.epoch_us, n)
-            out[name][m] = {
-                "accuracy": prediction_accuracy(trs[m])
-                if m not in _STATIC_MECHS else float("nan"),
+        for s in mech_specs:
+            E, D, M = ednp(trs[s.name], budget, sim.epoch_us, n)
+            out[name][s.name] = {
+                "accuracy": prediction_accuracy(trs[s.name])
+                if s.family != "static" else float("nan"),
                 "E": E, "D": D, "ednp": M, "ednp_norm": M / M0,
                 "energy_norm": E / E0, "delay_norm": D / D0,
             }

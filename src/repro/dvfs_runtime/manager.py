@@ -8,36 +8,56 @@ one executable family."""
 from __future__ import annotations
 
 import dataclasses
-from typing import Dict, Optional, Sequence
+from typing import Dict, Optional, Sequence, Union
 
 import numpy as np
 
 from repro.configs.base import ModelConfig, ShapeConfig
+from repro.core import mechanisms as MECH
 from repro.core import power as PWR
+from repro.core.mechanisms import MechanismSpec
 from repro.core.simulate import SimConfig, ednp, prediction_accuracy
 from repro.core.sweep import run_grid
 from repro.core.workloads import Program
 from repro.dvfs_runtime.telemetry import arch_program
+
+Mechanism = Union[str, MechanismSpec]
 
 
 @dataclasses.dataclass
 class DVFSManager:
     program: Program
     sim: SimConfig
+    # the mechanism this deployment evaluates and the baseline its metrics
+    # normalize to — any registered MechanismSpec (or name), so a custom
+    # registered predictor can be managed without touching this module
+    mechanism: Mechanism = "pcstall"
+    baseline: Mechanism = "static17"
     step_times: list = dataclasses.field(default_factory=list)
 
     @classmethod
     def for_model(cls, cfg: ModelConfig, shape: ShapeConfig,
-                  objective: str = "ed2p", n_cu: int = 16) -> "DVFSManager":
+                  objective: str = "ed2p", n_cu: int = 16,
+                  mechanism: Mechanism = "pcstall",
+                  baseline: Mechanism = "static17") -> "DVFSManager":
         prog = arch_program(cfg, shape)
         sim = SimConfig(n_cu=n_cu, n_epochs=400, objective=objective)
-        return cls(program=prog, sim=sim)
+        return cls(program=prog, sim=sim, mechanism=mechanism,
+                   baseline=baseline)
 
     def observe_step(self, step: int, seconds: float) -> None:
         self.step_times.append(seconds)
 
-    def _point_report(self, traces: Dict, epoch_us: float) -> Dict[str, float]:
-        base, tr = traces["static17"], traces["pcstall"]
+    def _mechs(self, baseline: Optional[Mechanism]):
+        """(baseline_spec, mechanism_spec) for one report, resolved
+        through the registry (``baseline=None`` = the manager default)."""
+        base = MECH.resolve(self.baseline if baseline is None else baseline)
+        return base, MECH.resolve(self.mechanism)
+
+    def _point_report(self, traces: Dict, epoch_us: float,
+                      base_spec: MechanismSpec,
+                      mech_spec: MechanismSpec) -> Dict[str, float]:
+        base, tr = traces[base_spec.name], traces[mech_spec.name]
         budget = 0.9 * base["work"].sum()
         E0, D0, M0 = ednp(base, budget, epoch_us)
         E, D, M = ednp(tr, budget, epoch_us)
@@ -46,7 +66,10 @@ class DVFSManager:
         h = np.bincount(tr["fidx"].ravel(),
                         minlength=len(PWR.FREQS_GHZ)) / tr["fidx"].size
         return {
-            "accuracy": prediction_accuracy(tr),
+            # a static mechanism never predicts (its trace carries err==0),
+            # so accuracy is undefined — match suite_metrics' NaN
+            "accuracy": prediction_accuracy(tr)
+            if mech_spec.family != "static" else float("nan"),
             "energy_norm": E / E0,
             "delay_norm": D / D0,
             "ed2p_norm": M / M0,
@@ -54,25 +77,32 @@ class DVFSManager:
             "mean_step_s": float(np.mean(self.step_times)) if self.step_times else 0.0,
         }
 
-    def report(self) -> Dict[str, float]:
-        """Run PCSTALL vs static-1.7 on this job's phase program (a
+    def report(self, baseline: Optional[Mechanism] = None
+               ) -> Dict[str, float]:
+        """Run the managed mechanism against ``baseline`` (default the
+        manager's, normally static-1.7) on this job's phase program (a
         1-point grid dispatch; jit-cached across repeated reports)."""
+        base_spec, mech_spec = self._mechs(baseline)
         grid = run_grid([self.program], self.sim,
                         {"objective": [self.sim.objective]},
-                        ("static17", "pcstall"))
+                        (base_spec, mech_spec))
         trs = grid[(self.sim.objective,)][self.program.name]
-        return self._point_report(trs, self.sim.epoch_us)
+        return self._point_report(trs, self.sim.epoch_us, base_spec,
+                                  mech_spec)
 
     def grid_report(self, epoch_us: Sequence[float] = (1.0, 10.0),
-                    objectives: Optional[Sequence[str]] = None
+                    objectives: Optional[Sequence[str]] = None,
+                    baseline: Optional[Mechanism] = None
                     ) -> Dict[tuple, Dict[str, float]]:
         """Sweep epoch granularity x objective for this job in ONE grid
         executable family (what a deployment would use to pick its DVFS
         operating point). Returns ``{(epoch_us, objective): report}``."""
         objectives = [self.sim.objective] if objectives is None \
             else list(objectives)
+        base_spec, mech_spec = self._mechs(baseline)
         grid = run_grid([self.program], self.sim,
                         {"epoch_us": list(epoch_us), "objective": objectives},
-                        ("static17", "pcstall"))
-        return {key: self._point_report(trs[self.program.name], key[0])
+                        (base_spec, mech_spec))
+        return {key: self._point_report(trs[self.program.name], key[0],
+                                        base_spec, mech_spec)
                 for key, trs in grid.items()}

@@ -1,0 +1,69 @@
+"""Capture bitwise reference traces for the mechanism-dispatch contract.
+
+Run from the repo root (``PYTHONPATH=src python tests/data/capture_reference.py``)
+at a known-good commit to (re)generate ``grid_reference.npz``:
+``tests/test_mechanisms.py`` replays the same grids through the current
+dispatch path and asserts bitwise equality when the capturing platform
+matches (jax version + backend recorded in the file), to 1e-5 otherwise.
+
+The captured grids cover every pre-existing mechanism through both entry
+points and the axes the spec-driven dedup reasons about:
+
+  * ``suite``    — 1-point run_suite, all 11 mechanisms;
+  * ``grid2x2``  — (epoch_us x objective) figure grid, all 11 mechanisms;
+  * ``gridema``  — a table_ema-only axis, fork mechanisms + a static
+                   baseline (the axis reactive mechanisms dedup across).
+"""
+import json
+from pathlib import Path
+
+import jax
+import numpy as np
+
+from repro.core.simulate import MECHANISMS, SimConfig
+from repro.core.sweep import run_grid, run_suite
+
+OUT = Path(__file__).resolve().parent / "grid_reference.npz"
+SIM = SimConfig(n_cu=16, n_wf=12, n_epochs=48)
+WORKLOADS = ("comd", "xsbench")
+EMA_MECHS = ("static17", "crisp", "accreac", "pcstall", "accpc", "oracle")
+
+CASES = {
+    "suite": {"epoch_us": [1.0]},
+    "grid2x2": {"epoch_us": [1.0, 10.0], "objective": ["ed2p", "edp"]},
+    "gridema": {"table_ema": [0.3, 0.5]},
+}
+
+
+def case_mechs(case: str):
+    return EMA_MECHS if case == "gridema" else MECHANISMS
+
+
+def run_case(case: str):
+    from repro.core.workloads import get_workload
+    progs = {w: get_workload(w) for w in WORKLOADS}
+    return run_grid(progs, SIM, CASES[case], case_mechs(case))
+
+
+def main() -> None:
+    arrays = {}
+    for case in CASES:
+        res = run_case(case)
+        for key, by_wl in res.items():
+            for wl, by_mech in by_wl.items():
+                for mech, tr in by_mech.items():
+                    for ch, v in tr.items():
+                        arrays[f"{case}|{key!r}|{wl}|{mech}|{ch}"] = v
+    meta = {"jax": jax.__version__,
+            "backend": jax.default_backend(),
+            "n_dev": jax.local_device_count(),
+            "note": "bitwise reference for the mechanism dispatch contract"}
+    arrays["__meta__"] = np.frombuffer(
+        json.dumps(meta).encode(), dtype=np.uint8)
+    np.savez_compressed(OUT, **arrays)
+    print(f"wrote {OUT} ({OUT.stat().st_size / 1024:.0f} KiB, "
+          f"{len(arrays) - 1} arrays, meta={meta})")
+
+
+if __name__ == "__main__":
+    main()

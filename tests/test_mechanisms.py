@@ -1,0 +1,393 @@
+"""Tests for the MechanismSpec registry and the spec-driven dispatch
+contract: traced-id stability (ids are part of the bitwise contract),
+spec validation, name<->spec resolution, registration errors, bitwise
+equivalence of every pre-existing mechanism against captured pre-redesign
+reference traces, the generic exec_axes dedup (a table_ema-only grid axis
+must stop multiplying reactive-mechanism rows), and end-to-end custom
+mechanism registration without engine edits."""
+import dataclasses
+import json
+from pathlib import Path
+
+import jax
+import numpy as np
+import pytest
+
+from repro.core import mechanisms as MECH
+from repro.core import sweep as SW
+from repro.core.mechanisms import MechanismSpec
+from repro.core.simulate import (FORK_MECH_IDS, FORK_MECHS, MECHANISMS,
+                                 SimAxes, SimConfig, predict_instr, run_sim)
+from repro.core.sweep import STATIC_EXEC_AXES, run_grid, run_suite
+from repro.core.workloads import get_workload
+
+SIM = SimConfig(n_cu=16, n_wf=12, n_epochs=48)
+WORKLOADS = ("comd", "xsbench")
+# the engine-imposed live-axis floor for predicting (non-static) specs
+FULL_AXES = ("epoch_us", "sigma", "cap_per_ghz", "membw", "obj", "n_ep")
+
+
+@pytest.fixture(scope="module")
+def progs():
+    return {w: get_workload(w) for w in WORKLOADS}
+
+
+# ---------------------------------------------------------------------------
+# Registry contract
+# ---------------------------------------------------------------------------
+
+
+def test_traced_ids_are_stable():
+    """The builtin traced ids are part of the bitwise dispatch contract
+    (the sweep layer vmaps executables over them and the scan body's
+    branch selects compare against them): renumbering is a compiled-graph
+    change and MUST fail loudly here."""
+    want = {"stall": 0, "lead": 1, "crit": 2, "crisp": 3, "accreac": 4,
+            "pcstall": 5, "accpc": 6, "oracle": 7}
+    got = {s.name: s.traced_id for s in MECH.fork_specs()}
+    assert got == want
+    assert FORK_MECHS == tuple(want)
+    assert FORK_MECH_IDS == want
+    assert MECHANISMS == MECH.BUILTIN_NAMES
+    # the engine's branch constants derive from these ids
+    assert MECH.traced_reactive_count() == 5
+
+
+def test_builtin_families_and_flags():
+    fams = {s.name: s.family for s in MECH.specs()}
+    assert fams == {"static13": "static", "static17": "static",
+                    "static22": "static", "stall": "reactive",
+                    "lead": "reactive", "crit": "reactive",
+                    "crisp": "reactive", "accreac": "reactive",
+                    "pcstall": "pc", "accpc": "pc", "oracle": "oracle"}
+    assert MECH.get("static17").static_fidx == 4
+    assert MECH.get("pcstall").hit_telemetry
+    assert MECH.get("accpc").hit_telemetry
+    assert not MECH.get("crisp").hit_telemetry
+    # dedup contract: statics ignore objective+table_ema, reactive/oracle
+    # ignore table_ema, pc mechanisms consume everything
+    assert STATIC_EXEC_AXES == ("epoch_us", "sigma", "cap_per_ghz", "membw")
+    assert "table_ema" not in MECH.get("crisp").exec_axes
+    assert "table_ema" not in MECH.get("oracle").exec_axes
+    assert "table_ema" in MECH.get("pcstall").exec_axes
+
+
+def test_exec_axes_validated_against_sim_axes():
+    assert MECH.SIM_AXES_FIELDS == SimAxes._fields
+    with pytest.raises(AssertionError, match="not SimAxes fields"):
+        MechanismSpec("bad", "reactive", ("epoch_us", "nope"),
+                      predict=lambda *a: None)
+    # canonicalization: declaration order does not matter
+    a = MechanismSpec("x", "reactive", tuple(reversed(FULL_AXES)),
+                      predict=lambda *a: None)
+    assert a.exec_axes == FULL_AXES
+    assert a.config_axes == ("epoch_us", "sigma", "cap_per_ghz", "membw",
+                             "objective", "n_epochs")
+    assert a.dedup_axes == ("epoch_us", "sigma", "cap_per_ghz", "membw",
+                            "objective")
+
+
+def test_exec_axes_enforce_engine_imposed_liveness():
+    """exec_axes may over-declare liveness but never omit an axis the
+    engine unconditionally reads — an omitted live axis would make the
+    grid dedup broadcast wrong results (e.g. a pc-family spec without
+    table_ema would collapse a table_ema grid while the forced table
+    maintenance genuinely depends on it)."""
+    with pytest.raises(ValueError, match="live axes.*table_ema"):
+        MechanismSpec("bad", "pc", FULL_AXES, predict=lambda *a: None)
+    with pytest.raises(ValueError, match="live axes.*obj"):
+        MechanismSpec("bad", "reactive",
+                      ("epoch_us", "sigma", "cap_per_ghz", "membw", "n_ep"),
+                      predict=lambda *a: None)
+    with pytest.raises(ValueError, match="live axes"):
+        MechanismSpec("bad", "static", ("epoch_us", "sigma"), static_fidx=0)
+    # every builtin satisfies its own floor by construction
+    for s in MECH.specs():
+        MechanismSpec(s.name, s.family, s.exec_axes, static_fidx=s.static_fidx,
+                      traced_id=s.traced_id, cu_model=s.cu_model,
+                      fork_estimator=s.fork_estimator,
+                      hit_telemetry=s.hit_telemetry)
+
+
+def test_spec_validation_errors():
+    with pytest.raises(AssertionError, match="family"):
+        MechanismSpec("bad", "quantum", ("epoch_us",))
+    with pytest.raises(AssertionError, match="static_fidx"):
+        MechanismSpec("bad", "static", ("epoch_us",))  # missing fidx
+    with pytest.raises(AssertionError, match="static_fidx"):
+        MechanismSpec("bad", "static", ("epoch_us",), static_fidx=99)
+    with pytest.raises(AssertionError, match="must not set static_fidx"):
+        MechanismSpec("bad", "reactive", ("epoch_us",), static_fidx=1,
+                      predict=lambda *a: None)
+    with pytest.raises(AssertionError, match="update hook requires"):
+        MechanismSpec("bad", "reactive", ("epoch_us",),
+                      update=lambda *a: None)
+
+
+def test_name_spec_round_trip():
+    spec = MECH.get("pcstall")
+    assert MECH.resolve("pcstall") is spec
+    assert MECH.resolve(spec) is spec
+    assert spec.label == "PCSTALL (predictive)"
+    with pytest.raises(KeyError, match="unknown mechanism"):
+        MECH.get("not_a_mechanism")
+    with pytest.raises(KeyError, match="unknown mechanism"):
+        MECH.resolve("not_a_mechanism")
+
+
+def test_resolve_rejects_impostor_specs():
+    """A spec reusing a registered name but differing in fields must not
+    silently substitute (or be substituted by) the registry entry, and an
+    unregistered spec cannot forge a traced id to ride a builtin path."""
+    fake = dataclasses.replace(MECH.get("crisp"), cu_model="stall")
+    with pytest.raises(ValueError, match="differs from the registered"):
+        MECH.resolve(fake)
+    forged = MechanismSpec("impostor", "pc", MECH.get("pcstall").exec_axes,
+                           traced_id=6)  # constructible (looks builtin)
+    with pytest.raises(AssertionError, match="traced ids are reserved"):
+        MECH.resolve(forged)
+    # an unregistered spec with its own name and hooks resolves to itself
+    own = _toy_spec("never_registered")
+    assert MECH.resolve(own) is own
+
+
+def test_hit_telemetry_requires_pc_family():
+    """The flag promises a hit_rate channel only the PC-table path emits;
+    declaring it elsewhere must fail at construction, not unpack time."""
+    with pytest.raises(ValueError, match="hit_telemetry requires"):
+        _toy_spec("bad_flag", hit_telemetry=True)  # reactive family
+    with pytest.raises(ValueError, match="needs a predict hook"):
+        MechanismSpec("bad_pc", "pc", ("epoch_us", "table_ema"))
+
+
+def test_duplicate_and_reserved_registration():
+    pc_axes = FULL_AXES + ("table_ema",)
+    with pytest.raises(ValueError, match="already registered"):
+        MECH.register(MechanismSpec("pcstall", "pc", pc_axes,
+                                    predict=lambda *a: None))
+    # builtins cannot be overridden even explicitly
+    with pytest.raises(ValueError, match="already registered"):
+        MECH.register(MechanismSpec("pcstall", "pc", pc_axes,
+                                    predict=lambda *a: None),
+                      allow_override=True)
+    # traced ids are reserved for the builtin fork family
+    with pytest.raises(AssertionError, match="traced ids are reserved"):
+        MECH.register(MechanismSpec("mine", "reactive", FULL_AXES,
+                                    traced_id=9, predict=lambda *a: None))
+    # custom predictor families need a predict hook (enforced at
+    # construction: without one the spec would trace a builtin path)
+    with pytest.raises(ValueError, match="needs a predict hook"):
+        MechanismSpec("mine", "reactive", FULL_AXES)
+    with pytest.raises(AssertionError, match="cannot unregister builtin"):
+        MECH.unregister("oracle")
+    # user registrations CAN be replaced with allow_override, and removed
+    try:
+        MECH.register(MechanismSpec("tmp_dup", "reactive", FULL_AXES,
+                                    predict=lambda *a: None))
+        with pytest.raises(ValueError, match="already registered"):
+            MECH.register(MechanismSpec("tmp_dup", "reactive", FULL_AXES,
+                                        predict=lambda *a: None))
+        MECH.register(MechanismSpec("tmp_dup", "reactive", FULL_AXES,
+                                    predict=lambda *a: None),
+                      allow_override=True)
+    finally:
+        MECH.unregister("tmp_dup")
+    assert "tmp_dup" not in MECH.names()
+
+
+def test_mechanism_table_lists_registry():
+    table = MECH.mechanism_table()
+    for name in MECH.BUILTIN_NAMES:
+        assert f"`{name}`" in table
+
+
+# ---------------------------------------------------------------------------
+# Bitwise contract vs captured pre-redesign references
+# ---------------------------------------------------------------------------
+
+
+def _reference():
+    path = Path(__file__).parent / "data" / "grid_reference.npz"
+    ref = np.load(path)
+    meta = json.loads(bytes(ref["__meta__"]))
+    exact = (meta["jax"] == jax.__version__
+             and meta["backend"] == jax.default_backend()
+             and meta["n_dev"] == jax.local_device_count())
+    return ref, exact
+
+
+@pytest.mark.parametrize("case", ["suite", "grid2x2", "gridema"])
+def test_bitwise_vs_captured_reference(case):
+    """Acceptance: every pre-existing mechanism produces bitwise-identical
+    run_grid/run_suite traces through the spec-driven dispatch, verified
+    against references captured before the redesign
+    (tests/data/capture_reference.py). The gridema case exercises the NEW
+    reactive/oracle dedup across a table_ema-only axis — broadcast class
+    traces must still reproduce the pre-dedup per-point traces bitwise.
+    On a platform other than the capturing one (jax version, backend and
+    local device count recorded in the file — a forced multi-device mesh
+    shards the flat axis differently) XLA codegen may differ at the last
+    ulp, so the comparison degrades to 1e-5."""
+    import sys
+    sys.path.insert(0, str(Path(__file__).parent / "data"))
+    try:
+        from capture_reference import run_case
+    finally:
+        sys.path.pop(0)
+    ref, exact = _reference()
+    res = run_case(case)
+    n = 0
+    for key, by_wl in res.items():
+        for wl, by_mech in by_wl.items():
+            for mech, tr in by_mech.items():
+                for ch, v in tr.items():
+                    k = f"{case}|{key!r}|{wl}|{mech}|{ch}"
+                    if exact:
+                        np.testing.assert_array_equal(
+                            np.asarray(v), ref[k], err_msg=k)
+                    else:
+                        np.testing.assert_allclose(
+                            np.asarray(v), ref[k], rtol=1e-5, atol=1e-5,
+                            err_msg=k)
+                    n += 1
+    assert n == sum(1 for k in ref.files if k.startswith(case + "|"))
+
+
+# ---------------------------------------------------------------------------
+# Generic exec_axes dedup (the ROADMAP's reactive/table_ema item)
+# ---------------------------------------------------------------------------
+
+
+def test_reactive_dedup_on_table_ema_axis(progs):
+    """Acceptance: a table_ema-only grid axis no longer multiplies
+    reactive-mechanism rows — they scan once per class and broadcast —
+    while PC mechanisms (whose exec_axes include table_ema) still span
+    every point, and all results stay bitwise-equal to per-point
+    run_suite."""
+    sim = dataclasses.replace(SIM, n_cu=12)  # SimStatic unique to this test
+    grid = {"table_ema": [0.3, 0.5, 0.7]}
+    W, G = len(WORKLOADS), 3
+    SW.DISPATCH_ROWS.clear()
+    res = run_grid(progs, sim, grid, ("crisp", "accreac", "pcstall",
+                                      "oracle"))
+    # reactive group: W x 1 class x 2 mechs; pc group: W x G x 1 mech
+    assert SW.DISPATCH_ROWS["grid_forks"] == W * 1 * 2 + W * G * 1
+    assert SW.DISPATCH_ROWS["grid_oracle"] == W * 1  # oracle dedups too
+    # the broadcast class trace is bitwise-identical across member keys
+    for wl in WORKLOADS:
+        for m in ("crisp", "accreac", "oracle"):
+            a = res[(0.3,)][wl][m]
+            for ema in (0.5, 0.7):
+                b = res[(ema,)][wl][m]
+                for k in a:
+                    np.testing.assert_array_equal(a[k], b[k],
+                                                  err_msg=f"{ema}/{wl}/{m}/{k}")
+    # and every point reproduces its per-point run_suite bitwise — pc
+    # mechanisms genuinely differ across ema values and stay exact
+    for ema in (0.3, 0.5, 0.7):
+        suite = run_suite(progs, dataclasses.replace(sim, table_ema=ema),
+                          ("crisp", "accreac", "pcstall", "oracle"))
+        for wl in WORKLOADS:
+            for m in ("crisp", "accreac", "pcstall", "oracle"):
+                for k, v in suite[wl][m].items():
+                    np.testing.assert_array_equal(
+                        res[(ema,)][wl][m][k], v,
+                        err_msg=f"{ema}/{wl}/{m}/{k}")
+    # pcstall results must actually vary with the EMA (the axis is live)
+    assert not np.array_equal(res[(0.3,)]["comd"]["pcstall"]["work"],
+                              res[(0.7,)]["comd"]["pcstall"]["work"])
+
+
+def test_dedup_flag_disables_collapsing(progs):
+    """dedup=False forces one scan per (mechanism x grid point) — the A/B
+    baseline the grid_ema benchmark times — with identical results."""
+    sim = dataclasses.replace(SIM, n_cu=12, n_epochs=24)
+    grid = {"table_ema": [0.3, 0.5]}
+    W, G = len(WORKLOADS), 2
+    a = run_grid(progs, sim, grid, ("crisp",))
+    SW.DISPATCH_ROWS.clear()
+    b = run_grid(progs, sim, grid, ("crisp",), dedup=False)
+    assert SW.DISPATCH_ROWS["grid_forks"] == W * G
+    for key in a:
+        for wl in WORKLOADS:
+            for k in a[key][wl]["crisp"]:
+                np.testing.assert_array_equal(a[key][wl]["crisp"][k],
+                                              b[key][wl]["crisp"][k])
+
+
+# ---------------------------------------------------------------------------
+# Custom mechanism registration, end to end
+# ---------------------------------------------------------------------------
+
+
+def _toy_spec(name="toy_blend", family="reactive", extra_axes=(), **kw):
+    from repro.core import estimators as EST
+
+    def predict(carry, ctx, st, ax):
+        i0 = 0.5 * ctx.i0_l.sum(-1) + 0.5 * carry.react_i0
+        sens = 0.5 * ctx.s_l.sum(-1) + 0.5 * carry.react_sens
+        return predict_instr(i0, sens, st, ax)
+
+    def update(counters, f_sel, I_f, carry, ctx, st, ax):
+        i0_cu, s_cu = EST.cu_estimate(counters, f_sel, "crisp")
+        return i0_cu / ax.epoch_us, s_cu / ax.epoch_us
+
+    return MechanismSpec(
+        name, family,
+        exec_axes=("epoch_us", "sigma", "cap_per_ghz", "membw", "obj",
+                   "n_ep") + tuple(extra_axes),
+        label="toy static+dynamic blend", predict=predict, update=update,
+        **kw)
+
+
+def test_custom_mechanism_through_engine_and_grid(progs):
+    """A registered mechanism runs through run_sim AND the sharded grid
+    dispatch with no engine/sweep edits, produces the standard trace
+    schema, dedups by its declared exec_axes, and its name works
+    everywhere a builtin's does."""
+    spec = MECH.register(_toy_spec())
+    try:
+        tr = run_sim(progs["comd"], SIM, "toy_blend")
+        assert set(tr) == {"work", "energy", "err", "fidx", "true_sens"}
+        assert tr["work"].shape == (SIM.n_epochs, SIM.n_cu)
+        assert np.all(np.isfinite(tr["work"]))
+        # a real prediction: finite nonneg error, mechanism actually picks
+        # varied frequencies once warmed up
+        assert np.unique(tr["fidx"]).size > 1
+        SW.DISPATCH_ROWS.clear()
+        grid = run_grid(progs, SIM, {"table_ema": [0.3, 0.5]},
+                        ("toy_blend",))
+        # table-free by declaration: one class, rows not multiplied
+        assert SW.DISPATCH_ROWS["grid_toy_blend"] == len(WORKLOADS)
+        for wl in WORKLOADS:
+            a = grid[(0.3,)][wl]["toy_blend"]
+            b = grid[(0.5,)][wl]["toy_blend"]
+            for k in a:
+                np.testing.assert_array_equal(a[k], b[k])
+            # grid path == specialized serial path (same spec, same
+            # executable family contract as every builtin)
+            ser = run_sim(progs[wl], dataclasses.replace(SIM, table_ema=0.3),
+                          spec)
+            for k in ser:
+                np.testing.assert_allclose(a[k], ser[k], rtol=1e-5,
+                                           atol=1e-5, err_msg=f"{wl}/{k}")
+    finally:
+        MECH.unregister("toy_blend")
+
+
+def test_custom_mechanism_hit_telemetry_flag(progs):
+    """A registered spec that declares hit_telemetry keeps the channel
+    through the sweep layer without any sweep edit (satellite: the old
+    _PC_MECHS-keyed filter is gone)."""
+    spec = _toy_spec("toy_pc", family="pc", extra_axes=("table_ema",),
+                     hit_telemetry=True)
+    MECH.register(spec)
+    try:
+        suite = run_suite(progs, SIM, ("toy_pc", "pcstall", "crisp"))
+        for wl in WORKLOADS:
+            assert "hit_rate" in suite[wl]["pcstall"]
+            assert "hit_rate" not in suite[wl]["crisp"]
+            # custom pc-family spec: channel present iff declared
+            assert "hit_rate" in suite[wl]["toy_pc"]
+    finally:
+        MECH.unregister("toy_pc")
