@@ -24,6 +24,8 @@ Figures:
   fig18a  energy savings at 5%/10% perf-degradation caps
   fig18b  ED2P vs V/f-domain granularity
   tab01   hardware table overhead
+  fig_ivr_regime  ED2P vs IVR transition-latency regime x epoch length
+                  (the power axis: one run_grid over PowerConfig points)
 """
 from __future__ import annotations
 
@@ -271,6 +273,58 @@ def fig18b_granularity() -> Dict:
     return _cache("fig18b_granularity", run)
 
 
+def fig_ivr_regime() -> Dict:
+    """ED2P vs IVR transition-latency regime x epoch granularity.
+
+    The paper's core hardware premise (§5, §1): IVR transition latency
+    shrinking from the us range to ns (4ns @ 1us epochs) is what unlocks
+    fine-grain DVFS at all. This sensitivity sweep makes the premise a
+    figure: three latency regimes — the paper's on-chip IVR (4ns @ 1us)
+    and 10x/100x slower regulators (40ns/400ns @ 1us) — crossed with
+    epoch granularities from 1us to 100us, all through ``run_grid`` over
+    the traced ``power`` axis (PowerConfig grid values; <= 2 fork-family
+    compiles per n_epochs bucket — the masked-tail bucketing splits this
+    coupled grid into two buckets). The crossover the table shows: with a
+    slow regulator the 1us operating point inverts (fine-grain switching
+    costs more than prediction buys, and the paper's predict-over-react
+    advantage only survives at coarse epochs where reaction is nearly as
+    good), while the ns-regime makes 1us epochs the best point and the
+    predict-vs-react gap widest."""
+    def run():
+        from repro.core import power as PWR
+        mechs = ("static17", "crisp", "pcstall", "oracle")
+        wls = ["comd", "hacc", "lulesh", "xsbench"]
+        regimes = {  # label = transition latency at 1us epochs
+            "4ns": PWR.PowerConfig(),                   # paper on-chip IVR
+            "40ns": PWR.PowerConfig(lat_per_us=4e-2),
+            "400ns": PWR.PowerConfig(lat_per_us=4e-1),
+        }
+        epochs = [(1.0, 800), (10.0, 300), (100.0, 200)]
+        points = [{"power": pw, "epoch_us": T, "n_epochs": n}
+                  for pw in regimes.values() for (T, n) in epochs]
+        cfg = SimConfig()
+        grid = run_grid(_progs(wls), cfg, points, mechs, max_mask_ratio=3.0)
+        out: Dict = {}
+        for rname, pw in regimes.items():
+            for T, n in epochs:
+                sim = dataclasses.replace(cfg, power=pw, epoch_us=T,
+                                          n_epochs=n)
+                r = suite_metrics(None, sim, mechs, n=2,
+                                  traces=grid[(pw, T, n)])
+                out[f"{rname}@{T:g}us"] = {
+                    m: float(np.exp(np.mean([np.log(r[w][m]["ednp_norm"])
+                                             for w in wls]))) for m in mechs}
+        # the headline crossover: the finest epoch at which predictive
+        # fine-grain DVFS still beats the static baseline, per regime
+        out["finest_paying_epoch_us"] = {
+            rname: next((T for T, _ in epochs
+                         if out[f"{rname}@{T:g}us"]["pcstall"] < 1.0),
+                        None)
+            for rname in regimes}
+        return out
+    return _cache("fig_ivr_regime", run)
+
+
 def tab01_overhead() -> Dict:
     """Hardware storage overhead of PCSTALL (paper Table I)."""
     entries, wf = 128, 40
@@ -293,6 +347,7 @@ ALL_FIGS = {
     "fig16_timeshare": fig16_timeshare,
     "fig18a_energy_caps": fig18a_energy_caps,
     "fig18b_granularity": fig18b_granularity,
+    "fig_ivr_regime": fig_ivr_regime,
     "tab01_overhead": tab01_overhead,
 }
 

@@ -12,8 +12,10 @@ dispatch family every sweep uses) against the seed-style serial path
 (epoch_us x objective) figure grid through the device-sharded ``run_grid``
 against a per-point ``run_suite`` loop (interleaved timings; the grid side
 additionally dedupes mechanisms to one scan per exec-axes equivalence
-class), and the grid_ema benchmark isolates the spec-driven reactive
-dedup on a table_ema-only axis (``dedup=True`` vs ``dedup=False``).
+class), the grid_ema benchmark isolates the spec-driven reactive
+dedup on a table_ema-only axis (``dedup=True`` vs ``dedup=False``), and
+the grid_ivr benchmark sweeps whole IVR/hardware regimes (the traced
+``power`` axis) through one grid dispatch against a per-point loop.
 Results are also written to ``BENCH_sweep.json`` at the repo root so the
 speedups are recorded in the repo's perf trajectory.
 
@@ -353,6 +355,117 @@ def _bench_grid_ema(quick: bool = False):
     return rows, record
 
 
+def _bench_grid_ivr(quick: bool = False):
+    """IVR-regime grid (power x epoch_us) through ONE ``run_grid``
+    dispatch vs a per-point ``run_suite`` loop.
+
+    The ``power`` axis carries whole traced hardware regimes (V/f ladder
+    endpoints + the transition-latency model), so a 3-regime x 2-epoch
+    sensitivity figure compiles <= 2 fork-family executables total — the
+    loop pays one dispatch per point (it reuses the same executables; the
+    win is batching + fewer dispatches). NOTE the dedup angle: statics
+    are LIVE in the power axes (ladder + energy accounting), and
+    epoch_us is live for everything, so on this (power x epoch) grid no
+    mechanism has a dead axis — the static row count recorded here is
+    one scan per grid point, evidence that a swept hardware regime never
+    silently collapses. Timings interleaved A/B/A/B per the bench-box
+    protocol (2-core box, alternation cancels drift); min of each side
+    reported.
+
+    Returns (rows, record)."""
+    import dataclasses
+
+    import numpy as np
+    from repro.core import power as PWR
+    from repro.core import sweep as SW
+    from repro.core.simulate import SimConfig
+    from repro.core.sweep import run_grid, run_suite
+    from repro.core.workloads import get_workload
+    from benchmarks.paper_figs import WORKLOADS_FAST
+
+    # n_ep distinct from every other bench scale (60/80/100/150/200/400)
+    # so neither side can reuse executables another benchmark compiled
+    if quick:
+        wls, mechs, n_ep = WORKLOADS_FAST[:2], ("static17", "pcstall"), 70
+        regimes, epochs = [PWR.PowerConfig(),
+                           PWR.PowerConfig(lat_per_us=4e-1)], [1.0]
+    else:
+        wls, mechs, n_ep = WORKLOADS_FAST[:4], \
+            ("static17", "crisp", "pcstall", "oracle"), 250
+        regimes = [PWR.PowerConfig(),                 # 4ns @ 1us (paper)
+                   PWR.PowerConfig(lat_per_us=4e-2),  # 40ns @ 1us
+                   PWR.PowerConfig(lat_per_us=4e-1)]  # 400ns @ 1us
+        epochs = [1.0, 10.0]
+    progs = {w: get_workload(w) for w in wls}
+    cfg = SimConfig(n_epochs=n_ep)
+    grid = {"power": regimes, "epoch_us": epochs}
+    axis_names, points = SW._grid_points(grid)
+
+    def loop_points():
+        return {tuple(p[n] for n in axis_names):
+                run_suite(progs, dataclasses.replace(cfg, **p), mechs)
+                for p in points}
+
+    def grid_call():
+        return run_grid(progs, cfg, grid, mechs)
+
+    SW.TRACE_COUNTS.clear()
+    SW.DISPATCH_ROWS.clear()
+    t0 = time.perf_counter()
+    res_grid = grid_call()
+    grid_cold_s = time.perf_counter() - t0
+    fork_compiles = sum(v for k, v in SW.TRACE_COUNTS.items()
+                        if k in ("grid_forks", "grid_oracle"))
+    static_rows = sum(v for k, v in SW.DISPATCH_ROWS.items()
+                      if k.startswith("grid_static"))
+    t0 = time.perf_counter()
+    res_loop = loop_points()
+    loop_cold_s = time.perf_counter() - t0
+
+    reps = 2 if quick else 3
+    loop_t, grid_t = [], []
+    for _ in range(reps):
+        loop_t.append(_time_once(loop_points))
+        grid_t.append(_time_once(grid_call))
+    loop_s, grid_s = min(loop_t), min(grid_t)
+
+    # numerics: grid output vs the per-point suite loop (same executable
+    # family -> bitwise)
+    dev = 0.0
+    for key, suite in res_loop.items():
+        for w in wls:
+            for m in mechs:
+                for k in suite[w][m]:
+                    dev = max(dev, float(np.max(np.abs(
+                        np.asarray(suite[w][m][k], np.float64)
+                        - np.asarray(res_grid[key][w][m][k], np.float64)))))
+
+    g = len(points)
+    rows = [
+        ("grid_ivr_total", grid_cold_s * 1e6,
+         f"{g}pt (power x epoch) x {len(wls)}wl x {len(mechs)}mech x "
+         f"{n_ep}ep run_grid cold ({loop_cold_s / grid_cold_s:.1f}x); "
+         f"{fork_compiles} fork-family compiles; static rows "
+         f"{static_rows} — one per (power x epoch) point: statics are "
+         "live in power, nothing collapses on this grid"),
+        ("grid_ivr_warm", grid_s * 1e6,
+         f"run_grid jit-cache hit ({loop_s / grid_s:.1f}x vs warm loop); "
+         f"max|dev| vs loop {dev:.2g}"),
+        ("grid_ivr_loop_cold", loop_cold_s * 1e6, "per-point run_suite loop"),
+        ("grid_ivr_loop_warm", loop_s * 1e6, "per-point loop, jit-cached"),
+    ]
+    record = {"workloads": wls, "mechanisms": list(mechs), "n_epochs": n_ep,
+              "grid_points": g, "power_regimes": len(regimes),
+              "loop_cold_s": loop_cold_s, "grid_cold_s": grid_cold_s,
+              "loop_warm_s": loop_s, "grid_warm_s": grid_s,
+              "speedup_cold": loop_cold_s / grid_cold_s,
+              "speedup_warm": loop_s / grid_s,
+              "fork_family_compiles": fork_compiles,
+              "static_mech_rows": static_rows,
+              "max_abs_dev_vs_loop": dev}
+    return rows, record
+
+
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--figs", default=None,
@@ -387,6 +500,10 @@ def main() -> None:
             print(f"{name},{us:.1f},{derived}")
         sys.stdout.flush()
         rows, bench["grid_ema"] = _bench_grid_ema(args.quick)
+        for name, us, derived in rows:
+            print(f"{name},{us:.1f},{derived}")
+        sys.stdout.flush()
+        rows, bench["grid_ivr"] = _bench_grid_ivr(args.quick)
         for name, us, derived in rows:
             print(f"{name},{us:.1f},{derived}")
         sys.stdout.flush()
@@ -436,6 +553,12 @@ def main() -> None:
             summary = " ".join(f"{o}:pc={v['pcstall']:.3f}" for o, v in res.items())
         elif name == "fig18b_granularity":
             summary = " ".join(f"{g}:pc={v['pcstall']:.2f}" for g, v in res.items())
+        elif name == "fig_ivr_regime":
+            summary = " ".join(
+                f"{k}:pc={v['pcstall']:.2f}" for k, v in res.items()
+                if isinstance(v, dict) and "pcstall" in v and "@1us" in k)
+            summary += " finest_paying=" + ",".join(
+                f"{r}:{T}" for r, T in res["finest_paying_epoch_us"].items())
         else:
             summary = "ok"
         print(f"{name},{dt:.0f},{summary}")

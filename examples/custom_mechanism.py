@@ -53,7 +53,10 @@ def dso_update(counters, f_sel, I_f, carry, ctx, st, ax):
 
 DSO = MECH.register(MechanismSpec(
     "dso", "reactive",
-    exec_axes=("epoch_us", "sigma", "cap_per_ghz", "membw", "obj", "n_ep"),
+    # "power" is mandatory for every spec: the V/f ladder and the energy
+    # accounting make the traced IVR regime live in all mechanisms
+    exec_axes=("epoch_us", "sigma", "cap_per_ghz", "membw", "obj", "n_ep",
+               "power"),
     label="DSO (static+dynamic blend)",
     predict=dso_predict, update=dso_update))
 

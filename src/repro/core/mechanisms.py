@@ -35,7 +35,9 @@ What a spec declares
     one scan, with the result broadcast to every member grid key. A
     static frequency ignores the objective and the table EMA; a reactive
     (table-free) mechanism ignores the table EMA; PC mechanisms consume
-    everything.
+    everything. The ``power`` axis (the traced IVR regime) is live for
+    every family — static frequencies included — because the V/f ladder
+    and the energy accounting read it unconditionally.
 ``predict`` / ``update``
     Optional hooks that make the family user-extensible *without touching
     the engine*: a registered mechanism with a ``predict`` hook runs
@@ -90,9 +92,11 @@ from repro.core import power as PWR
 
 # The traced SimAxes fields, declared here (the registry is the dependency
 # root) and asserted against simulate.SimAxes._fields at engine import so
-# the two can never drift.
+# the two can never drift. ``power`` is the nested PowerAxes pytree — one
+# traced IVR/hardware regime (V/f endpoints, leakage, IVR efficiency,
+# transition model), sweepable like any scalar axis.
 SIM_AXES_FIELDS = ("epoch_us", "sigma", "cap_per_ghz", "membw", "table_ema",
-                   "obj", "n_ep")
+                   "obj", "n_ep", "power")
 
 # SimAxes field -> SimConfig field, for the sweep layer's equivalence-class
 # keys (the grid API speaks SimConfig names).
@@ -100,15 +104,23 @@ AXIS_TO_CONFIG = {"obj": "objective", "n_ep": "n_epochs"}
 
 FAMILIES = ("static", "reactive", "pc", "oracle")
 
-N_FREQS = int(PWR.FREQS_GHZ.shape[0])
+# the DEFAULT ladder length; a grid may sweep PowerConfig regimes with a
+# different (but grid-constant) n_freqs — static V/f indices are validated
+# against the actual ladder at dispatch
+N_FREQS = PWR.DEFAULT.n_freqs
 
 # Engine-imposed live axes: the scan unconditionally reads these for every
-# mechanism (execution model + logical-epoch mask), plus the objective for
-# anything that selects a frequency and the table EMA for anything the
-# engine maintains a PC table for. exec_axes may declare MORE liveness
-# (costing only dedup opportunity) but never less — an omitted live axis
-# would make the sweep layer broadcast wrong results.
-_REQUIRED_AXES = ("epoch_us", "sigma", "cap_per_ghz", "membw", "n_ep")
+# mechanism (execution model + logical-epoch mask + the power regime: the
+# V/f ladder, the energy accounting and the transition model read
+# ``power`` even for a static frequency — unlike objective/table_ema, a
+# swept power axis is live for EVERYONE and never collapses in the grid
+# dedup), plus the objective for anything that selects a frequency and
+# the table EMA for anything the engine maintains a PC table for.
+# exec_axes may declare MORE liveness (costing only dedup opportunity)
+# but never less — an omitted live axis would make the sweep layer
+# broadcast wrong results.
+_REQUIRED_AXES = ("epoch_us", "sigma", "cap_per_ghz", "membw", "n_ep",
+                  "power")
 
 
 @dataclass(frozen=True)
@@ -309,7 +321,7 @@ def traced_reactive_count() -> int:
 # Builtin paper mechanisms
 # ---------------------------------------------------------------------------
 
-_EXEC = ("epoch_us", "sigma", "cap_per_ghz", "membw", "n_ep")
+_EXEC = ("epoch_us", "sigma", "cap_per_ghz", "membw", "n_ep", "power")
 _CTRL = _EXEC + ("obj",)          # + objective: drives frequency selection
 _TABLE = _CTRL + ("table_ema",)   # + table EMA: drives the PC table
 

@@ -1,4 +1,4 @@
-"""GPU V/f-domain power model (paper §5 "Power Model").
+"""GPU V/f-domain power model (paper §5 "Power Model") — hardware as data.
 
 P_total = (P_dyn + P_leak) / eta_ivr
   P_dyn  = C_eff * V^2 * f * A      (A = activity factor from committed work)
@@ -7,56 +7,161 @@ P_total = (P_dyn + P_leak) / eta_ivr
 V(f) is linear over the evaluated 1.3-2.2 GHz range (paper §3.2 linearity).
 Transition overhead: energy ~ C*dV^2 plus dead time = transition latency
 (4ns @ 1us epochs ... 400ns @ 100us, paper §5).
+
+The hardware regime is *sweepable*, split exactly like ``SimConfig``:
+
+* :class:`PowerStatic` — the shape half: the ladder length ``n_freqs``
+  (it sizes every (.., n_freqs) array in the engine). Hashable jit key,
+  carried inside ``simulate.SimStatic``.
+* :class:`PowerAxes` — the traced half: V/f endpoints, capacitance,
+  leakage, IVR efficiency, transition energy and the transition-latency
+  model, as a pytree of f32 scalars. Carried inside ``simulate.SimAxes``,
+  so ``sweep.run_grid`` stacks whole IVR regimes along the grid axis like
+  any other traced axis — the paper's core premise (IVR latency shrinking
+  from the us to the ns range is what unlocks fine-grain DVFS) becomes a
+  one-line sensitivity sweep (``benchmarks.paper_figs.fig_ivr_regime``,
+  ``examples/ivr_regime.py``).
+* :class:`PowerConfig` — the user-facing frozen point: both halves as
+  Python scalars, with ``static_part()`` / ``axes()`` mirrors of
+  ``SimConfig``'s. Hashable, so the sweep layer's exec-axes dedup can key
+  equivalence classes on it directly. NOTE: every mechanism — including
+  the static frequencies — is live in the power axes (the ladder, the
+  energy accounting and the transition model all read them), so unlike
+  ``objective``/``table_ema`` a swept power axis never collapses.
+
+The transition-latency model replaces the old hardcoded
+``min(4e-3 * epoch_us, 0.4)`` slope: latency(us) =
+``min(lat_per_us * epoch_us, lat_cap_us)``. The defaults reproduce the
+paper's schedule (4ns @ 1us, 40ns @ 10us, 400ns cap from 100us);
+``lat_per_us`` 10x/100x higher models a slow (legacy, off-chip) IVR.
+
+Every model function takes the power parameters explicitly and accepts a
+``PowerConfig`` (Python floats — constants in a trace) or a ``PowerAxes``
+(traced scalars — the sweep hot path) interchangeably; the default is the
+paper's operating point, so pre-existing call sites are unchanged.
 """
 from __future__ import annotations
 
 from dataclasses import dataclass
+from typing import NamedTuple, Optional, Union
 
 import jax.numpy as jnp
 
-FREQS_GHZ = jnp.linspace(1.3, 2.2, 10)  # 10 V/f states, 100 MHz steps
-F_STATIC = 1.7  # normalization baseline (paper Figs 15/17)
+
+@dataclass(frozen=True)
+class PowerStatic:
+    """Shape half of the power model: the V/f ladder length. Part of the
+    engine's jit key (``SimStatic``) — it sizes the fork batch, the
+    prediction arrays and the frequency-selection cost matrix."""
+    n_freqs: int = 10
+
+    def __post_init__(self):
+        assert self.n_freqs >= 2, \
+            f"a V/f ladder needs >= 2 states, got {self.n_freqs}"
+
+
+class PowerAxes(NamedTuple):
+    """Traced half of the power model: one IVR/hardware regime as a pytree
+    of () f32 scalars, carried inside ``SimAxes`` so the sweep layer can
+    stack regimes along a grid axis and vmap over them."""
+    f_min: jnp.ndarray       # GHz, bottom of the V/f ladder
+    f_max: jnp.ndarray       # GHz, top of the V/f ladder
+    v_min: jnp.ndarray       # V at f_min
+    v_max: jnp.ndarray       # V at f_max
+    c_eff: jnp.ndarray       # effective capacitance per CU (arb. unit)
+    k_leak: jnp.ndarray      # leakage coefficient (P_leak = k_leak * V)
+    eta0: jnp.ndarray        # IVR efficiency at v_min
+    eta_slope: jnp.ndarray   # efficiency droop towards v_max
+    c_trans: jnp.ndarray     # transition energy per unit dV^2
+    lat_per_us: jnp.ndarray  # transition latency slope (us per epoch-us)
+    lat_cap_us: jnp.ndarray  # transition latency cap (us)
 
 
 @dataclass(frozen=True)
 class PowerConfig:
-    v_min: float = 0.70       # V at 1.3 GHz
-    v_max: float = 1.00       # V at 2.2 GHz
+    v_min: float = 0.70       # V at f_min
+    v_max: float = 1.00       # V at f_max
     f_min: float = 1.3
     f_max: float = 2.2
     c_eff: float = 1.0        # arbitrary capacitance unit per CU
     k_leak: float = 0.35      # leakage at V=1 equals ~20% of dyn at fmax
     eta0: float = 0.92        # IVR efficiency at v_min
     eta_slope: float = -0.05  # efficiency droop towards v_max
-    c_trans: float = 0.005     # transition energy per unit dV^2
+    c_trans: float = 0.005    # transition energy per unit dV^2
+    lat_per_us: float = 4e-3  # paper §5: 4ns dead time per 1us of epoch
+    lat_cap_us: float = 0.4   # ... capped at 400ns (the 100us point)
+    n_freqs: int = 10         # ladder length (static: it sets shapes)
+
+    def static_part(self) -> PowerStatic:
+        """The hashable shape half (nested in ``SimStatic``)."""
+        return PowerStatic(n_freqs=self.n_freqs)
+
+    def axes(self) -> PowerAxes:
+        """The traced regime point (nested in ``SimAxes``)."""
+        return PowerAxes(*(jnp.float32(getattr(self, f))
+                           for f in PowerAxes._fields))
 
 
-def v_of_f(f, pc: PowerConfig = PowerConfig()):
-    t = (f - pc.f_min) / (pc.f_max - pc.f_min)
-    return pc.v_min + t * (pc.v_max - pc.v_min)
+# the paper's operating point — the default of every model function below
+DEFAULT = PowerConfig()
+
+# a PowerConfig (Python floats) and a PowerAxes (traced scalars) expose the
+# same field names, so the model functions take either
+PowerParams = Union[PowerConfig, PowerAxes]
+
+FREQS_GHZ = jnp.linspace(1.3, 2.2, 10)  # default ladder: 10 states, 100 MHz
+F_STATIC = 1.7  # normalization baseline (paper Figs 15/17)
 
 
-def ivr_eta(v, pc: PowerConfig = PowerConfig()):
-    t = (v - pc.v_min) / (pc.v_max - pc.v_min)
-    return pc.eta0 + pc.eta_slope * t
+def freqs_ghz(pw: PowerParams, n_freqs: Optional[int] = None) -> jnp.ndarray:
+    """The V/f ladder: ``n_freqs`` states linearly spaced on
+    [``pw.f_min``, ``pw.f_max``].
+
+    ``n_freqs`` is the *static* ladder length (defaults to ``pw.n_freqs``
+    when ``pw`` is a PowerConfig; a traced ``PowerAxes`` carries no shape,
+    so pass ``SimStatic.power.n_freqs`` explicitly). Uses the same
+    endpoint-blend formula ``jnp.linspace`` lowers to — ``lo*(1-t) + hi*t``
+    with the exact endpoint concatenated — so inside a jitted trace the
+    default-regime ladder is bitwise-identical to :data:`FREQS_GHZ`."""
+    if n_freqs is None:
+        n_freqs = pw.n_freqs  # PowerAxes has no n_freqs: pass it explicitly
+    assert n_freqs >= 2, n_freqs
+    lo = jnp.asarray(pw.f_min, jnp.float32)
+    hi = jnp.asarray(pw.f_max, jnp.float32)
+    t = jnp.arange(n_freqs - 1, dtype=jnp.float32) / jnp.float32(n_freqs - 1)
+    return jnp.concatenate([lo * (1.0 - t) + hi * t, hi[None]])
 
 
-def power(f, activity, pc: PowerConfig = PowerConfig()):
+def v_of_f(f, pw: PowerParams = DEFAULT):
+    t = (f - pw.f_min) / (pw.f_max - pw.f_min)
+    return pw.v_min + t * (pw.v_max - pw.v_min)
+
+
+def ivr_eta(v, pw: PowerParams = DEFAULT):
+    t = (v - pw.v_min) / (pw.v_max - pw.v_min)
+    return pw.eta0 + pw.eta_slope * t
+
+
+def power(f, activity, pw: PowerParams = DEFAULT):
     """Power of one V/f domain at frequency f (GHz) with activity in [0,1]."""
-    v = v_of_f(f, pc)
-    p_dyn = pc.c_eff * v * v * f * jnp.clip(activity, 0.05, 1.0)
-    p_leak = pc.k_leak * v
-    return (p_dyn + p_leak) / ivr_eta(v, pc)
+    v = v_of_f(f, pw)
+    p_dyn = pw.c_eff * v * v * f * jnp.clip(activity, 0.05, 1.0)
+    p_leak = pw.k_leak * v
+    return (p_dyn + p_leak) / ivr_eta(v, pw)
 
 
-def transition_energy(f_old, f_new, pc: PowerConfig = PowerConfig()):
-    dv = v_of_f(f_new, pc) - v_of_f(f_old, pc)
-    return pc.c_trans * dv * dv
+def transition_energy(f_old, f_new, pw: PowerParams = DEFAULT):
+    dv = v_of_f(f_new, pw) - v_of_f(f_old, pw)
+    return pw.c_trans * dv * dv
 
 
-def transition_latency_us(epoch_us):
-    """Paper §5: 4ns @ 1us, 40ns @ 10us, 200/400ns @ 50/100us epochs.
+def transition_latency_us(epoch_us, pw: PowerParams = DEFAULT):
+    """V/f transition dead time: ``min(lat_per_us * epoch_us, lat_cap_us)``.
 
-    Accepts a Python float or a traced jnp scalar (the sweep layer traces
-    ``epoch_us`` as a grid axis)."""
-    return jnp.minimum(4e-3 * epoch_us, 0.4)
+    The default regime reproduces the paper's §5 schedule (4ns @ 1us,
+    40ns @ 10us, 200/400ns @ 50/100us epochs); the sweep path passes the
+    traced latency model from ``SimAxes.power`` instead, making the IVR
+    regime a grid axis. Accepts a Python float or a traced jnp scalar for
+    ``epoch_us``. Keep ``lat_cap_us`` below the shortest epoch you sweep:
+    a dead time exceeding the epoch has no physical reading."""
+    return jnp.minimum(pw.lat_per_us * epoch_us, pw.lat_cap_us)

@@ -39,8 +39,13 @@ Caching contract
   executables.
 * ``SimAxes`` (``sim.axes()``) — everything that can vary across a figure
   grid (``epoch_us``, ``sigma``, ``cap_per_ghz``, ``membw``, ``table_ema``,
-  the objective lowered to a weight vector, and the logical epoch count) as
-  a traced pytree of scalars.
+  the objective lowered to a weight vector, the logical epoch count, and
+  the ``power`` regime — a nested ``power.PowerAxes`` pytree carrying the
+  V/f ladder endpoints, leakage/efficiency/capacitance constants and the
+  IVR transition-latency model) as a traced pytree of scalars. The V/f
+  ladder itself is built in-trace from the traced endpoints and the static
+  ladder length (``PowerStatic.n_freqs``, nested in ``SimStatic``), so a
+  whole IVR-regime sensitivity sweep rides one executable.
 
 Mechanism dispatch contract
 ---------------------------
@@ -144,6 +149,7 @@ class SimStatic:
     cus_per_domain: int
     record_wf: bool
     use_pallas: bool              # fused Pallas PC-table predict/update path
+    power: PWR.PowerStatic        # ladder length (sets fork/predict shapes)
 
 
 class SimAxes(NamedTuple):
@@ -157,6 +163,7 @@ class SimAxes(NamedTuple):
     table_ema: jnp.ndarray    # () f32
     obj: jnp.ndarray          # (3,) f32 [pbar_weight, use_rate, cap_frac]
     n_ep: jnp.ndarray         # () i32 logical epochs (<= SimStatic.n_epochs)
+    power: PWR.PowerAxes      # nested traced IVR/hardware regime
 
 
 # the registry declares the axis vocabulary MechanismSpec.exec_axes is
@@ -202,6 +209,7 @@ class SimConfig:
     table_ema: float = 0.5
     record_wf: bool = False
     use_pallas: bool = False      # fused Pallas PC-table predict/update path
+    power: PWR.PowerConfig = PWR.DEFAULT  # V/f + IVR hardware regime
     seed: int = 0
 
     def static_part(self, n_epochs: Optional[int] = None) -> SimStatic:
@@ -213,7 +221,8 @@ class SimConfig:
             entries=self.entries, offset_blocks=self.offset_blocks,
             cus_per_table=self.cus_per_table,
             cus_per_domain=self.cus_per_domain,
-            record_wf=self.record_wf, use_pallas=self.use_pallas)
+            record_wf=self.record_wf, use_pallas=self.use_pallas,
+            power=self.power.static_part())
 
     def axes(self) -> SimAxes:
         """The traced grid-point operand (logical epochs = ``n_epochs``)."""
@@ -224,7 +233,8 @@ class SimConfig:
             membw=jnp.float32(self.membw),
             table_ema=jnp.float32(self.table_ema),
             obj=jnp.asarray(objective_weights(self.objective)),
-            n_ep=jnp.int32(self.n_epochs))
+            n_ep=jnp.int32(self.n_epochs),
+            power=self.power.axes())
 
 
 class Carry(NamedTuple):
@@ -374,8 +384,9 @@ def epoch_execute(prog: Program, pos: jnp.ndarray, f_cu: jnp.ndarray,
 
 
 def _predict_instr(i0_cu, sens_cu, st: SimStatic, ax: SimAxes):
-    """(CU,) linear state -> predicted I at all 10 freqs, capacity-clipped."""
-    F = PWR.FREQS_GHZ
+    """(CU,) linear state -> predicted I at every ladder frequency,
+    capacity-clipped. The ladder derives from the traced power regime."""
+    F = PWR.freqs_ghz(ax.power, st.power.n_freqs)
     I = (i0_cu[:, None] + sens_cu[:, None] * F[None, :]) * ax.epoch_us
     cap = ax.cap_per_ghz * F[None, :] * ax.epoch_us * st.n_wf
     return jnp.clip(I, 0.0, cap)
@@ -403,13 +414,13 @@ def _select_freq(I_pred_f: jnp.ndarray, st: SimStatic, ax: SimAxes,
     ``capf=0`` never penalizes), perf-cap objectives keep raw power and add
     a big penalty on frequencies below ``capf`` of the max-frequency rate.
 
-    I_pred_f: (CU, 10); pbar_dom: (n_dom,). Returns selected index (CU,).
+    I_pred_f: (CU, n_freqs); pbar_dom: (n_dom,). Returns selected index (CU,).
     """
-    F = PWR.FREQS_GHZ
+    F = PWR.freqs_ghz(ax.power, st.power.n_freqs)
     n_dom = st.n_cu // st.cus_per_domain
     I_dom = I_pred_f.reshape(n_dom, st.cus_per_domain, -1)
     act = I_pred_f / (ax.cap_per_ghz * F[None, :] * ax.epoch_us * st.n_wf)
-    p_cu = PWR.power(F[None, :], act)                       # (CU,10)
+    p_cu = PWR.power(F[None, :], act, ax.power)             # (CU,NF)
     P_dom = p_cu.reshape(n_dom, st.cus_per_domain, -1).sum(1)  # (dom,10)
     I_sum = jnp.maximum(I_dom.sum(1), 1e-3)                 # (dom,10)
     w_pbar, use_rate, capf = ax.obj[0], ax.obj[1], ax.obj[2]
@@ -420,9 +431,10 @@ def _select_freq(I_pred_f: jnp.ndarray, st: SimStatic, ax: SimAxes,
     return jnp.repeat(idx_dom, st.cus_per_domain)
 
 
-def _true_wf_linear(c_f: jnp.ndarray) -> Tuple[jnp.ndarray, jnp.ndarray]:
-    """c_f: (10, CU, WF) fork-committed -> exact per-WF (i0_rate, sens)."""
-    F = PWR.FREQS_GHZ
+def _true_wf_linear(c_f: jnp.ndarray, F: jnp.ndarray
+                    ) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """c_f: (NF, CU, WF) fork-committed at ladder ``F`` -> exact per-WF
+    (i0_rate, sens)."""
     sens = (c_f[-1] - c_f[0]) / (F[-1] - F[0])
     i0 = c_f[0] - sens * F[0]
     return i0, sens
@@ -450,6 +462,11 @@ def init_carry(p_blocks, st: SimStatic) -> Carry:
         wf_i0=jnp.full((st.n_cu, st.n_wf), 1.2),
         wf_sens=jnp.full((st.n_cu, st.n_wf), 0.8),
         table=PRED.table_init(n_tables, st.entries),
+        # F_STATIC of the DEFAULT ladder on purpose: the carry must not
+        # depend on the traced power axes (it is built once per SimStatic
+        # and donated); off-default regimes just see one initial
+        # transition per CU, like real hardware coming out of a fixed
+        # boot frequency
         f_prev=jnp.full((st.n_cu,), 1.7),
         # warm-start Pbar near the static-1.7 operating point
         e_acc=jnp.full((st.n_cu,), 0.42 * 20.0),
@@ -478,18 +495,22 @@ def _scan_sim(prog: Program, p_blocks, seed, st: SimStatic, ax: SimAxes,
     donated ``init_carry``); ``None`` builds it in-trace.
     """
     static_mech = isinstance(mech, (str, MechanismSpec))
-    F = PWR.FREQS_GHZ
+    NF = st.power.n_freqs
+    F = PWR.freqs_ghz(ax.power, NF)   # traced ladder (endpoints are axes)
     T = ax.epoch_us
     n_dom = st.n_cu // st.cus_per_domain
     n_tables = max(st.n_cu // st.cus_per_table, 1)
-    lat_us = PWR.transition_latency_us(ax.epoch_us)
+    lat_us = PWR.transition_latency_us(ax.epoch_us, ax.power)
     # hoisted scan-body constants
     tid = jnp.arange(st.n_cu) // st.cus_per_table
-    F_rows = jnp.broadcast_to(F[:, None], (F.shape[0], st.n_cu))  # (10,CU)
+    F_rows = jnp.broadcast_to(F[:, None], (NF, st.n_cu))  # (NF,CU)
 
     if static_mech:
         spec = MECH.resolve(mech)
         is_static_f = spec.family == "static"
+        assert spec.static_fidx is None or spec.static_fidx < NF, \
+            f"{spec.name}: static_fidx {spec.static_fidx} is off the " \
+            f"{NF}-state ladder of this power regime"
         is_custom = spec.predict is not None
         is_pc = spec.family == "pc" and not is_custom
         is_react = spec.family == "reactive" and not is_custom
@@ -585,12 +606,12 @@ def _scan_sim(prog: Program, p_blocks, seed, st: SimStatic, ax: SimAxes,
                 fidx = _select_freq(I_pred_f, st, ax, pbar)
                 f_all = jnp.concatenate([F_rows, F[fidx][None]], axis=0)
                 parts = _steady_parts(ctx, pos, f_all, p_blocks, ax)
-                c_f = parts.steady[:10]                     # (10,CU,WF)
-                sel_parts = _SteadyParts(*(x[10] for x in parts))
-                committed, ctr = _row_counters(sel_parts, pos, f_all[10],
+                c_f = parts.steady[:NF]                     # (NF,CU,WF)
+                sel_parts = _SteadyParts(*(x[NF] for x in parts))
+                committed, ctr = _row_counters(sel_parts, pos, f_all[NF],
                                                p_blocks)
-                f_sel = f_all[10]
-                I_f = c_f.sum(-1).T                         # (CU,10)
+                f_sel = f_all[NF]
+                I_f = c_f.sum(-1).T                         # (CU,NF)
 
         # --- transition overhead + counter views --------------------------
         trans = (f_sel != carry.f_prev)
@@ -605,8 +626,8 @@ def _scan_sim(prog: Program, p_blocks, seed, st: SimStatic, ax: SimAxes,
             err = jnp.zeros((st.n_cu,))
         # --- energy --------------------------------------------------------
         act = work_actual / (ax.cap_per_ghz * f_sel * T * st.n_wf)
-        energy = PWR.power(f_sel, act) * T \
-            + PWR.transition_energy(carry.f_prev, f_sel) * trans
+        energy = PWR.power(f_sel, act, ax.power) * T \
+            + PWR.transition_energy(carry.f_prev, f_sel, ax.power) * trans
         # --- estimation + state update -------------------------------------
         new = carry._replace(pos=pos + committed, f_prev=f_sel,
                              e_acc=carry.e_acc + energy,
@@ -640,7 +661,7 @@ def _scan_sim(prog: Program, p_blocks, seed, st: SimStatic, ax: SimAxes,
                 if not spec.fork_estimator:  # counter-driven (pcstall)
                     i0_wf, s_wf = EST.wf_stall_estimate(est_ctrs, f_sel)
                 else:  # exact per-WF linear model from the forks (accpc)
-                    i0_wf, s_wf = _true_wf_linear(c_f)
+                    i0_wf, s_wf = _true_wf_linear(c_f, F)
                 i0_wf, s_wf = i0_wf / T, s_wf / T
                 tbl = _table_update(carry, idx_lu, i0_wf, s_wf)
                 new = new._replace(table=tbl, wf_i0=i0_wf, wf_sens=s_wf)
@@ -661,7 +682,7 @@ def _scan_sim(prog: Program, p_blocks, seed, st: SimStatic, ax: SimAxes,
                               carry.react_sens)
             new = new._replace(react_i0=r_i0, react_sens=r_se)
             i0_est, s_est = EST.wf_stall_estimate(est_ctrs, f_sel)
-            i0_tr, s_tr = _true_wf_linear(c_f)
+            i0_tr, s_tr = _true_wf_linear(c_f, F)
             i0_wf = jnp.where(mech == _ID_CTR_PC, i0_est, i0_tr) / T
             s_wf = jnp.where(mech == _ID_CTR_PC, s_est, s_tr) / T
             tbl_u = _table_update(carry, idx_lu, i0_wf, s_wf)

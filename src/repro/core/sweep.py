@@ -35,6 +35,10 @@ engine. Run serially that is hundreds of scan traces; this layer instead
      Traced mechanisms inducing the same point partition share one
      dispatch — on a grid with no dead axes the whole fork family is ONE
      dispatch over the full operands, exactly as before the spec redesign.
+     The ``power`` axis (a swept IVR/hardware regime, ``PowerConfig``
+     values) is live for EVERY mechanism — the V/f ladder and the energy
+     accounting read it even for a static frequency — so power classes
+     never collapse; only the other dead axes around them do;
      ``DISPATCH_ROWS`` records the logical scan rows actually executed per
      family (the dedup savings show up here);
   5. builds the initial scan carry outside the executables
@@ -57,8 +61,9 @@ Execution-model / caching contract: see ``repro.core.simulate``'s module
 docstring. The only remaining cross-family numerics boundary is the
 specialized per-mechanism ``run_sim`` string-mech trace: its math is
 identical to the traced-id family at the jaxpr level, but XLA may fuse f32
-chains differently, and at epoch_us != 1 the resulting last-ulp differences
-can compound through the closed control loop over hundreds of epochs.
+chains differently, and the resulting last-ulp differences can compound
+through the closed control loop over hundreds of epochs (rarely enough to
+flip a frequency decision, after which traces genuinely separate).
 ``run_suite``/``run_grid`` results agree with ``run_sim`` to f32 exactness
 (tested to 1e-5 by ``tests/test_sweep.py``); comparisons *among* sweep-layer
 results need no tolerance at all (bitwise, ``tests/test_grid.py``).
@@ -79,6 +84,7 @@ from jax.experimental.shard_map import shard_map
 from jax.sharding import Mesh, PartitionSpec as P
 
 from repro.core import mechanisms as MECH
+from repro.core import power as PWR
 from repro.core import simulate as SIM
 from repro.core.mechanisms import MechanismSpec
 from repro.core.simulate import (MECHANISMS, SimAxes, SimConfig, SimStatic,
@@ -110,9 +116,11 @@ def _unpack_trace(arrs: Dict[str, jnp.ndarray], i: int, spec: MechanismSpec,
 
 # SimConfig fields that may vary across a grid without re-tracing (they map
 # onto SimAxes); n_epochs is the *logical* epoch count of a point — the
-# executable scans to the grid max and masks the tail.
+# executable scans to the grid max and masks the tail. ``power`` values
+# are whole ``power.PowerConfig`` regimes (traced except the ladder
+# length ``n_freqs``, which sets shapes and must be grid-constant).
 AXIS_FIELDS = ("epoch_us", "sigma", "cap_per_ghz", "membw", "table_ema",
-               "objective", "n_epochs")
+               "objective", "n_epochs", "power")
 
 # executable-compile counter, keyed by family ("grid_forks", "grid_oracle",
 # "grid_static17", ...): incremented at trace time only, so tests and
@@ -246,6 +254,9 @@ def _grid_points(axes_grid) -> Tuple[Tuple[str, ...], List[dict]]:
         for k in p:
             assert k in AXIS_FIELDS, \
                 f"{k!r} is not a traced grid axis (one of {AXIS_FIELDS})"
+            if k == "power":
+                assert isinstance(p[k], PWR.PowerConfig), \
+                    f"power axis values must be PowerConfig, got {p[k]!r}"
     return names, points
 
 
@@ -387,8 +398,10 @@ def run_grid(programs: Union[Dict[str, Program], Sequence[Program]],
     (bitwise — the other axes are dead inputs to its executable). A
     static frequency collapses objective and table_ema axes; a reactive
     (table-free) mechanism and oracle collapse table_ema axes; PC
-    mechanisms consume every axis. ``dedup=False`` forces one scan per
-    (mechanism x grid point), for A/B benchmarking.
+    mechanisms consume every axis; a swept ``power`` regime (the traced
+    IVR hardware point, ``PowerConfig`` values sharing one ladder length)
+    is live for everyone and never collapses. ``dedup=False`` forces one
+    scan per (mechanism x grid point), for A/B benchmarking.
 
     When logical epoch counts are strongly coupled to an axis (the paper's
     granularity sweeps pair 1 us with 6x the epochs of 100 us), scanning
@@ -445,7 +458,12 @@ def run_grid(programs: Union[Dict[str, Program], Sequence[Program]],
 
     sims = [dataclasses.replace(static_cfg, **p) for p in points]
     n_ep_max = max(s.n_epochs for s in sims)
-    st = static_cfg.static_part(n_epochs=n_ep_max)
+    # the ladder length is the one *static* field a power regime carries:
+    # it sets shapes, so a grid may sweep regimes but not n_freqs
+    pstats = {s.power.static_part() for s in sims}
+    assert len(pstats) == 1, \
+        f"power grid values must share one ladder length, got {pstats}"
+    st = sims[0].static_part(n_epochs=n_ep_max)
     # never shard wider than the flat axis: a 1-point manager report on an
     # 8-device host would otherwise pad one row to 8 identical scans
     n_dev = min(jax.local_device_count(), W * G)

@@ -14,7 +14,6 @@ import numpy as np
 
 from repro.configs.base import ModelConfig, ShapeConfig
 from repro.core import mechanisms as MECH
-from repro.core import power as PWR
 from repro.core.mechanisms import MechanismSpec
 from repro.core.simulate import SimConfig, ednp, prediction_accuracy
 from repro.core.sweep import run_grid
@@ -61,10 +60,12 @@ class DVFSManager:
         budget = 0.9 * base["work"].sum()
         E0, D0, M0 = ednp(base, budget, epoch_us)
         E, D, M = ednp(tr, budget, epoch_us)
-        # one bin per V/f state of the simulator's ladder: a ladder change
-        # must not silently truncate or mislabel freq_timeshare
+        # one bin per V/f state of THIS job's ladder (n_freqs, the static
+        # half of the power regime — not the module-default constant): a
+        # non-default ladder must not silently truncate or mislabel
+        # freq_timeshare
         h = np.bincount(tr["fidx"].ravel(),
-                        minlength=len(PWR.FREQS_GHZ)) / tr["fidx"].size
+                        minlength=self.sim.power.n_freqs) / tr["fidx"].size
         return {
             # a static mechanism never predicts (its trace carries err==0),
             # so accuracy is undefined — match suite_metrics' NaN

@@ -15,6 +15,12 @@ resident), then applies the collision-average + EMA blend in place. Grid:
 one program per table instance.
 
 ``interpret`` defaults to the backend: interpreted on CPU, compiled on TPU.
+
+Power-regime sweeps: the ``freqs`` ladder is an ordinary array operand
+(not a trace-time constant), so the engine passes the *traced* ladder it
+builds from the ``PowerAxes`` endpoints (``power.freqs_ghz``) and one
+compiled kernel serves every IVR regime of a grid; ``epoch_us`` and the
+capacity clip already ride in as the packed scalar operand the same way.
 """
 from __future__ import annotations
 

@@ -24,12 +24,29 @@ from repro.core.workloads import get_workload
 SIM = SimConfig(n_cu=16, n_wf=12, n_epochs=48)
 WORKLOADS = ("comd", "xsbench")
 # the engine-imposed live-axis floor for predicting (non-static) specs
-FULL_AXES = ("epoch_us", "sigma", "cap_per_ghz", "membw", "obj", "n_ep")
+# ("power" — the traced IVR regime — is live for every family)
+FULL_AXES = ("epoch_us", "sigma", "cap_per_ghz", "membw", "obj", "n_ep",
+             "power")
 
 
 @pytest.fixture(scope="module")
 def progs():
     return {w: get_workload(w) for w in WORKLOADS}
+
+
+def _assert_cross_dispatch(got, want, ctx):
+    """Compare results of two DIFFERENT dispatches (different flat-axis
+    lengths). On one device this is empirically bitwise; on a forced
+    multi-device mesh the flat axis shards to different per-device batch
+    shapes and XLA compiles per shape — since the power params became
+    traced operands (PR 5) those compilations can differ at the last ulp,
+    so the comparison degrades to 1e-5 there. Broadcast-within-one-
+    dispatch comparisons stay bitwise unconditionally."""
+    if jax.local_device_count() == 1:
+        np.testing.assert_array_equal(got, want, err_msg=ctx)
+    else:
+        np.testing.assert_allclose(got, want, rtol=1e-5, atol=1e-5,
+                                   err_msg=ctx)
 
 
 # ---------------------------------------------------------------------------
@@ -65,11 +82,15 @@ def test_builtin_families_and_flags():
     assert MECH.get("accpc").hit_telemetry
     assert not MECH.get("crisp").hit_telemetry
     # dedup contract: statics ignore objective+table_ema, reactive/oracle
-    # ignore table_ema, pc mechanisms consume everything
-    assert STATIC_EXEC_AXES == ("epoch_us", "sigma", "cap_per_ghz", "membw")
+    # ignore table_ema, pc mechanisms consume everything; the power regime
+    # is live for EVERY family (ladder + energy accounting read it)
+    assert STATIC_EXEC_AXES == ("epoch_us", "sigma", "cap_per_ghz", "membw",
+                                "power")
     assert "table_ema" not in MECH.get("crisp").exec_axes
     assert "table_ema" not in MECH.get("oracle").exec_axes
     assert "table_ema" in MECH.get("pcstall").exec_axes
+    for name in MECH.BUILTIN_NAMES:
+        assert "power" in MECH.get(name).exec_axes, name
 
 
 def test_exec_axes_validated_against_sim_axes():
@@ -82,9 +103,9 @@ def test_exec_axes_validated_against_sim_axes():
                       predict=lambda *a: None)
     assert a.exec_axes == FULL_AXES
     assert a.config_axes == ("epoch_us", "sigma", "cap_per_ghz", "membw",
-                             "objective", "n_epochs")
+                             "objective", "n_epochs", "power")
     assert a.dedup_axes == ("epoch_us", "sigma", "cap_per_ghz", "membw",
-                            "objective")
+                            "objective", "power")
 
 
 def test_exec_axes_enforce_engine_imposed_liveness():
@@ -97,7 +118,15 @@ def test_exec_axes_enforce_engine_imposed_liveness():
         MechanismSpec("bad", "pc", FULL_AXES, predict=lambda *a: None)
     with pytest.raises(ValueError, match="live axes.*obj"):
         MechanismSpec("bad", "reactive",
-                      ("epoch_us", "sigma", "cap_per_ghz", "membw", "n_ep"),
+                      ("epoch_us", "sigma", "cap_per_ghz", "membw", "n_ep",
+                       "power"),
+                      predict=lambda *a: None)
+    # the power regime is engine-imposed for every family: the ladder and
+    # the energy accounting read it even for a static frequency
+    with pytest.raises(ValueError, match="live axes.*power"):
+        MechanismSpec("bad", "reactive",
+                      ("epoch_us", "sigma", "cap_per_ghz", "membw", "obj",
+                       "n_ep"),
                       predict=lambda *a: None)
     with pytest.raises(ValueError, match="live axes"):
         MechanismSpec("bad", "static", ("epoch_us", "sigma"), static_fidx=0)
@@ -282,17 +311,17 @@ def test_reactive_dedup_on_table_ema_axis(progs):
                 for k in a:
                     np.testing.assert_array_equal(a[k], b[k],
                                                   err_msg=f"{ema}/{wl}/{m}/{k}")
-    # and every point reproduces its per-point run_suite bitwise — pc
-    # mechanisms genuinely differ across ema values and stay exact
+    # and every point reproduces its per-point run_suite (bitwise on one
+    # device; see _assert_cross_dispatch) — pc mechanisms genuinely
+    # differ across ema values and stay exact
     for ema in (0.3, 0.5, 0.7):
         suite = run_suite(progs, dataclasses.replace(sim, table_ema=ema),
                           ("crisp", "accreac", "pcstall", "oracle"))
         for wl in WORKLOADS:
             for m in ("crisp", "accreac", "pcstall", "oracle"):
                 for k, v in suite[wl][m].items():
-                    np.testing.assert_array_equal(
-                        res[(ema,)][wl][m][k], v,
-                        err_msg=f"{ema}/{wl}/{m}/{k}")
+                    _assert_cross_dispatch(res[(ema,)][wl][m][k], v,
+                                           f"{ema}/{wl}/{m}/{k}")
     # pcstall results must actually vary with the EMA (the axis is live)
     assert not np.array_equal(res[(0.3,)]["comd"]["pcstall"]["work"],
                               res[(0.7,)]["comd"]["pcstall"]["work"])
@@ -311,8 +340,9 @@ def test_dedup_flag_disables_collapsing(progs):
     for key in a:
         for wl in WORKLOADS:
             for k in a[key][wl]["crisp"]:
-                np.testing.assert_array_equal(a[key][wl]["crisp"][k],
-                                              b[key][wl]["crisp"][k])
+                _assert_cross_dispatch(a[key][wl]["crisp"][k],
+                                       b[key][wl]["crisp"][k],
+                                       f"{key}/{wl}/{k}")
 
 
 # ---------------------------------------------------------------------------
@@ -335,7 +365,7 @@ def _toy_spec(name="toy_blend", family="reactive", extra_axes=(), **kw):
     return MechanismSpec(
         name, family,
         exec_axes=("epoch_us", "sigma", "cap_per_ghz", "membw", "obj",
-                   "n_ep") + tuple(extra_axes),
+                   "n_ep", "power") + tuple(extra_axes),
         label="toy static+dynamic blend", predict=predict, update=update,
         **kw)
 

@@ -1,0 +1,283 @@
+"""Tests for the split power layer: the static/traced ``PowerStatic`` /
+``PowerAxes`` halves of ``PowerConfig``, closed-form model values at swept
+(non-default) hardware points, the traced V/f ladder, the IVR
+transition-latency model, power-regime grids through ``run_grid``
+(bitwise vs a per-point loop; ``DISPATCH_ROWS`` splitting on the power
+axis — statics are LIVE in power, unlike objective/table_ema), the
+default-regime bitwise contract against the captured reference, and the
+IVR-regime acceptance grid (>=3 latency models x >=2 epoch lengths in
+<=2 fork-family compiles)."""
+import dataclasses
+import json
+from pathlib import Path
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import power as PWR
+from repro.core import sweep as SW
+from repro.core.power import PowerAxes, PowerConfig, PowerStatic
+from repro.core.simulate import SimConfig, run_sim
+from repro.core.sweep import run_grid, run_suite
+from repro.core.workloads import get_workload
+
+WORKLOADS = ("comd", "xsbench")
+# a decidedly non-default hardware point (wider V range, leakier, lossier
+# IVR, slow off-chip-regulator latency model)
+SWEPT = PowerConfig(v_min=0.60, v_max=1.10, f_min=1.0, f_max=2.0,
+                    c_eff=1.3, k_leak=0.5, eta0=0.88, eta_slope=-0.08,
+                    c_trans=0.02, lat_per_us=4e-2, lat_cap_us=0.8)
+
+
+@pytest.fixture(scope="module")
+def progs():
+    return {w: get_workload(w) for w in WORKLOADS}
+
+
+# ---------------------------------------------------------------------------
+# The split + closed-form model values at swept parameters
+# ---------------------------------------------------------------------------
+
+
+def test_static_axes_split_roundtrip():
+    pw = SWEPT
+    assert pw.static_part() == PowerStatic(n_freqs=10)
+    ax = pw.axes()
+    assert isinstance(ax, PowerAxes)
+    for f in PowerAxes._fields:
+        v = getattr(ax, f)
+        assert v.dtype == jnp.float32 and v.shape == ()
+        assert float(v) == pytest.approx(getattr(pw, f)), f
+    # the ladder length is the static (shape) half and >= 2 by contract
+    assert PowerConfig(n_freqs=6).static_part().n_freqs == 6
+    with pytest.raises(AssertionError, match="ladder"):
+        PowerStatic(n_freqs=1)
+
+
+def test_v_of_f_closed_form_at_swept_params():
+    pw = SWEPT
+    assert float(PWR.v_of_f(pw.f_min, pw)) == pytest.approx(pw.v_min)
+    assert float(PWR.v_of_f(pw.f_max, pw)) == pytest.approx(pw.v_max)
+    fm = 0.5 * (pw.f_min + pw.f_max)
+    assert float(PWR.v_of_f(fm, pw)) == pytest.approx(
+        0.5 * (pw.v_min + pw.v_max))
+    # default args preserved: the paper's operating point
+    assert float(PWR.v_of_f(1.3)) == pytest.approx(0.70)
+    assert float(PWR.v_of_f(2.2)) == pytest.approx(1.00)
+
+
+def test_ivr_eta_and_power_closed_form_at_swept_params():
+    pw = SWEPT
+    assert float(PWR.ivr_eta(pw.v_min, pw)) == pytest.approx(pw.eta0)
+    assert float(PWR.ivr_eta(pw.v_max, pw)) == pytest.approx(
+        pw.eta0 + pw.eta_slope)
+    f, act = 1.5, 0.7
+    v = pw.v_min + ((f - pw.f_min) / (pw.f_max - pw.f_min)) \
+        * (pw.v_max - pw.v_min)
+    eta = pw.eta0 + pw.eta_slope * (v - pw.v_min) / (pw.v_max - pw.v_min)
+    want = (pw.c_eff * v * v * f * act + pw.k_leak * v) / eta
+    assert float(PWR.power(f, act, pw)) == pytest.approx(want, rel=1e-6)
+    # activity floor (idle leakage-ish clamp) still applies at swept params
+    assert float(PWR.power(f, 0.0, pw)) == pytest.approx(
+        float(PWR.power(f, 0.05, pw)))
+
+
+def test_transition_energy_closed_form_at_swept_params():
+    pw = SWEPT
+    dv = float(PWR.v_of_f(2.0, pw) - PWR.v_of_f(1.0, pw))
+    assert float(PWR.transition_energy(1.0, 2.0, pw)) == pytest.approx(
+        pw.c_trans * dv * dv, rel=1e-6)
+    assert float(PWR.transition_energy(1.5, 1.5, pw)) == 0.0
+
+
+def test_transition_latency_model():
+    # default regime reproduces the paper §5 schedule (back-compat wrapper)
+    assert float(PWR.transition_latency_us(1.0)) == pytest.approx(4e-3)
+    assert float(PWR.transition_latency_us(10.0)) == pytest.approx(4e-2)
+    assert float(PWR.transition_latency_us(100.0)) == pytest.approx(0.4)
+    # swept model: 10x slope, higher cap — a slow (legacy) IVR
+    pw = SWEPT
+    assert float(PWR.transition_latency_us(1.0, pw)) == pytest.approx(4e-2)
+    assert float(PWR.transition_latency_us(10.0, pw)) == pytest.approx(0.4)
+    assert float(PWR.transition_latency_us(100.0, pw)) == pytest.approx(0.8)
+    # traced PowerAxes work the same (the sweep hot path)
+    assert float(PWR.transition_latency_us(
+        jnp.float32(10.0), pw.axes())) == pytest.approx(0.4)
+
+
+def test_freqs_ghz_ladder():
+    # default regime, jitted (how every executable builds it): bitwise-
+    # identical to the module-constant ladder
+    jit_ladder = jax.jit(
+        lambda pax: PWR.freqs_ghz(pax, 10))(PowerConfig().axes())
+    np.testing.assert_array_equal(np.asarray(jit_ladder),
+                                  np.asarray(PWR.FREQS_GHZ))
+    # swept endpoints + length: exact endpoints, linear spacing
+    lad = np.asarray(PWR.freqs_ghz(dataclasses.replace(SWEPT, n_freqs=6)))
+    assert lad.shape == (6,)
+    assert lad[0] == pytest.approx(SWEPT.f_min)
+    assert lad[-1] == SWEPT.f_max  # exact endpoint by construction
+    np.testing.assert_allclose(np.diff(lad), 0.2, rtol=1e-5)
+
+
+# ---------------------------------------------------------------------------
+# Power-regime grids through run_grid
+# ---------------------------------------------------------------------------
+
+SIM = SimConfig(n_cu=16, n_wf=12, n_epochs=48)
+
+
+def test_power_grid_bitwise_equal_to_per_point_loop(progs):
+    """A power-regime grid reproduces the per-point run_suite loop bitwise
+    for every mechanism family (static / traced fork / oracle).
+
+    Bitwise on one device; on a forced multi-device mesh the two
+    dispatches shard their (different-length) flat axes to different
+    per-device batch shapes, XLA compiles per shape, and the traced power
+    operands can land at a different last ulp — so the comparison
+    degrades to 1e-5 there (same platform-conditional contract as the
+    captured-reference tests)."""
+    mechs = ("static17", "crisp", "pcstall", "oracle")
+    exact = jax.local_device_count() == 1
+    pws = [PowerConfig(), PowerConfig(lat_per_us=4e-2),
+           PowerConfig(k_leak=0.6, eta0=0.88)]
+    grid = run_grid(progs, SIM, {"power": pws}, mechs)
+    for pw in pws:
+        suite = run_suite(progs, dataclasses.replace(SIM, power=pw), mechs)
+        for wl in WORKLOADS:
+            for m in mechs:
+                for k, v in suite[wl][m].items():
+                    if exact:
+                        np.testing.assert_array_equal(
+                            grid[(pw,)][wl][m][k], v,
+                            err_msg=f"{pw.lat_per_us}/{wl}/{m}/{k}")
+                    else:
+                        np.testing.assert_allclose(
+                            grid[(pw,)][wl][m][k], v, rtol=1e-5, atol=1e-5,
+                            err_msg=f"{pw.lat_per_us}/{wl}/{m}/{k}")
+    # the regime axis is live: a slower IVR really changes the traces
+    a = grid[(pws[0],)]["comd"]["pcstall"]
+    b = grid[(pws[1],)]["comd"]["pcstall"]
+    assert not np.array_equal(a["work"], b["work"])
+
+
+def test_power_axis_splits_dedup_rows(progs):
+    """Statics are LIVE in the power axes (ladder + energy accounting) —
+    unlike objective/table_ema: on a (power x objective) grid static17
+    still collapses the objective but splits per power regime, while on a
+    (power x table_ema) grid reactive mechanisms split per regime but
+    keep collapsing the EMA."""
+    sim = dataclasses.replace(SIM, n_cu=12, n_wf=8, n_epochs=24)
+    pws = [PowerConfig(), PowerConfig(lat_per_us=4e-1)]
+    W = len(WORKLOADS)
+    SW.DISPATCH_ROWS.clear()
+    run_grid(progs, sim, {"power": pws, "objective": ["ed2p", "edp"]},
+             ("static17", "crisp", "pcstall"))
+    # static: 2 power classes (objective dead); fork mechs: all 4 points
+    assert SW.DISPATCH_ROWS["grid_static17"] == W * 2
+    assert SW.DISPATCH_ROWS["grid_forks"] == W * 4 * 2
+    SW.DISPATCH_ROWS.clear()
+    res = run_grid(progs, sim, {"power": pws, "table_ema": [0.3, 0.5]},
+                   ("crisp", "pcstall"))
+    # crisp: table_ema dead -> 2 power classes; pcstall: all 4 points
+    assert SW.DISPATCH_ROWS["grid_forks"] == W * 2 * 1 + W * 4 * 1
+    # the broadcast crisp class trace is bitwise across the dead EMA axis
+    for pw in pws:
+        a = res[(pw, 0.3)]["comd"]["crisp"]
+        b = res[(pw, 0.5)]["comd"]["crisp"]
+        for k in a:
+            np.testing.assert_array_equal(a[k], b[k], err_msg=k)
+    # ... but genuinely differs across power regimes
+    assert not np.array_equal(res[(pws[0], 0.3)]["comd"]["crisp"]["energy"],
+                              res[(pws[1], 0.3)]["comd"]["crisp"]["energy"])
+
+
+def test_power_grid_rejects_mixed_ladder_lengths(progs):
+    with pytest.raises(AssertionError, match="ladder length"):
+        run_grid(progs, SIM,
+                 {"power": [PowerConfig(), PowerConfig(n_freqs=6)]},
+                 ("pcstall",))
+    with pytest.raises(AssertionError, match="PowerConfig"):
+        run_grid(progs, SIM, {"power": [0.4]}, ("pcstall",))
+
+
+def test_default_point_bitwise_vs_captured_reference(progs):
+    """The default PowerAxes point reproduces the captured reference
+    traces bitwise (on the capturing platform; 1e-5 otherwise — jax
+    version/backend/device count recorded in the file)."""
+    path = Path(__file__).parent / "data" / "grid_reference.npz"
+    ref = np.load(path)
+    meta = json.loads(bytes(ref["__meta__"]))
+    exact = (meta["jax"] == jax.__version__
+             and meta["backend"] == jax.default_backend()
+             and meta["n_dev"] == jax.local_device_count())
+    # the capture's "suite" case: default SimConfig axes = default power
+    mechs = ("static17", "pcstall")
+    suite = run_suite(progs, SIM, mechs)
+    n = 0
+    for wl in WORKLOADS:
+        for m in mechs:
+            for ch, v in suite[wl][m].items():
+                k = f"suite|(1.0,)|{wl}|{m}|{ch}"
+                if exact:
+                    np.testing.assert_array_equal(np.asarray(v), ref[k],
+                                                  err_msg=k)
+                else:
+                    np.testing.assert_allclose(np.asarray(v), ref[k],
+                                               rtol=1e-5, atol=1e-5,
+                                               err_msg=k)
+                n += 1
+    assert n > 0
+
+
+# ---------------------------------------------------------------------------
+# Non-default ladders + the IVR-regime acceptance grid
+# ---------------------------------------------------------------------------
+
+
+def test_non_default_ladder_length(progs):
+    """A 6-state ladder flows end to end: fidx stays on the ladder, the
+    manager's freq_timeshare histogram sizes itself from the power static
+    (not the module constant), and off-ladder static indices fail fast."""
+    from repro.dvfs_runtime.manager import DVFSManager
+    # > 50 epochs: the manager's accuracy metric skips a 50-epoch warmup
+    sim = SimConfig(n_cu=8, n_wf=6, n_epochs=64,
+                    power=PowerConfig(n_freqs=6))
+    tr = run_sim(progs["comd"], sim, "pcstall")
+    assert tr["fidx"].max() < 6
+    mgr = DVFSManager(program=progs["comd"], sim=sim)
+    rep = mgr.report()
+    assert len(rep["freq_timeshare"]) == 6
+    assert abs(sum(rep["freq_timeshare"]) - 1.0) < 1e-2
+    # static22 pins ladder index 9 — off a 6-state ladder, must not wrap
+    with pytest.raises(AssertionError, match="off the"):
+        run_sim(progs["comd"], sim, "static22")
+
+
+def test_ivr_regime_grid_two_fork_family_compiles(progs):
+    """Acceptance: an IVR-regime sensitivity grid (3 latency models x 2
+    epoch lengths) runs through run_grid in <= 2 fork-family compiles,
+    and slower IVR regimes really degrade fine-grain DVFS (the paper's
+    premise: ns-scale transitions are what unlock 1us epochs)."""
+    sim = SimConfig(n_cu=6, n_wf=6, n_epochs=32)  # SimStatic unique here
+    regimes = [PowerConfig(),                      # 4ns @ 1us epochs
+               PowerConfig(lat_per_us=4e-2),       # 40ns @ 1us
+               PowerConfig(lat_per_us=4e-1)]       # 400ns @ 1us
+    grid_axes = {"power": regimes, "epoch_us": [1.0, 10.0]}
+    SW.TRACE_COUNTS.clear()
+    res = run_grid(progs, sim, grid_axes, ("crisp", "pcstall", "oracle"))
+    fork_compiles = sum(v for k, v in SW.TRACE_COUNTS.items()
+                        if k in ("grid_forks", "grid_oracle"))
+    assert 1 <= fork_compiles <= 2, dict(SW.TRACE_COUNTS)
+    assert len(res) == 6
+    # repeated sweeps hit the cache
+    before = dict(SW.TRACE_COUNTS)
+    run_grid(progs, sim, grid_axes, ("crisp", "pcstall", "oracle"))
+    assert dict(SW.TRACE_COUNTS) == before
+    # physics sanity at 1us epochs: transition dead time scales with the
+    # latency regime, so per-epoch useful work under a switching mechanism
+    # can only go down as the IVR slows
+    w = [res[(pw, 1.0)]["comd"]["pcstall"]["work"].sum() for pw in regimes]
+    assert w[0] > w[2]
