@@ -138,15 +138,27 @@ def _bench_sweep(quick: bool = False):
         suite_warm_s = min(_time_once(lambda: run_suite(progs, sim, mechs))
                            for _ in range(2))
 
-        # numerics: batched output vs the (jit-cached) serial engine
-        dev = 0.0
+        # numerics: batched output vs the (jit-cached) serial engine.
+        # max|dev| alone is hard to read: when the chaotic run_sim boundary
+        # flips one frequency decision (see sweep.py docstring) a single
+        # epoch's work diverges by O(work/epoch) and the per-epoch metric
+        # saturates. The relative counterpart is the run-aggregate
+        # work/energy deviation (worst workload x mechanism), which stays
+        # tiny even across decision flips — both ride in the record.
+        dev, rel_dev = 0.0, 0.0
         for w in wls:
             for m in mechs:
                 ser = run_sim(progs[w], sim, m)
                 for k in ser:
-                    dev = max(dev, float(np.max(np.abs(
-                        np.asarray(ser[k], np.float64)
-                        - np.asarray(suite[w][m][k], np.float64)))))
+                    a = np.asarray(ser[k], np.float64)
+                    b = np.asarray(suite[w][m][k], np.float64)
+                    dev = max(dev, float(np.max(np.abs(a - b))))
+                    if k in ("work", "energy"):
+                        sa = float(np.sum(a))
+                        if sa != 0.0:
+                            rel_dev = max(rel_dev,
+                                          abs(sa - float(np.sum(b)))
+                                          / abs(sa))
 
         rows += [
             (f"sweep_fig15_serial_seed_style_{label}", serial_s * 1e6,
@@ -155,7 +167,7 @@ def _bench_sweep(quick: bool = False):
              f"run_suite cold incl compile ({serial_s / suite_cold_s:.1f}x)"),
             (f"sweep_fig15_warm_{label}", suite_warm_s * 1e6,
              f"run_suite jit-cache hit ({serial_s / suite_warm_s:.1f}x); "
-             f"max|dev| vs serial {dev:.2g}"),
+             f"max|dev| vs serial {dev:.2g} (agg rel {rel_dev:.2g})"),
         ]
         record[label] = {
             "n_epochs": n_ep,
@@ -165,7 +177,65 @@ def _bench_sweep(quick: bool = False):
             "speedup_cold": serial_s / suite_cold_s,
             "speedup_warm": serial_s / suite_warm_s,
             "max_abs_dev_vs_serial": dev,
+            "agg_rel_dev_vs_serial": rel_dev,
         }
+    return rows, record
+
+
+def _bench_kernel_epoch(quick: bool = False):
+    """v2 fused epoch kernel vs the unfused jnp scan body, on the paper's
+    64-CU pcstall hot loop (the same workload _perf_micros tracks).
+
+    Timings are interleaved A/B/A/B per the bench-box protocol (2-core box
+    — never benchmark concurrently; alternation cancels slow drift); min of
+    each side is reported. The fused path runs the lean math (see
+    kernels.epoch_fused), so the record also reports its numerics vs the
+    jnp path: per-epoch max|dev| is O(work/epoch) — the argmin select flips
+    on near-ties and the closed loop is chaotic — while the aggregate
+    work/energy deviations stay O(1e-4) relative; both ride in the record.
+
+    Returns (rows, record)."""
+    import dataclasses
+
+    import numpy as np
+    from repro.core.simulate import SimConfig, run_sim
+    from repro.core.workloads import get_workload
+
+    n_ep = 100 if quick else 200
+    prog = get_workload("comd")
+    sim = SimConfig(n_epochs=n_ep)          # paper scale: 64 CU x 40 WF
+    sim_v2 = dataclasses.replace(sim, use_pallas="v2")
+
+    a = run_sim(prog, sim, "pcstall")       # warm both sides + numerics
+    b = run_sim(prog, sim_v2, "pcstall")
+    agg = {k: abs(float(np.sum(a[k])) - float(np.sum(b[k])))
+           / abs(float(np.sum(a[k]))) for k in ("work", "energy")}
+    dev = float(np.max(np.abs(np.asarray(a["work"], np.float64)
+                              - np.asarray(b["work"], np.float64))))
+
+    reps = 2 if quick else 4
+    jnp_t, fused_t = [], []
+    for _ in range(reps):
+        jnp_t.append(_time_once(lambda: run_sim(prog, sim, "pcstall")))
+        fused_t.append(_time_once(lambda: run_sim(prog, sim_v2, "pcstall")))
+    jnp_us = min(jnp_t) / n_ep * 1e6
+    fused_us = min(fused_t) / n_ep * 1e6
+
+    rows = [
+        ("kernel_epoch_jnp", jnp_us,
+         f"us/epoch unfused jnp scan body (comd 64cu pcstall x {n_ep}ep)"),
+        ("kernel_epoch_fused", fused_us,
+         f"us/epoch v2 fused epoch kernel ({jnp_us / fused_us:.2f}x); "
+         f"per-epoch max|dev| work {dev:.3g}; aggregate rel dev "
+         f"work {agg['work']:.1e} / energy {agg['energy']:.1e}"),
+    ]
+    record = {"workload": "comd", "mechanism": "pcstall", "n_epochs": n_ep,
+              "us_per_epoch_jnp": jnp_us,
+              "us_per_epoch_fused": fused_us,
+              "speedup": jnp_us / fused_us,
+              "max_abs_dev_work_per_epoch": dev,
+              "agg_rel_dev_work": agg["work"],
+              "agg_rel_dev_energy": agg["energy"]}
     return rows, record
 
 
@@ -486,6 +556,10 @@ def main() -> None:
     bench: dict = {"quick": args.quick}
     if not args.skip_micros:
         rows, bench["sim_epoch_pcstall_64cu"] = _perf_micros(args.quick)
+        for name, us, derived in rows:
+            print(f"{name},{us:.1f},{derived}")
+        sys.stdout.flush()
+        rows, bench["kernel_epoch"] = _bench_kernel_epoch(args.quick)
         for name, us, derived in rows:
             print(f"{name},{us:.1f},{derived}")
         sys.stdout.flush()

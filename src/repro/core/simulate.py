@@ -148,7 +148,10 @@ class SimStatic:
     cus_per_table: int
     cus_per_domain: int
     record_wf: bool
-    use_pallas: bool              # fused Pallas PC-table predict/update path
+    # Pallas kernel generation: False (pure jnp), "v1" (fused PC-table
+    # predict/update pair), "v2" (ONE fused fork--execute epoch kernel),
+    # True = auto (v2 when the mechanism/flags permit, else v1, else jnp)
+    use_pallas: Union[bool, str]
     power: PWR.PowerStatic        # ladder length (sets fork/predict shapes)
 
 
@@ -208,7 +211,8 @@ class SimConfig:
     membw: float = 160_000.0      # shared-path capacity, instr-traffic/us
     table_ema: float = 0.5
     record_wf: bool = False
-    use_pallas: bool = False      # fused Pallas PC-table predict/update path
+    # False | True | "v1" | "v2" — Pallas kernel generation (see SimStatic)
+    use_pallas: Union[bool, str] = False
     power: PWR.PowerConfig = PWR.DEFAULT  # V/f + IVR hardware regime
     seed: int = 0
 
@@ -519,10 +523,25 @@ def _scan_sim(prog: Program, p_blocks, seed, st: SimStatic, ax: SimAxes,
         spec = None
         is_static_f = is_custom = False
         is_pc = is_react = is_oracle = None  # resolved per-trace via mech id
-    use_pallas = (st.use_pallas and static_mech and not is_static_f
+    # Pallas generation select: "v2" is the fused fork--execute epoch
+    # kernel (kernels.epoch_fused) and covers exactly the builtin traced
+    # fork family — every mechanism whose epoch is the standard predict ->
+    # select -> 11-way execute -> estimate shape. record_wf emits per-WF
+    # fork channels the fused kernel does not materialize, so it stays on
+    # the unfused body. "v1" (and v2-ineligible fallback) is the PC-table
+    # predict/update kernel pair; True auto-selects v2 -> v1 -> jnp.
+    mode = st.use_pallas
+    assert mode in (False, True, "v1", "v2"), \
+        f"use_pallas must be False|True|'v1'|'v2', got {mode!r}"
+    use_pallas_v2 = (mode in (True, "v2") and static_mech
+                     and spec.is_traced and not st.record_wf)
+    use_pallas = (not use_pallas_v2 and mode in (True, "v1", "v2")
+                  and static_mech and not is_static_f
                   and not is_custom and st.n_cu % st.cus_per_table == 0)
     if use_pallas:
         from repro.kernels import pc_table as KPT
+    if use_pallas_v2:
+        from repro.kernels import epoch_fused as KEF
 
     def _pc_lookup(carry, idx_lu):
         """Table lookup + CU reduce + I(f) + capacity clip; jnp or Pallas."""
@@ -718,9 +737,51 @@ def _scan_sim(prog: Program, p_blocks, seed, st: SimStatic, ax: SimAxes,
         ys = jax.tree.map(lambda v: jnp.where(live, v, jnp.zeros_like(v)), ys)
         return new, ys
 
+    def body_v2(carry: Carry, ep_i):
+        # the whole epoch — context, predict, select, 11-way execute,
+        # counters, estimate, table update — is ONE fused kernel. The only
+        # piece computed outside is the sin-hash noise: the kernel's module
+        # docstring explains why eps must not be recomputed in a different
+        # fusion context (the unused context gathers are DCE'd).
+        eps = _epoch_context(prog, carry.pos, p_blocks, seed).eps
+        out = KEF.epoch_fused(
+            prog.i0_rate, prog.sens_rate, cum_t, carry.pos, F, eps,
+            carry.f_prev, carry.e_acc, carry.t_acc,
+            p_blocks=p_blocks, epoch_us=T, sigma=ax.sigma,
+            cap_per_ghz=ax.cap_per_ghz, membw=ax.membw, obj=ax.obj,
+            lat_us=lat_us, power=ax.power,
+            cus_per_domain=st.cus_per_domain,
+            table=carry.table, tid=tid, wf_i0=carry.wf_i0,
+            wf_sens=carry.wf_sens, table_ema=ax.table_ema,
+            offset_blocks=st.offset_blocks,
+            react_i0=carry.react_i0, react_sens=carry.react_sens,
+            family=spec.family, fork_estimator=spec.fork_estimator,
+            cu_model=spec.cu_model)
+        new = carry._replace(pos=out.pos, f_prev=out.f_sel,
+                             e_acc=out.e_acc, t_acc=out.t_acc[0])
+        if spec.family == "pc":
+            new = new._replace(table=out.table, wf_i0=out.wf_i0,
+                               wf_sens=out.wf_sens)
+        else:
+            new = new._replace(react_i0=out.react_i0,
+                               react_sens=out.react_sens)
+        ys = {"work": out.work, "energy": out.energy, "err": out.err,
+              "fidx": out.fidx.astype(jnp.int8),
+              "true_sens": out.true_sens}
+        if spec.family == "pc" and spec.hit_telemetry:
+            ys["hit_rate"] = out.hit_rate[0]
+        live = ep_i < ax.n_ep
+        return new, jax.tree.map(
+            lambda v: jnp.where(live, v, jnp.zeros_like(v)), ys)
+
+    if use_pallas_v2:
+        # three contiguous gather rows per window side (see epoch_fused);
+        # scan-invariant, hoisted out of the body
+        cum_t = jnp.transpose(prog.cum3)
     if carry0 is None:
         carry0 = init_carry(p_blocks, st)
-    _, ys = lax.scan(body, carry0, jnp.arange(st.n_epochs, dtype=jnp.int32))
+    _, ys = lax.scan(body_v2 if use_pallas_v2 else body, carry0,
+                     jnp.arange(st.n_epochs, dtype=jnp.int32))
     return ys
 
 

@@ -67,6 +67,13 @@ flip a frequency decision, after which traces genuinely separate).
 ``run_suite``/``run_grid`` results agree with ``run_sim`` to f32 exactness
 (tested to 1e-5 by ``tests/test_sweep.py``); comparisons *among* sweep-layer
 results need no tolerance at all (bitwise, ``tests/test_grid.py``).
+
+Pallas kernels (``SimConfig.use_pallas``) apply only to the specialized
+static-mechanism ``run_sim`` path — the grid dispatch families here always
+run the pure-jnp scan body (the traced-mechanism-id family multiplexes
+mechanism shapes a single fused kernel trace cannot), so enabling
+``use_pallas`` never perturbs suite/grid numerics or this layer's bitwise
+cross-path contract.
 """
 from __future__ import annotations
 

@@ -1,3 +1,51 @@
 # OPTIONAL layer. Add <name>.py (or .cu) + ops.py + ref.py ONLY
 # for compute hot-spots the paper itself optimizes with a custom
 # kernel. Leave this package empty if the paper has none.
+"""Pallas kernels for the DVFS engine hot path.
+
+Two generations ship:
+
+* v1 — ``pc_table``: the fused PC-table predict / update pair (one
+  ``pallas_call`` per table op, the rest of the epoch stays in XLA).
+* v2 — ``epoch_fused``: ONE kernel for the whole fork--execute epoch
+  (context gathers, predict, select, 11-way execute, counters, estimate,
+  table update) so PC-table state never round-trips through HBM within
+  an epoch. ``simulate._scan_sim`` auto-selects it behind the
+  ``SimConfig.use_pallas`` flag.
+
+``_resolve_interpret`` decides interpret vs compiled mode for every
+kernel in this package; the ``REPRO_PALLAS_INTERPRET`` environment
+variable overrides it without code edits (CI's kernels lane and
+real-hardware A/B runs both use it).
+"""
+from __future__ import annotations
+
+import os
+from typing import Optional
+
+import jax
+
+# REPRO_PALLAS_INTERPRET truth table (checked per call, so tests can
+# monkeypatch os.environ): "1"/"true"/"yes" force interpret mode
+# everywhere; "0"/"false"/"no" force the compiled path (which raises on
+# CPU — JAX only lowers Pallas through Mosaic on TPU, so forcing
+# compiled mode is a real-hardware knob); unset/"" defer to the
+# explicit ``interpret=`` argument or, when that is None too, to the
+# backend default (compiled on TPU, interpreted everywhere else).
+_ENV_INTERPRET = "REPRO_PALLAS_INTERPRET"
+_TRUE = ("1", "true", "yes", "on")
+_FALSE = ("0", "false", "no", "off")
+
+
+def _resolve_interpret(interpret: Optional[bool]) -> bool:
+    env = os.environ.get(_ENV_INTERPRET, "").strip().lower()
+    if env in _TRUE:
+        return True
+    if env in _FALSE:
+        return False
+    if env:
+        raise ValueError(
+            f"{_ENV_INTERPRET}={env!r}: expected one of {_TRUE + _FALSE}")
+    if interpret is None:
+        return jax.default_backend() != "tpu"
+    return interpret

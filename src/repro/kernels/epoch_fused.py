@@ -1,0 +1,458 @@
+"""Pallas v2: ONE fused kernel for the whole fork--execute epoch.
+
+v1 (``pc_table``) fused only the PC-table predict and update; everything
+between them — the epoch context gathers, the objective-weighted frequency
+select, the 11-way batched execute over the (mech, CU, WF) steady batch and
+the per-row counter reduces — stayed in the XLA scan body and round-tripped
+every intermediate through HBM. This kernel collapses the entire epoch:
+
+    context gathers -> predict (PC table or reactive state) -> select
+    -> 11-way execute (10 uniform fork rows + the selected mixed row)
+    -> barrier/contention counters (selected row only) -> estimate
+    -> fused table / reactive-state update
+
+so the PC table is read and written inside one kernel invocation and no
+(NF+1, CU, WF) intermediate ever leaves the kernel within an epoch.
+
+Structure: the epoch body is a pure array function (``_epoch_math``) and
+the Pallas kernel (``_epoch_kernel``) is a thin ref shim around it. The
+execution engine is chosen by ``_resolve_interpret``:
+
+* compiled (TPU): ``pl.pallas_call`` lowers ``_epoch_kernel`` through
+  Mosaic — the actual fused-kernel target.
+* interpret (CPU/GPU): ``_epoch_math`` is evaluated directly as XLA ops.
+  ``pallas_call(interpret=True)`` would trace the kernel to the *same*
+  ops but wraps every operand in the ref-simulation machinery, which
+  costs a measured ~15-20% of the epoch on the CPU bench box for zero
+  semantic difference; direct evaluation IS interpret mode minus that
+  wrapper. ``via_pallas=True`` forces the real ``pallas_call`` interpret
+  path (tests assert the two agree; CI's kernels lane runs both).
+
+Layout and math notes (why the fused body is faster than the unfused
+scan body even as plain XLA ops):
+
+* the packed ``(2P+1, 3)`` cumulative table is consumed as three
+  contiguous 1-D rows (``cum_t = cum3.T``): the window gathers become
+  three dense 1-D gathers instead of one strided 12-byte gather;
+* the body has two math modes (the static ``lean`` flag).
+  ``lean=False`` orders every op exactly as the unfused reference
+  (``_steady_parts`` / ``_row_counters`` / ``_select_freq``) — on the
+  CPU backend it is empirically *bitwise* equal to the reference scan
+  (a fusion-context accident, not a contract; the reference itself is
+  not bitwise reproducible across XLA fusion contexts, see ROADMAP
+  "numerics CAUTION"). ``lean=True`` — the engine default — applies
+  three value-reassociating rewrites to the (NF+1, CU, WF) execute
+  batch: the epoch scale and noise factor fold into one multiply
+  (``(dci + dcs f) * (T (1+sigma eps)/nb)``), the intra-CU prefix sum
+  becomes a tril matmul (GEMM instead of XLA's serialised cumsum), and
+  the memory-scale blend reassociates to ``alloc - am (1-scale)``.
+  Measured on the 2-core bench box these take the 64-CU epoch from
+  ~1.23x to ~1.9x over the jnp scan body. The reassociations perturb
+  the float rounding, the argmin select flips on near-ties and the
+  closed loop is chaotic from there — per-epoch traces diverge but
+  aggregate work/energy deviations stay O(1e-4) relative over a
+  200-epoch run (the ``kernel_epoch`` bench record reports both). The
+  fused path is therefore *held* to aggregate tolerances and the
+  default engine path stays jnp.
+* the ``(blk, loop, wf, cu, seed)`` sin-hash noise rides IN as an operand
+  (computed by the same ``_epoch_context`` code both paths share):
+  ``frac(sin(x) * 43758)`` amplifies one ulp of a differently-fused sin
+  into O(1) noise, so it is the one context piece the kernel must not
+  recompute.
+
+Traced-operand contract: ``epoch_us``, ``sigma``, ``cap_per_ghz``,
+``membw``, ``table_ema``, the lowered objective vector, the transition
+latency, the logical block count and the whole ``PowerAxes`` regime enter
+as packed array operands — never as trace-time constants — so one
+compiled kernel serves every grid point of a sweep (the no-retrace
+contract of ``core.sweep``).
+
+Table maps: the CU->table assignment ``tid`` is an ordinary int operand;
+non-contiguous and uneven maps (e.g. ``tid=[0, 2, 1, 0]``) are supported
+— out-of-range table ids clamp on lookup and drop on update, matching
+``predictors.table_update``'s scatter semantics. (v1's
+``pc_table_update`` still requires the contiguous grouped layout.)
+
+The in-kernel table update has two formulations, switched on the
+resolved execution mode: the interpret/direct path reuses
+``predictors.table_update``'s packed scatter-add (bit-compatible with
+the unfused reference); the compiled path lowers a scatter-free one-hot
+masked matmul instead (Mosaic has no scatter). The compiled path is
+untested until a TPU/GPU runner is attached — CI exercises interpret
+mode only (see the kernels lane).
+"""
+from __future__ import annotations
+
+import functools
+from typing import NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from repro.core import estimators as EST
+from repro.core import power as PWR
+from repro.core import predictors as PRED
+from repro.kernels import _resolve_interpret
+
+# number of packed f32 sweep scalars (see _pack_scal)
+_N_SCAL = 9
+
+
+class EpochOut(NamedTuple):
+    """One epoch of engine state advance + telemetry, as returned by
+    :func:`epoch_fused`. Reactive-family calls leave the table fields
+    untouched (``None``); PC-family calls leave the reactive state
+    untouched."""
+    pos: jnp.ndarray                    # (CU,WF) advanced wave positions
+    table: Optional[PRED.PCTable]       # updated PC table (pc family)
+    wf_i0: Optional[jnp.ndarray]        # (CU,WF) per-WF estimates (pc)
+    wf_sens: Optional[jnp.ndarray]
+    react_i0: Optional[jnp.ndarray]     # (CU,) CU estimates (reactive)
+    react_sens: Optional[jnp.ndarray]
+    f_sel: jnp.ndarray                  # (CU,) executed GHz
+    e_acc: jnp.ndarray                  # (CU,) accumulated energy
+    t_acc: jnp.ndarray                  # (1,) accumulated time
+    work: jnp.ndarray                   # (CU,) committed work
+    energy: jnp.ndarray                 # (CU,) epoch energy
+    err: jnp.ndarray                    # (CU,) |pred - actual| / actual
+    fidx: jnp.ndarray                   # (CU,) int32 ladder index
+    true_sens: jnp.ndarray              # (CU,) fork-exact CU sensitivity
+    hit_rate: Optional[jnp.ndarray]     # (1,) table hit fraction (pc)
+
+
+def _epoch_math(ins, *, NF, CU, WF, E, T_, ND, CPD, IPB, OFFB,
+                family, fork_estimator, cu_model, mosaic, lean):
+    """The fused epoch body: pure arrays in, tuple of arrays out, in the
+    operand/output order of :func:`epoch_fused`. Runs as the Pallas kernel
+    body (via the ref shim below) or evaluated directly (the interpret
+    engine).
+
+    ``lean=False`` orders every op exactly as the unfused reference
+    (``simulate._epoch_context``/``_steady_parts``/``_row_counters``/
+    ``_select_freq`` and the ``_scan_sim`` body). ``lean=True`` (the
+    engine default) applies three value-reassociating rewrites to the
+    (NF+1, CU, WF) execute batch — see the module docstring."""
+    if family == "pc":
+        (i0r, sr, cum_t, pb, pos, ti0, tse, tcnt, wfi, wfs, fprev, eacc,
+         tacc, F, tid, eps, scal, pw_vec) = ins
+    else:
+        (i0r, sr, cum_t, pb, pos, ri0, rse, fprev, eacc, tacc, F, eps,
+         scal, pw_vec) = ins
+
+    pw = PWR.PowerAxes(*[pw_vec[i]
+                         for i in range(len(PWR.PowerAxes._fields))])
+    T = scal[0]
+    sigma = scal[1]
+    cap = scal[2]
+    membw = scal[3]
+    ema = scal[4]
+    w_pbar, use_rate, capf = scal[5], scal[6], scal[7]
+    lat = scal[8]
+    P = pb[0]                           # logical block count (traced)
+
+    # ---- context: shared gathers (op order == _epoch_context) ------------
+    blk = (pos.astype(jnp.int32) // IPB) % P
+    i0_l = i0r[blk]
+    s_l = sr[blk]
+    c_i0 = cum_t[0]                     # (2P+1,) rows of cum3.T
+    c_se = cum_t[1]
+    c_mf = cum_t[2]
+    lo_i0 = c_i0[blk]
+    lo_se = c_se[blk]
+    lo_mf = c_mf[blk]
+
+    # ---- predict I(f) from carry state (== _pc_lookup / _predict_instr) --
+    capr = cap * F[None, :] * T * WF
+    hit_rate = None
+    if family == "pc":
+        idx_lu = (blk // OFFB) % E      # == predictors.table_index
+        t_i0 = ti0[tid[:, None], idx_lu]
+        t_se = tse[tid[:, None], idx_lu]
+        hit = tcnt[tid[:, None], idx_lu] > 0
+        i0_cu = jnp.where(hit, t_i0, wfi).sum(-1)
+        s_cu = jnp.where(hit, t_se, wfs).sum(-1)
+        hit_rate = hit.astype(jnp.float32).mean().reshape(1)
+    else:
+        i0_cu = ri0
+        s_cu = rse
+    I_pred = (i0_cu[:, None] + s_cu[:, None] * F[None, :]) * T
+    I_pred = jnp.clip(I_pred, 0.0, capr)
+
+    # ---- per-domain frequency select (op order == _select_freq) ----------
+    pbar = (eacc / jnp.maximum(tacc[0], 1e-3)).reshape(ND, CPD).sum(1)
+    I_dom = I_pred.reshape(ND, CPD, NF)
+    act = I_pred / (cap * F[None, :] * T * WF)
+    p_cu = PWR.power(F[None, :], act, pw)
+    P_dom = p_cu.reshape(ND, CPD, NF).sum(1)
+    I_sum = jnp.maximum(I_dom.sum(1), 1e-3)
+    denom = jnp.where(use_rate > 0.0, I_sum, 1.0)
+    infeasible = I_sum < capf * I_sum[:, -1:]
+    cost = (P_dom + w_pbar * pbar[:, None]) / denom + 1e9 * infeasible
+    idx_dom = jnp.argmin(cost, axis=-1)
+    fidx = jnp.repeat(idx_dom, CPD)
+    f_sel = F[fidx]
+
+    # ---- 11-way batched execute (op order == _steady_parts) --------------
+    F_rows = jnp.broadcast_to(F[:, None], (NF, CU))
+    f_all = jnp.concatenate([F_rows, f_sel[None]], axis=0)
+    f_b = f_all[..., :, None]
+    est_instr = (i0_l + s_l * f_b) * T
+    nblk = jnp.clip((est_instr / IPB).astype(jnp.int32) + 1, 1, P)
+    gi = blk + nblk
+    nb = nblk.astype(jnp.float32)
+    dci = c_i0[gi] - lo_i0              # window deltas (un-normalised)
+    dcs = c_se[gi] - lo_se
+    i0w = dci / nb
+    sw = dcs / nb
+    mfw = (c_mf[gi] - lo_mf) / nb
+    if lean:
+        # fold the epoch scale and noise factor into ONE multiply over
+        # the big batch: (dci + dcs f) * (T (1 + sigma eps) / nb)
+        demand = (dci + dcs * f_b) * ((T * (1.0 + sigma * eps)) / nb)
+    else:
+        demand = (i0w + sw * f_b) * T
+        demand = demand * (1.0 + sigma * eps)
+    C = cap * f_all * T
+    if lean:
+        # prefix sum as a tril matmul — XLA CPU lowers the dot through
+        # the GEMM path, ~8x faster than its serialised cumsum here
+        L = jnp.tril(jnp.ones((WF, WF), jnp.float32))
+        before = jax.lax.dot_general(
+            demand, L, (((2,), (1,)), ((), ()))) - demand
+    else:
+        before = jnp.cumsum(demand, axis=-1) - demand
+    alloc = jnp.clip(C[..., :, None] - before, 0.0, demand)
+    am = alloc * mfw
+    traffic = am.sum(axis=(-2, -1))
+    scale = jnp.minimum(1.0, membw * T / jnp.maximum(traffic, 1e-6))
+    if lean:
+        # alloc (1 - mfw (1-scale)) == alloc - am (1-scale), reusing am
+        steady = alloc - am * (1.0 - scale[..., None, None])
+    else:
+        steady = alloc * (1.0 - mfw * (1.0 - scale[..., None, None]))
+    c_f = steady[:NF]                   # (NF,CU,WF) fork rows
+    I_f = c_f.sum(-1).T                 # (CU,NF)
+    st_sel = steady[NF]                 # the executed mixed row
+
+    # ---- selected-row counters (op order == _row_counters) ---------------
+    q = alloc[NF] / jnp.maximum(demand[NF], 1e-6)
+    plen = (P * IPB).astype(jnp.float32)
+    tentative = pos + st_sel
+    group_min = tentative.min(axis=-1)
+    boundary = (jnp.floor(group_min / plen) + 1.0) * plen
+    committed = jnp.minimum(st_sel,
+                            jnp.maximum(boundary[:, None] - pos, 0.0))
+    core_frac = sw[NF] * f_sel[:, None] \
+        / jnp.maximum(i0w[NF] + sw[NF] * f_sel[:, None], 1e-6)
+
+    # ---- transition overhead, telemetry, energy (== _scan_sim body) ------
+    trans = (f_sel != fprev)
+    committed = committed * (1.0 - lat / T * trans[:, None])
+    I_actual = st_sel.sum(-1)
+    work = committed.sum(-1)
+    I_at_sel = jnp.take_along_axis(I_pred, fidx[:, None], 1)[:, 0]
+    err = jnp.abs(I_at_sel - I_actual) / jnp.maximum(I_actual, 1e-3)
+    act_w = work / (cap * f_sel * T * WF)
+    energy = PWR.power(f_sel, act_w, pw) * T \
+        + PWR.transition_energy(fprev, f_sel, pw) * trans
+
+    # ---- estimate + state update -----------------------------------------
+    ctrs = {"committed": st_sel, "steady": st_sel, "core_frac": core_frac,
+            "issue_q": q, "mem_frac": mfw[NF]}
+    tsens = (I_f[:, -1] - I_f[:, 0]) / ((F[-1] - F[0]) * T)
+    if family == "pc":
+        if fork_estimator:              # accpc: exact per-WF linear model
+            s_wf = (c_f[-1] - c_f[0]) / (F[-1] - F[0])
+            i0_wf = c_f[0] - s_wf * F[0]
+        else:                           # pcstall: counter-driven
+            i0_wf, s_wf = EST.wf_stall_estimate(ctrs, f_sel)
+        i0_wf, s_wf = i0_wf / T, s_wf / T
+        tbl0 = PRED.PCTable(ti0, tse, tcnt)
+        if mosaic:
+            # scatter-free update: one-hot slot mask contracted per CU,
+            # then a (T, CU) table-assignment matmul — arbitrary tid maps,
+            # out-of-range ids contribute nowhere (scatter-drop semantics)
+            slots = jax.lax.broadcasted_iota(jnp.int32, (CU, WF, E), 2)
+            oh = (idx_lu[:, :, None] == slots).astype(jnp.float32)
+            vals = jnp.stack([i0_wf, s_wf, jnp.ones_like(i0_wf)], axis=-1)
+            scat = jax.lax.dot_general(                       # (CU,E,3)
+                oh, vals, (((1,), (1,)), ((0,), (0,))))
+            t1h = (tid[None, :] ==
+                   jax.lax.broadcasted_iota(jnp.int32, (T_, CU), 0)
+                   ).astype(jnp.float32)
+            agg = jax.lax.dot_general(                        # (T_,E*3)
+                t1h, scat.reshape(CU, E * 3),
+                (((1,), (0,)), ((), ()))).reshape(T_, E, 3)
+            isum, ssum, cnt = agg[..., 0], agg[..., 1], agg[..., 2]
+            snew = jnp.where(cnt > 0, ssum / jnp.maximum(cnt, 1), 0.0)
+            inew = jnp.where(cnt > 0, isum / jnp.maximum(cnt, 1), 0.0)
+            fresh = (tbl0.count == 0) & (cnt > 0)
+            blend = jnp.where(fresh, 1.0, jnp.where(cnt > 0, ema, 0.0))
+            tbl = PRED.PCTable(tbl0.i0 * (1 - blend) + inew * blend,
+                               tbl0.sens * (1 - blend) + snew * blend,
+                               tbl0.count + cnt)
+        else:
+            # interpret/direct mode is XLA anyway: reuse the reference
+            # packed scatter-add verbatim (bit-compatible collision sums)
+            tbl = PRED.table_update(tbl0, tid, idx_lu, i0_wf, s_wf, ema)
+        state = (tbl.i0, tbl.sens, tbl.count, i0_wf, s_wf)
+    else:
+        if fork_estimator:              # accreac: exact linear from forks
+            s_est = (I_f[:, -1] - I_f[:, 0]) / ((F[-1] - F[0]) * T)
+            i0_est = I_f[:, 0] / T - s_est * F[0]
+        else:                           # counter model (stall/lead/...)
+            i0_c, s_c = EST.cu_estimate(ctrs, f_sel, cu_model)
+            i0_est, s_est = i0_c / T, s_c / T
+        state = (i0_est, s_est)
+
+    outs = (pos + committed,) + state + (
+        f_sel, eacc + energy, (tacc + T).reshape(1), work, energy, err,
+        fidx.astype(jnp.int32), tsens)
+    if family == "pc":
+        outs = outs + (hit_rate,)
+    return outs
+
+
+def _epoch_kernel(*refs, n_in, **statics):
+    """Ref shim: read operands, run :func:`_epoch_math`, write outputs."""
+    ins = tuple(r[...] for r in refs[:n_in])
+    for o_ref, o in zip(refs[n_in:], _epoch_math(ins, **statics)):
+        o_ref[...] = o
+
+
+def _pack_scal(epoch_us, sigma, cap_per_ghz, membw, table_ema, obj, lat_us
+               ) -> jnp.ndarray:
+    """Pack the traced sweep scalars into one (9,) f32 operand: [epoch_us,
+    sigma, cap_per_ghz, membw, table_ema, obj0, obj1, obj2, lat_us]."""
+    obj = jnp.asarray(obj, jnp.float32)
+    return jnp.concatenate([
+        jnp.stack([jnp.asarray(x, jnp.float32) for x in
+                   (epoch_us, sigma, cap_per_ghz, membw, table_ema)]),
+        obj.reshape(3),
+        jnp.asarray(lat_us, jnp.float32).reshape(1)])
+
+
+def epoch_fused(i0_rate: jax.Array, sens_rate: jax.Array, cum_t: jax.Array,
+                pos: jax.Array, freqs: jax.Array, eps: jax.Array,
+                f_prev: jax.Array, e_acc: jax.Array, t_acc: jax.Array, *,
+                p_blocks, epoch_us, sigma, cap_per_ghz, membw, obj, lat_us,
+                power, cus_per_domain: int = 1,
+                # pc family state
+                table: Optional[PRED.PCTable] = None,
+                tid: Optional[jax.Array] = None,
+                wf_i0: Optional[jax.Array] = None,
+                wf_sens: Optional[jax.Array] = None,
+                table_ema=0.5, offset_blocks: int = 4,
+                # reactive family state
+                react_i0: Optional[jax.Array] = None,
+                react_sens: Optional[jax.Array] = None,
+                # mechanism shape
+                family: str = "pc", fork_estimator: bool = False,
+                cu_model: Optional[str] = None,
+                instr_per_block: int = 4, lean: bool = True,
+                interpret: Optional[bool] = None,
+                via_pallas: Optional[bool] = None) -> EpochOut:
+    """Run one fused fork--execute epoch.
+
+    ``i0_rate``/``sens_rate`` are the (padded) per-block program rates;
+    ``cum_t`` is the cumulative table TRANSPOSED to ``(3, 2P+1)`` (three
+    contiguous gather rows — build it once per program with
+    ``jnp.transpose(prog.cum3)``). ``eps`` is the (CU,WF) epoch noise from
+    ``simulate._epoch_context`` (see module docstring for why it rides in).
+    Every keyword in the first group may be a traced scalar/vector (sweep
+    axes); ``power`` is a ``PowerAxes``/``PowerConfig``; the second/third
+    groups select the mechanism family exactly like the unfused body:
+    ``family='pc'`` needs ``table/tid/wf_i0/wf_sens``, ``family='reactive'``
+    needs ``react_i0/react_sens`` (+ ``cu_model`` unless
+    ``fork_estimator``).
+
+    ``lean`` selects the math mode: True (default) runs the reassociated
+    fast body, False pins the exact reference op order (bitwise-in-engine
+    on CPU; use for debugging a divergence) — see the module docstring.
+
+    Engine: compiled mode lowers the kernel through ``pl.pallas_call``;
+    interpret mode evaluates the kernel body directly as XLA ops unless
+    ``via_pallas=True`` forces the (slower, semantically identical)
+    ``pallas_call(interpret=True)`` ref simulation — see module docstring.
+    """
+    CU, WF = pos.shape
+    NF = freqs.shape[0]
+    assert family in ("pc", "reactive"), family
+    assert CU % cus_per_domain == 0, (CU, cus_per_domain)
+    ND = CU // cus_per_domain
+    interp = _resolve_interpret(interpret)
+
+    scal = _pack_scal(epoch_us, sigma, cap_per_ghz, membw, table_ema, obj,
+                      lat_us)
+    pw_vec = jnp.stack([jnp.asarray(getattr(power, f), jnp.float32)
+                        for f in PWR.PowerAxes._fields])
+    pb = jnp.asarray(p_blocks, jnp.int32).reshape(1)
+    f32 = jnp.float32
+
+    if family == "pc":
+        T_, E = table.i0.shape
+        statics = dict(NF=NF, CU=CU, WF=WF, E=E, T_=T_, ND=ND,
+                       CPD=cus_per_domain, IPB=instr_per_block,
+                       OFFB=offset_blocks, family=family,
+                       fork_estimator=fork_estimator, cu_model=None,
+                       mosaic=not interp, lean=lean)
+        operands = (i0_rate.astype(f32), sens_rate.astype(f32),
+                    cum_t.astype(f32), pb, pos.astype(f32),
+                    table.i0.astype(f32), table.sens.astype(f32),
+                    table.count.astype(f32), wf_i0.astype(f32),
+                    wf_sens.astype(f32), f_prev.astype(f32),
+                    e_acc.astype(f32), jnp.asarray(t_acc, f32).reshape(1),
+                    freqs.astype(f32), tid.astype(jnp.int32),
+                    eps.astype(f32), scal, pw_vec)
+        out_shape = [jax.ShapeDtypeStruct(s, d) for s, d in [
+            ((CU, WF), f32),                               # pos
+            ((T_, E), f32), ((T_, E), f32), ((T_, E), f32),  # table
+            ((CU, WF), f32), ((CU, WF), f32),              # wf_i0 / wf_sens
+            ((CU,), f32), ((CU,), f32), ((1,), f32),       # f_sel/e_acc/t_acc
+            ((CU,), f32), ((CU,), f32), ((CU,), f32),      # work/energy/err
+            ((CU,), jnp.int32), ((CU,), f32), ((1,), f32)]]  # fidx/sens/hit
+    else:
+        statics = dict(NF=NF, CU=CU, WF=WF, E=0, T_=0, ND=ND,
+                       CPD=cus_per_domain, IPB=instr_per_block,
+                       OFFB=offset_blocks, family=family,
+                       fork_estimator=fork_estimator, cu_model=cu_model,
+                       mosaic=not interp, lean=lean)
+        operands = (i0_rate.astype(f32), sens_rate.astype(f32),
+                    cum_t.astype(f32), pb, pos.astype(f32),
+                    react_i0.astype(f32), react_sens.astype(f32),
+                    f_prev.astype(f32), e_acc.astype(f32),
+                    jnp.asarray(t_acc, f32).reshape(1),
+                    freqs.astype(f32), eps.astype(f32), scal, pw_vec)
+        out_shape = [jax.ShapeDtypeStruct(s, d) for s, d in [
+            ((CU, WF), f32),                               # pos
+            ((CU,), f32), ((CU,), f32),                    # react_i0 / sens
+            ((CU,), f32), ((CU,), f32), ((1,), f32),       # f_sel/e_acc/t_acc
+            ((CU,), f32), ((CU,), f32), ((CU,), f32),      # work/energy/err
+            ((CU,), jnp.int32), ((CU,), f32)]]             # fidx/true_sens
+
+    if interp and not via_pallas:
+        # the interpret engine: the kernel body as plain XLA ops, no ref
+        # simulation wrapper (see module docstring)
+        outs = _epoch_math(operands, **statics)
+    else:
+        outs = pl.pallas_call(
+            functools.partial(_epoch_kernel, n_in=len(operands), **statics),
+            out_shape=out_shape,
+            interpret=interp,
+        )(*operands)
+
+    if family == "pc":
+        (pos_n, ti0, tse, tcnt, wfi, wfs, f_sel, eacc, tacc, work, energy,
+         err, fidx, tsens, hit) = outs
+        return EpochOut(pos=pos_n, table=PRED.PCTable(ti0, tse, tcnt),
+                        wf_i0=wfi, wf_sens=wfs, react_i0=None,
+                        react_sens=None, f_sel=f_sel, e_acc=eacc,
+                        t_acc=tacc, work=work, energy=energy, err=err,
+                        fidx=fidx, true_sens=tsens, hit_rate=hit)
+    (pos_n, ri0, rse, f_sel, eacc, tacc, work, energy, err, fidx,
+     tsens) = outs
+    return EpochOut(pos=pos_n, table=None, wf_i0=None, wf_sens=None,
+                    react_i0=ri0, react_sens=rse, f_sel=f_sel, e_acc=eacc,
+                    t_acc=tacc, work=work, energy=energy, err=err,
+                    fidx=fidx, true_sens=tsens, hit_rate=None)

@@ -14,7 +14,9 @@ compare + sum — N = cus_per_table * WF is a few thousand elements, VMEM
 resident), then applies the collision-average + EMA blend in place. Grid:
 one program per table instance.
 
-``interpret`` defaults to the backend: interpreted on CPU, compiled on TPU.
+``interpret`` defaults to the backend: interpreted on CPU, compiled on TPU;
+the ``REPRO_PALLAS_INTERPRET`` env var overrides either way (see
+``kernels._resolve_interpret``).
 
 Power-regime sweeps: the ``freqs`` ladder is an ordinary array operand
 (not a trace-time constant), so the engine passes the *traced* ladder it
@@ -31,11 +33,10 @@ import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
-
-def _resolve_interpret(interpret: Optional[bool]) -> bool:
-    if interpret is None:
-        return jax.default_backend() != "tpu"
-    return interpret
+# interpret-mode resolution (incl. the REPRO_PALLAS_INTERPRET env
+# override) is shared by every kernel generation; re-exported here for
+# the pre-v2 import path
+from repro.kernels import _resolve_interpret  # noqa: F401
 
 
 def _pc_table_kernel(tbl_i0_ref, tbl_sens_ref, tbl_cnt_ref, idx_ref,

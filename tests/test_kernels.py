@@ -1,10 +1,20 @@
 """Per-kernel allclose sweeps (shapes x dtypes) against the pure-jnp oracles,
-kernels executed in Pallas interpret mode."""
+kernels executed in Pallas interpret mode; plus the v2 fused epoch kernel
+(engine agreement, exact-mode scan equivalence, table-map semantics)."""
+import dataclasses
+import functools
+
 import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
 
+from repro.core import power as PWR
+from repro.core import predictors as PRED
+from repro.core import simulate as SIM
+from repro.core.simulate import SimConfig, run_sim
+from repro.core.workloads import get_workload, make_program
+from repro.kernels import epoch_fused as KEF
 from repro.kernels import ops, ref
 
 RNG = np.random.default_rng(0)
@@ -88,3 +98,184 @@ def test_rwkv_chunk_invariance():
     a = ops.rwkv_chunked(r, k, v, w, u, chunk=32)
     b = ops.rwkv_chunked(r, k, v, w, u, chunk=128)
     np.testing.assert_allclose(np.asarray(a), np.asarray(b), rtol=1e-4, atol=1e-4)
+
+# ---------------------------------------------------------------------------
+# v2: the fused fork--execute epoch kernel
+# ---------------------------------------------------------------------------
+
+# (family, fork_estimator, cu_model) covering every traced mechanism shape:
+# pcstall, accpc, stall/lead/crit-style, crisp, accreac
+EPOCH_FAMS = [("pc", False, None), ("pc", True, None),
+              ("reactive", False, "stall"), ("reactive", False, "crisp"),
+              ("reactive", True, None)]
+
+
+def _epoch_case(family, CU, WF, *, seed=0, NF=10, T=3, E=16, tid=None,
+                fork_estimator=False, cu_model=None, P=48):
+    """Build one full operand set for ``epoch_fused`` from a real generated
+    program plus randomized carry state. Returns (positional args, kwargs)."""
+    rng = np.random.default_rng(seed)
+    prog = make_program("kern", "mixed", seed % 17, P=P)
+    sim = SimConfig(n_cu=CU, n_wf=WF)
+    ax = sim.axes()
+    F = PWR.freqs_ghz(ax.power, NF)
+    pos = jnp.asarray(rng.uniform(0, P * 4, (CU, WF)).astype(np.float32))
+    eps = SIM._epoch_context(prog, pos, prog.n_blocks, sim.seed).eps
+    args = (prog.i0_rate, prog.sens_rate, jnp.transpose(prog.cum3), pos, F,
+            eps, F[jnp.asarray(rng.integers(0, NF, CU))],
+            jnp.asarray(rng.uniform(0, 5, CU).astype(np.float32)),
+            jnp.float32(3.0))
+    kw = dict(p_blocks=prog.n_blocks, epoch_us=ax.epoch_us, sigma=ax.sigma,
+              cap_per_ghz=ax.cap_per_ghz, membw=ax.membw, obj=ax.obj,
+              lat_us=PWR.transition_latency_us(ax.epoch_us, ax.power),
+              power=ax.power, family=family,
+              fork_estimator=fork_estimator, cu_model=cu_model)
+    if family == "pc":
+        kw.update(
+            table=PRED.PCTable(
+                jnp.asarray(rng.uniform(0, 6, (T, E)).astype(np.float32)),
+                jnp.asarray(rng.uniform(0, 4, (T, E)).astype(np.float32)),
+                jnp.asarray((rng.uniform(size=(T, E)) > 0.5)
+                            .astype(np.float32))),
+            tid=jnp.asarray(tid if tid is not None else np.arange(CU) % T,
+                            jnp.int32),
+            wf_i0=jnp.asarray(rng.uniform(0, 6, (CU, WF))
+                              .astype(np.float32)),
+            wf_sens=jnp.asarray(rng.uniform(0, 4, (CU, WF))
+                                .astype(np.float32)))
+    else:
+        kw.update(react_i0=jnp.asarray(rng.uniform(0, 200, CU)
+                                       .astype(np.float32)),
+                  react_sens=jnp.asarray(rng.uniform(0, 100, CU)
+                                         .astype(np.float32)))
+    return args, kw
+
+
+def _flat(out):
+    leaves, _ = jax.tree_util.tree_flatten(out)
+    return [np.asarray(x) for x in leaves]
+
+
+@pytest.mark.parametrize("CU,WF,NF", [(4, 8, 10), (5, 7, 6), (3, 9, 4)])
+@pytest.mark.parametrize("family,fork_est,model", EPOCH_FAMS)
+def test_epoch_fused_via_pallas_matches_direct(CU, WF, NF, family,
+                                               fork_est, model):
+    """The pallas_call(interpret) engine and the direct-eval engine run the
+    same kernel body: discrete outputs identical, floats at ulp level (the
+    ref-simulation wrapper changes XLA fusion contexts, so bitwise equality
+    is not a contract) — across odd shapes, odd ladders and every mechanism
+    family."""
+    args, kw = _epoch_case(family, CU, WF, NF=NF, seed=CU * NF + 1,
+                           fork_estimator=fork_est, cu_model=model)
+    a = KEF.epoch_fused(*args, **kw)
+    b = KEF.epoch_fused(*args, **kw, via_pallas=True)
+    for x, y in zip(_flat(a), _flat(b)):
+        if np.issubdtype(x.dtype, np.integer):
+            np.testing.assert_array_equal(x, y)
+        else:
+            np.testing.assert_allclose(x, y, rtol=3e-6, atol=3e-5)
+
+
+@pytest.mark.parametrize("family,fork_est,model", EPOCH_FAMS)
+def test_epoch_fused_invariants(family, fork_est, model):
+    """Physical invariants of one fused epoch: waves only move forward,
+    selected ladder index in range, telemetry finite and non-negative."""
+    args, kw = _epoch_case(family, 6, 5, seed=11,
+                           fork_estimator=fork_est, cu_model=model)
+    out = KEF.epoch_fused(*args, **kw)
+    pos0 = np.asarray(args[3])
+    assert np.all(np.asarray(out.pos) >= pos0 - 1e-4)
+    NF = args[4].shape[0]
+    fidx = np.asarray(out.fidx)
+    assert np.all((fidx >= 0) & (fidx < NF))
+    assert np.all(np.asarray(out.work) >= 0)
+    assert np.all(np.asarray(out.energy) > 0)
+    assert np.all(np.isfinite(_flat(out)[0]))
+    for leaf in _flat(out):
+        assert np.all(np.isfinite(leaf))
+    if family == "pc":
+        assert np.all(np.asarray(out.table.count)
+                      >= np.asarray(kw["table"].count))
+        hr = float(out.hit_rate[0])
+        assert 0.0 <= hr <= 1.0
+
+
+def test_epoch_fused_noncontiguous_tid_permutation_invariance():
+    """Relabeling table ids (permuting tid and the table rows consistently)
+    must leave every CU-level output unchanged and permute the updated
+    table rows the same way — i.e. the kernel honors arbitrary
+    non-contiguous CU->table maps."""
+    T = 3
+    perm = np.array([2, 0, 1])
+    inv = np.argsort(perm)
+    tid_a = np.array([0, 2, 1, 0, 1, 2])
+    args, kw_a = _epoch_case("pc", 6, 5, T=T, tid=tid_a, seed=5)
+    kw_b = dict(kw_a)
+    kw_b["tid"] = jnp.asarray(perm[tid_a], jnp.int32)
+    tbl = kw_a["table"]
+    kw_b["table"] = PRED.PCTable(tbl.i0[inv], tbl.sens[inv], tbl.count[inv])
+    a = KEF.epoch_fused(*args, **kw_a)
+    b = KEF.epoch_fused(*args, **kw_b)
+    for field in ("pos", "wf_i0", "wf_sens", "f_sel", "e_acc", "work",
+                  "energy", "err", "fidx", "true_sens", "hit_rate"):
+        np.testing.assert_array_equal(np.asarray(getattr(a, field)),
+                                      np.asarray(getattr(b, field)),
+                                      err_msg=field)
+    for f in ("i0", "sens", "count"):
+        np.testing.assert_array_equal(
+            np.asarray(getattr(a.table, f)),
+            np.asarray(getattr(b.table, f))[perm], err_msg=f)
+
+
+def test_epoch_fused_out_of_range_tid_drops_updates():
+    """Out-of-range table ids clamp on lookup and contribute nothing on
+    update (predictors.table_update scatter-drop semantics)."""
+    T, CU, WF = 3, 6, 5
+    tid = np.array([0, 1, 2, T, T + 4, 1])      # two CUs map nowhere
+    args, kw = _epoch_case("pc", CU, WF, T=T, tid=tid, seed=9)
+    out = KEF.epoch_fused(*args, **kw)
+    added = float(np.asarray(out.table.count).sum()
+                  - np.asarray(kw["table"].count).sum())
+    n_in_range = int((tid < T).sum())
+    assert added == pytest.approx(n_in_range * WF)
+
+
+@pytest.mark.parametrize("n_cu,n_wf", [(8, 10), (5, 7)])
+def test_epoch_fused_exact_mode_matches_jnp_scan(monkeypatch, n_cu, n_wf):
+    """With the lean reassociations disabled (exact reference op order) the
+    v2 scan path reproduces the jnp path per-epoch, including odd
+    CU/WF shapes."""
+    monkeypatch.setattr(KEF, "epoch_fused",
+                        functools.partial(KEF.epoch_fused, lean=False))
+    jax.clear_caches()   # drop any lean-mode trace of the same signature
+    try:
+        prog = get_workload("comd")
+        sim = SimConfig(n_cu=n_cu, n_wf=n_wf, n_epochs=40)
+        for mech in ("pcstall", "accpc", "stall", "accreac"):
+            a = run_sim(prog, sim, mech)
+            b = run_sim(prog, dataclasses.replace(sim, use_pallas="v2"),
+                        mech)
+            for k in a:
+                np.testing.assert_allclose(b[k], a[k], rtol=1e-5, atol=1e-5,
+                                           err_msg=f"{mech}/{k}")
+    finally:
+        jax.clear_caches()  # don't leak exact-mode traces to other tests
+
+
+def test_epoch_fused_lean_close_to_exact_single_epoch():
+    """One epoch of lean math vs exact math: same ladder choice and
+    continuous outputs within float-reassociation tolerance (the chaotic
+    divergence of full scans comes from iterating near-ties, not from any
+    single-epoch error)."""
+    for fam, fork_est, model in EPOCH_FAMS:
+        args, kw = _epoch_case(fam, 8, 10, seed=21,
+                               fork_estimator=fork_est, cu_model=model)
+        a = KEF.epoch_fused(*args, **kw, lean=False)
+        b = KEF.epoch_fused(*args, **kw)
+        np.testing.assert_array_equal(np.asarray(a.fidx),
+                                      np.asarray(b.fidx))
+        for field in ("pos", "work", "energy", "e_acc"):
+            np.testing.assert_allclose(np.asarray(getattr(a, field)),
+                                       np.asarray(getattr(b, field)),
+                                       rtol=1e-4, atol=1e-4,
+                                       err_msg=f"{fam}/{field}")

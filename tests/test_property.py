@@ -103,3 +103,59 @@ def test_power_bounds(f1, f2, act):
     # higher V/f at same activity costs more (margin for float rounding)
     if f2 > f1 + 1e-3:
         assert float(PWR.power(jnp.float32(f2), jnp.float32(act))) > p
+
+
+# ---------------------------------------------------------------------------
+# v2 fused epoch kernel: the hypothesis sweep re-draws the deterministic
+# cases of tests/test_kernels.py (same helpers) across random seeds, odd
+# shapes and every mechanism family.
+# ---------------------------------------------------------------------------
+
+_EPOCH_SHAPES = [(4, 8, 10), (5, 7, 6), (3, 9, 4), (6, 5, 8)]
+
+
+@given(seed=st.integers(0, 2**16),
+       shape=st.sampled_from(_EPOCH_SHAPES),
+       fam=st.integers(0, 4))
+@settings(**SETTINGS)
+def test_epoch_fused_engines_agree(seed, shape, fam):
+    """pallas_call(interpret) engine == direct-eval engine: discrete
+    outputs identical, floats at ulp level, for any seed/shape/family."""
+    from test_kernels import EPOCH_FAMS, _epoch_case, _flat
+    from repro.kernels import epoch_fused as KEF
+    CU, WF, NF = shape
+    family, fork_est, model = EPOCH_FAMS[fam]
+    args, kw = _epoch_case(family, CU, WF, NF=NF, seed=seed,
+                           fork_estimator=fork_est, cu_model=model)
+    a = KEF.epoch_fused(*args, **kw)
+    b = KEF.epoch_fused(*args, **kw, via_pallas=True)
+    for x, y in zip(_flat(a), _flat(b)):
+        if np.issubdtype(x.dtype, np.integer):
+            np.testing.assert_array_equal(x, y)
+        else:
+            np.testing.assert_allclose(x, y, rtol=3e-6, atol=3e-5)
+
+
+@given(seed=st.integers(0, 2**16),
+       shape=st.sampled_from(_EPOCH_SHAPES),
+       fam=st.integers(0, 4))
+@settings(**SETTINGS)
+def test_epoch_fused_invariants_random_state(seed, shape, fam):
+    """Waves only move forward, ladder index in range, telemetry finite,
+    table counts monotone — from any random carry state."""
+    from test_kernels import EPOCH_FAMS, _epoch_case, _flat
+    from repro.kernels import epoch_fused as KEF
+    CU, WF, NF = shape
+    family, fork_est, model = EPOCH_FAMS[fam]
+    args, kw = _epoch_case(family, CU, WF, NF=NF, seed=seed,
+                           fork_estimator=fork_est, cu_model=model)
+    out = KEF.epoch_fused(*args, **kw)
+    assert np.all(np.asarray(out.pos) >= np.asarray(args[3]) - 1e-4)
+    fidx = np.asarray(out.fidx)
+    assert np.all((fidx >= 0) & (fidx < NF))
+    assert np.all(np.asarray(out.work) >= 0)
+    for leaf in _flat(out):
+        assert np.all(np.isfinite(leaf))
+    if family == "pc":
+        assert np.all(np.asarray(out.table.count)
+                      >= np.asarray(kw["table"].count))
