@@ -88,11 +88,12 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 from jax.experimental.shard_map import shard_map
-from jax.sharding import Mesh, PartitionSpec as P
+from jax.sharding import PartitionSpec as P
 
 from repro.core import mechanisms as MECH
 from repro.core import power as PWR
 from repro.core import simulate as SIM
+from repro.launch.mesh import grid_mesh
 from repro.core.mechanisms import MechanismSpec
 from repro.core.simulate import (MECHANISMS, SimAxes, SimConfig, SimStatic,
                                  ednp, prediction_accuracy)
@@ -199,7 +200,7 @@ def _grid_exec(st: SimStatic, n_dev: int,
     mechanisms (whose predict/update hooks trace in here without any
     sweep-layer change). The initial scan carry arrives pre-built and
     donated (see ``simulate.init_carry``)."""
-    mesh = Mesh(np.asarray(jax.local_devices()[:n_dev]), ("i",))
+    mesh = grid_mesh(n_dev)   # built once per process (launch.mesh)
     family = "grid_forks" if mechanism is None else f"grid_{mechanism.name}"
 
     @functools.partial(jax.jit, donate_argnums=(0,))
@@ -553,6 +554,179 @@ def run_grid(programs: Union[Dict[str, Program], Sequence[Program]],
                                             n_ep=sim_pt.n_epochs)
             out[key][name] = trs
     return out
+
+
+# ---------------------------------------------------------------------------
+# GridExecutor — the long-lived compiled-family handle for request streams
+# ---------------------------------------------------------------------------
+
+
+class PendingGrid:
+    """The in-flight result of one :class:`GridExecutor` micro-batch.
+
+    Dispatch is asynchronous: this object holds the executables' device
+    arrays plus the row bookkeeping to cut them back into per-job
+    ``run_sim``-schema traces, and nothing here synchronizes with the
+    device until ``block_until_ready``/``traces`` is called — the caller
+    can keep preparing and dispatching later batches while this one
+    computes."""
+
+    def __init__(self, rows, n_jobs: int):
+        # rows: per job, {mech_name: (arrays, flat_row, spec, n_ep)}
+        self._rows = rows
+        self.n_jobs = n_jobs
+
+    def block_until_ready(self) -> "PendingGrid":
+        for job in self._rows:
+            for arrs, _, _, _ in job.values():
+                jax.block_until_ready(arrs)
+        return self
+
+    def traces(self) -> List[Dict[str, Dict[str, np.ndarray]]]:
+        """Per-job ``{mechanism: trace}`` results (np arrays; blocks)."""
+        return [{m: _unpack_trace(arrs, i, spec, True, n_ep)
+                 for m, (arrs, i, spec, n_ep) in job.items()}
+                for job in self._rows]
+
+
+class GridExecutor:
+    """A reusable handle on the compiled grid-executable family: the
+    object a long-lived DVFS service holds between requests.
+
+    ``run_grid`` lays out its operands per call from a (workloads x
+    grid-points) product; a service consuming a *stream* of (job,
+    telemetry) requests instead wants one static configuration compiled
+    once and then fed micro-batches forever. A GridExecutor pins the
+    static half — the ``SimStatic`` (shapes, flags, ladder length), the
+    padded program block count ``p_max``, the mechanism set and the seed —
+    plus a small set of static micro-batch shapes (``buckets``).
+    ``dispatch`` pads each job list to the smallest admitting bucket by
+    cycling jobs (the same move as ``run_grid``'s device-multiple
+    padding; pad rows are dropped on unpack) and rides the SAME
+    ``_grid_exec`` executables every ``run_grid`` call uses, so streamed
+    rows are bitwise-equal to the one-shot grid answer for the same jobs
+    and a whole request stream compiles at most one executable per
+    (bucket shape x family) — with a single service bucket the fork
+    family compiles ONCE for the life of the process, exactly the
+    ``run_grid`` no-retrace contract carried over to streaming.
+
+    ``buckets=None`` dispatches each batch at its exact size (one shape
+    per distinct batch length — the mode for fixed-shape clients like the
+    DVFS manager, whose repeated reports always arrive at the same batch
+    size and therefore share ``run_grid``'s own executables); a tuple of
+    sizes is the streaming mode. Dispatch is async — the returned
+    :class:`PendingGrid` does not synchronize — and every dispatch builds
+    its families' initial carries through the jit-cached per-``SimStatic``
+    ``_carry_builder`` pool and donates them, so a depth-2 service
+    pipeline keeps two carry generations alive: batch N+1's carry build
+    and host->device transfer overlap batch N's compute."""
+
+    def __init__(self, static_cfg: SimConfig,
+                 mechanisms: Sequence[Union[str, MechanismSpec]] = MECHANISMS,
+                 *, p_max: int = 1024,
+                 buckets: Optional[Sequence[int]] = None,
+                 n_dev: Optional[int] = None):
+        self.static_cfg = static_cfg
+        self.specs = [MECH.resolve(m) for m in mechanisms]
+        assert self.specs, "GridExecutor needs at least one mechanism"
+        self.p_max = p_max
+        self.buckets = None if buckets is None else tuple(sorted(buckets))
+        assert self.buckets is None or all(b >= 1 for b in self.buckets)
+        self.n_dev = jax.local_device_count() if n_dev is None else n_dev
+        self._st = static_cfg.static_part()
+        self._seed_arr = jnp.asarray(SIM.seed_i32([static_cfg.seed]))
+        self._traced = [s for s in self.specs if s.is_traced]
+        self._special = [s for s in self.specs if not s.is_traced]
+        self._fork_ids = jnp.asarray(
+            [SIM.FORK_MECH_IDS[s.name] for s in self._traced], jnp.int32)
+        self._no_ids = jnp.zeros((0,), jnp.int32)
+
+    @property
+    def max_batch(self) -> Optional[int]:
+        """Largest micro-batch one dispatch admits (None = unbounded)."""
+        return None if self.buckets is None else self.buckets[-1]
+
+    def _bucket(self, n: int) -> int:
+        if self.buckets is None:
+            return n
+        for b in self.buckets:
+            if b >= n:
+                return b
+        raise AssertionError(
+            f"micro-batch of {n} jobs exceeds the largest static shape "
+            f"bucket {self.buckets[-1]} — split the batch or widen buckets")
+
+    def dispatch(self, jobs: Sequence[Tuple[Program, dict]]) -> PendingGrid:
+        """Dispatch one micro-batch of ``(Program, axes_overrides)`` jobs.
+
+        Each job is one flat row of the grid executable: its program
+        (padded to ``p_max`` blocks — semantics preserved, see
+        ``pad_program``) and its own traced ``SimAxes`` point built from
+        the executor's static config plus the per-job overrides (any
+        ``AXIS_FIELDS`` subset; a job's logical ``n_epochs`` may not
+        exceed the executor's static scan length). Asynchronous: returns
+        a :class:`PendingGrid` immediately."""
+        n = len(jobs)
+        assert n >= 1, "dispatch needs at least one job"
+        bucket = self._bucket(n)
+        padded = [jobs[i % n] for i in range(bucket)]
+        sims = []
+        for prog, ov in padded:
+            for k in ov:
+                assert k in AXIS_FIELDS, \
+                    f"{k!r} is not a traced grid axis (one of {AXIS_FIELDS})"
+            s = dataclasses.replace(self.static_cfg, **dict(ov))
+            assert s.n_epochs <= self._st.n_epochs, \
+                f"job n_epochs {s.n_epochs} exceeds the executor's static " \
+                f"scan length {self._st.n_epochs}"
+            assert s.static_part(n_epochs=self._st.n_epochs) == self._st, \
+                "job overrides must not change the executor's static half " \
+                f"(got {s.static_part(n_epochs=self._st.n_epochs)})"
+            assert prog.n_blocks <= self.p_max, \
+                f"program {prog.name!r} has {prog.n_blocks} blocks > " \
+                f"executor p_max {self.p_max}"
+            sims.append(s)
+
+        axes_flat = jax.tree.map(lambda *xs: jnp.stack(xs),
+                                 *[s.axes() for s in sims])
+        p_log = jnp.asarray([p.n_blocks for p, _ in padded], jnp.int32)
+        pp = [pad_program(p, self.p_max) for p, _ in padded]
+        stacked = Program(
+            "suite",
+            *(jnp.stack([getattr(p, f) for p in pp])
+              for f in ("i0_rate", "sens_rate", "mem_frac", "cum3")))
+        n_dev = min(self.n_dev, bucket)
+        n_pad = -(-bucket // n_dev) * n_dev
+        if n_pad != bucket:
+            stacked = _pad_flat(stacked, n_pad)
+            p_log = _pad_flat(p_log, n_pad)
+            axes_flat = _pad_flat(axes_flat, n_pad)
+        # stage operands on device explicitly and asynchronously: under a
+        # depth-2 service pipeline this host->device transfer (and the
+        # donated carry build inside _run_family) overlaps the previous
+        # batch's compute instead of queueing behind it at call time
+        stacked, p_log, axes_flat = jax.device_put(
+            (stacked, p_log, axes_flat))
+        ops = (stacked, p_log, axes_flat, n)
+
+        by_mech: Dict[str, Dict[str, jnp.ndarray]] = {}
+        if self._traced:
+            ys = _run_family(self._st, n_dev, None, ops, self._seed_arr,
+                             self._fork_ids)
+            for j, s in enumerate(self._traced):
+                by_mech[s.name] = {k: v[:, :, j] for k, v in ys.items()}
+        for s in self._special:
+            by_mech[s.name] = _run_family(self._st, n_dev, s, ops,
+                                          self._seed_arr, self._no_ids)
+
+        rows = [{s.name: (by_mech[s.name], j, s, sims[j].n_epochs)
+                 for s in self.specs} for j in range(n)]
+        return PendingGrid(rows, n)
+
+    def run(self, jobs: Sequence[Tuple[Program, dict]]
+            ) -> List[Dict[str, Dict[str, np.ndarray]]]:
+        """Synchronous convenience: ``dispatch`` + unpack."""
+        return self.dispatch(jobs).traces()
 
 
 def suite_metrics(programs: Union[Dict[str, Program], Sequence[Program]],

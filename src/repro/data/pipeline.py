@@ -11,7 +11,7 @@ losses actually decrease during the integration tests.
 from __future__ import annotations
 
 from dataclasses import dataclass
-from typing import Dict, Iterator
+from typing import Dict, Iterator, Sequence, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -85,3 +85,33 @@ def data_iterator(cfg: ModelConfig, shape: ShapeConfig, start_step: int = 0,
     while True:
         yield make_batch(cfg, shape, step, **kw)
         step += 1
+
+
+def dvfs_request_stream(n_requests: int, *, seed: int = 0,
+                        workloads: Sequence[str] = ("comd", "xsbench",
+                                                    "lulesh", "minife"),
+                        epoch_us: Sequence[float] = (1.0, 10.0),
+                        objectives: Sequence[str] = ("ed2p",),
+                        steps_per_request: int = 4,
+                        ) -> Iterator[Tuple["Program", dict, tuple]]:
+    """Trace-driven request stream for the streaming DVFS service.
+
+    Same counter-based contract as the token pipeline: request ``i`` is
+    derived from ``(seed, i)`` alone, so benches and tests replay
+    bit-identical streams with no stored trace files. Yields ``(program,
+    axes_overrides, telemetry)`` tuples ready for ``DVFSService.submit`` —
+    a workload phase program, a traced-axis operating point drawn from
+    ``epoch_us`` x ``objectives``, and a plausible (step, seconds)
+    step-time window."""
+    from repro.core.workloads import get_workload
+    names = tuple(workloads)
+    progs = {n: get_workload(n) for n in names}
+    for i in range(n_requests):
+        rng = np.random.default_rng((seed, i))
+        name = names[int(rng.integers(len(names)))]
+        axes = {"epoch_us": float(epoch_us[int(rng.integers(len(epoch_us)))]),
+                "objective": objectives[int(rng.integers(len(objectives)))]}
+        telemetry = tuple(
+            (i * steps_per_request + s, float(rng.gamma(2.0, 0.005)))
+            for s in range(steps_per_request))
+        yield progs[name], axes, telemetry

@@ -4,12 +4,33 @@
 importing this module never touches jax device state. The dry-run sets
 ``XLA_FLAGS=--xla_force_host_platform_device_count=512`` *before* any jax
 import; everything else (tests, benches) sees the single real CPU device.
+
+``grid_mesh`` is the process-wide 1-D mesh the sweep layer's grid
+executables shard over: built once per (process, device count) and cached,
+so a long-lived service dispatching thousands of micro-batches never
+re-constructs device meshes on the hot accept path.
 """
 from __future__ import annotations
 
+import functools
 from typing import Optional
 
 import jax
+import numpy as np
+from jax.sharding import Mesh
+
+
+@functools.lru_cache(maxsize=None)
+def grid_mesh(n_dev: Optional[int] = None) -> Mesh:
+    """The single-host 1-D grid mesh over the first ``n_dev`` local devices
+    (all of them when ``None``), on the axis name the sweep layer shards
+    its flattened (workload x grid-point) operands over. Cached per device
+    count for the life of the process — every grid executable family and
+    every streaming-service dispatch shares the same Mesh object."""
+    devs = jax.local_devices()
+    if n_dev is not None:
+        devs = devs[:n_dev]
+    return Mesh(np.asarray(devs), ("i",))
 
 
 def make_production_mesh(*, multi_pod: bool = False):

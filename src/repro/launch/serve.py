@@ -2,6 +2,14 @@
 
   PYTHONPATH=src python -m repro.launch.serve --arch rwkv6-3b --smoke \
       --prompt-len 64 --gen 32 --batch 4
+
+The decode loop's per-token greedy sampling lives INSIDE the jitted step
+(one dispatch per token; the argmax rides the same executable as the
+model math instead of paying an extra un-jitted dispatch between calls),
+and with ``--dvfs`` the loop's per-step telemetry streams through the
+long-lived :class:`repro.dvfs_runtime.service.DVFSService` — periodic
+async report requests overlap decode compute instead of a single fresh
+one-shot report after the loop.
 """
 from __future__ import annotations
 
@@ -16,7 +24,7 @@ from repro.models.model import decode_step, init_cache, init_params, prefill
 
 
 def serve(cfg, *, batch: int, prompt_len: int, gen: int, seed: int = 0,
-          dvfs: bool = False):
+          dvfs: bool = False, dvfs_stride: int = 16):
     key = jax.random.key(seed)
     params = init_params(cfg, key)
     St = prompt_len - cfg.n_patches if cfg.frontend == "vision" else prompt_len
@@ -27,31 +35,56 @@ def serve(cfg, *, batch: int, prompt_len: int, gen: int, seed: int = 0,
             key, (batch, cfg.n_patches, cfg.d_model), jnp.bfloat16)
 
     prefill_fn = jax.jit(lambda p, b: prefill(p, cfg, b))
-    decode_fn = jax.jit(lambda p, c, t: decode_step(p, cfg, c, t),
-                        donate_argnums=(1,))
+
+    def _decode_argmax(p, c, t):
+        logits, c = decode_step(p, cfg, c, t)
+        return jnp.argmax(logits, -1).astype(jnp.int32), c
+
+    decode_fn = jax.jit(_decode_argmax, donate_argnums=(1,))
 
     t0 = time.perf_counter()
     logits = prefill_fn(params, pbatch)
     logits.block_until_ready()
     t_prefill = time.perf_counter() - t0
 
+    svc = futs = window = None
+    if dvfs:
+        from repro.configs.base import ShapeConfig
+        from repro.dvfs_runtime.service import DVFSService
+        shape = ShapeConfig("serve", prompt_len + gen, batch, "decode")
+        svc = DVFSService.for_model(cfg, shape, coalesce_s=0.001)
+        futs, window = [], []
+
     cache = init_cache(cfg, batch, prompt_len + gen, fill=prompt_len)
     tok = jnp.argmax(logits, -1).astype(jnp.int32)
     out = [tok]
     t0 = time.perf_counter()
-    for _ in range(gen):
-        logits, cache = decode_fn(params, cache, tok)
-        tok = jnp.argmax(logits, -1).astype(jnp.int32)
+    t_prev = t0
+    for step in range(gen):
+        tok, cache = decode_fn(params, cache, tok)
         out.append(tok)
+        if svc is not None:
+            # dispatch-cadence telemetry: wall time between async decode
+            # dispatches, no extra device syncs on the decode hot loop
+            t_now = time.perf_counter()
+            window.append((step, t_now - t_prev))
+            t_prev = t_now
+            if (step + 1) % dvfs_stride == 0 or step == gen - 1:
+                # async: the service coalesces + dispatches off-thread,
+                # overlapping the remaining decode steps
+                futs.append(svc.submit(svc.default_program,
+                                       telemetry=window))
+                window = []
     jax.block_until_ready(out[-1])
     t_decode = (time.perf_counter() - t0) / gen
     report = {"prefill_s": t_prefill, "decode_s_per_tok": t_decode,
               "tokens": jnp.stack(out, 1)}
-    if dvfs:
-        from repro.configs.base import ShapeConfig
-        from repro.dvfs_runtime.manager import DVFSManager
-        shape = ShapeConfig("serve", prompt_len + gen, batch, "decode")
-        report["dvfs"] = DVFSManager.for_model(cfg, shape).report()
+    if svc is not None:
+        with svc:
+            results = [f.result() for f in futs]
+        report["dvfs"] = results[-1]["report"]
+        report["dvfs_requests"] = len(results)
+        report["dvfs_stream"] = svc.stats()
     return report
 
 
@@ -71,8 +104,11 @@ def main():
           f"decode {rep['decode_s_per_tok'] * 1e3:.2f}ms/tok  "
           f"out shape {rep['tokens'].shape}")
     if "dvfs" in rep:
-        d = rep["dvfs"]
-        print(f"[dvfs] energy {d['energy_norm']:.3f}x acc {d['accuracy']:.3f}")
+        d, s = rep["dvfs"], rep["dvfs_stream"]
+        print(f"[dvfs] energy {d['energy_norm']:.3f}x acc {d['accuracy']:.3f}  "
+              f"steps {d['step_time']['n_steps']}  "
+              f"stream {rep['dvfs_requests']} reqs "
+              f"p99 {s['p99_latency_s'] * 1e3:.0f}ms")
 
 
 if __name__ == "__main__":

@@ -65,6 +65,38 @@ def test_manager_report_well_formed_and_jit_cached():
     assert rep2["accuracy"] == pytest.approx(rep["accuracy"])
 
 
+def test_manager_step_time_stats_in_reports():
+    """observe_step records (step, seconds) PAIRS — the step index is not
+    dropped — and step-time stats reach both report() and every
+    grid_report() row (with mean_step_s kept as a back-compat alias)."""
+    cfg = get_config("glm4-9b")
+    mgr = DVFSManager.for_model(cfg, TRAIN_4K, n_cu=8)
+    for step, dt in ((10, 0.02), (20, 0.04), (40, 0.06)):
+        mgr.observe_step(step, dt)
+    assert mgr.step_log == [(10, 0.02), (20, 0.04), (40, 0.06)]
+    rep = mgr.report()
+    st = rep["step_time"]
+    assert st["n_steps"] == 3
+    assert (st["first_step"], st["last_step"]) == (10, 40)
+    assert st["mean_step_s"] == pytest.approx(0.04)
+    assert st["p50_step_s"] == pytest.approx(0.04)
+    assert st["p50_step_s"] <= st["p99_step_s"] <= 0.06 + 1e-12
+    assert rep["mean_step_s"] == pytest.approx(0.04)  # back-compat alias
+    for row in mgr.grid_report(epoch_us=(1.0, 10.0)).values():
+        assert row["step_time"]["n_steps"] == 3
+        assert row["mean_step_s"] == pytest.approx(0.04)
+
+
+def test_manager_empty_step_log():
+    """No telemetry observed: stats are well-formed zeros, not NaN."""
+    cfg = get_config("glm4-9b")
+    mgr = DVFSManager.for_model(cfg, TRAIN_4K, n_cu=8)
+    rep = mgr.report()
+    assert rep["mean_step_s"] == 0.0
+    assert rep["step_time"]["n_steps"] == 0
+    assert rep["step_time"]["first_step"] == -1
+
+
 def test_manager_grid_report():
     """grid_report sweeps (epoch_us x objective) in one executable family
     and returns a well-formed report per grid point."""
