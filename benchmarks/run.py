@@ -289,8 +289,7 @@ def _bench_grid(quick: bool = False):
     def grid_call():
         return run_grid(progs, cfg, grid, mechs)
 
-    SW.TRACE_COUNTS.clear()
-    SW.DISPATCH_ROWS.clear()
+    SW.reset_counters()
     t0 = time.perf_counter()
     res_grid = grid_call()
     grid_cold_s = time.perf_counter() - t0
@@ -387,10 +386,10 @@ def _bench_grid_ema(quick: bool = False):
     def full_call():
         return run_grid(progs, cfg, grid, mechs, dedup=False)
 
-    SW.DISPATCH_ROWS.clear()
+    SW.reset_counters()
     res_dedup = dedup_call()   # warm both sides before interleaving
     rows_dedup = sum(SW.DISPATCH_ROWS.values())
-    SW.DISPATCH_ROWS.clear()
+    SW.reset_counters()
     res_full = full_call()
     rows_full = sum(SW.DISPATCH_ROWS.values())
 
@@ -483,8 +482,7 @@ def _bench_grid_ivr(quick: bool = False):
     def grid_call():
         return run_grid(progs, cfg, grid, mechs)
 
-    SW.TRACE_COUNTS.clear()
-    SW.DISPATCH_ROWS.clear()
+    SW.reset_counters()
     t0 = time.perf_counter()
     res_grid = grid_call()
     grid_cold_s = time.perf_counter() - t0

@@ -19,6 +19,13 @@ own jit-cached specialized executable (exactly like oracle), and every
 consumer — ``run_grid``, ``suite_metrics``, the DVFS manager — accepts it
 by name or spec with no engine edits.
 
+The ``exec_axes`` declaration is *checked*, not trusted: ``register``
+audits custom specs by default (``repro.analysis.deps`` abstract-evals
+the spec's scan — hooks included — and derives its true axis liveness
+from the jaxpr), so a hook that quietly read ``ax.table_ema`` without
+declaring it would be rejected right here with an AxisLivenessError
+instead of silently broadcasting wrong numbers through the grid dedup.
+
   PYTHONPATH=src python examples/custom_mechanism.py
 """
 from repro.core import estimators as EST

@@ -1,0 +1,48 @@
+"""``repro.analysis`` — static analysis over the sweep substrate.
+
+Two engines, both *advisory at import time and enforcing at dispatch/CI
+time*:
+
+* :mod:`repro.analysis.deps` — the **axis-liveness auditor**. Every
+  registered :class:`~repro.core.mechanisms.MechanismSpec` hand-declares
+  ``exec_axes``, the traced ``SimAxes`` fields its scan genuinely depends
+  on; the sweep layer's grid deduplication broadcasts one scan across
+  every grid point agreeing on those axes. An *under*-declared axis
+  therefore silently broadcasts WRONG results — the worst failure mode a
+  paper reproduction can have. The auditor abstract-evals the mechanism's
+  fork/scan body (``jax.make_jaxpr`` at a tiny static shape; no compile),
+  tags every ``SimAxes``/``PowerAxes`` leaf as a distinct jaxpr input and
+  walks the closed jaxpr — recursing into ``scan``/``cond``/``while``/
+  ``pjit`` sub-jaxprs and custom predict/update hooks — to derive the
+  axes each output channel *actually* depends on, then compares against
+  the declaration: under-declaration is a hard error
+  (:class:`~repro.analysis.deps.AxisLivenessError`), over-declaration a
+  warning naming the dead axis (missed dedup opportunity, visible in
+  ``sweep.DISPATCH_ROWS``).
+
+* :mod:`repro.analysis.lint` — the **trace-hazard linter**. An AST pass
+  over the repo with rules for the failure modes this codebase has
+  actually hit: host syncs on tracers, Python control flow on traced
+  values, ``np.`` in traced code, non-donated scan carries, dict-ordering
+  hazards in pytree construction, and unguarded module-level mutable
+  state reached from dispatch threads (rules ``REPRO001``–``REPRO006``;
+  see ``lint.RULES`` and the README rule table).
+
+Wired in three places: ``mechanisms.register(verify_axes=...)`` audits
+custom specs at registration, ``sweep.run_grid(dedup=True)`` refuses
+under-declared specs before any deduped dispatch, and ``python -m
+repro.analysis --check`` emits a machine-readable report for the CI
+``analysis`` lane. The analysis never runs or perturbs compiled
+executables — ``tests/data/grid_reference.npz`` stays byte-identical.
+"""
+from repro.analysis.deps import (AuditResult, AxisLivenessError,
+                                 DeadAxisWarning, audit_registry,
+                                 axis_liveness, require_dedup_sound,
+                                 verify_spec_axes)
+from repro.analysis.lint import Finding, RULES, lint_paths, lint_source
+
+__all__ = [
+    "AuditResult", "AxisLivenessError", "DeadAxisWarning",
+    "audit_registry", "axis_liveness", "require_dedup_sound",
+    "verify_spec_axes", "Finding", "RULES", "lint_paths", "lint_source",
+]

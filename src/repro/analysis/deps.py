@@ -1,0 +1,365 @@
+"""Axis-liveness auditor: derive each mechanism's TRUE live ``SimAxes``
+from the jaxpr and check the hand-declared ``exec_axes`` against it.
+
+Why this exists
+---------------
+The sweep layer deduplicates grid points per mechanism by its declared
+``MechanismSpec.exec_axes``: points agreeing on a spec's live axes share
+one scan whose trace is broadcast to every member grid key
+(``sweep._exec_classes``). That contract is only sound if the declaration
+*over*-approximates the data flow the compiler actually sees:
+
+* **under-declaration** — an axis the trace reads but the spec omits —
+  makes the dedup broadcast results across grid points that genuinely
+  differ: silently wrong numbers, the worst failure mode for a paper
+  reproduction. The auditor turns this into a hard
+  :class:`AxisLivenessError`.
+* **over-declaration** — a declared axis the trace never touches — only
+  costs dedup opportunity (extra scan rows, quantified by
+  ``sweep.DISPATCH_ROWS``). The auditor emits a :class:`DeadAxisWarning`
+  naming the dead axis.
+
+How it works
+------------
+:func:`axis_liveness` abstract-evals the mechanism's *specialized* scan
+(``simulate._scan_sim`` with the concrete spec — the semantics the grid
+dedup relies on; the engine's dispatch contract makes the shared traced-id
+family value-equal to it) via ``jax.make_jaxpr`` at a tiny static shape:
+pure tracing, no XLA compile, a few hundred ms per spec. Every leaf of the
+``SimAxes`` pytree — including the nested ``PowerAxes`` regime — is passed
+as a distinct jaxpr input tagged with its axis field name, and the closed
+jaxpr is walked bottom-up to propagate, per equation, which tagged inputs
+each output can depend on:
+
+* ``scan`` — fixpoint over the carry (the body matrix is applied until
+  carry dependencies stabilize, so state threaded across epochs — e.g.
+  the PC table carrying ``table_ema`` into later predictions — is
+  captured);
+* ``while`` — carry fixpoint plus the cond predicate's dependencies
+  folded into every output (iteration count is data);
+* ``cond`` — union over branches plus the predicate;
+* ``pjit`` / ``closed_call`` / ``custom_jvp``/``custom_vjp`` / any other
+  higher-order primitive carrying exactly one sub-jaxpr of matching arity
+  — composed through precisely;
+* anything else — conservative: every output depends on every input.
+  (Conservativeness can only create FALSE under-declarations, never hide
+  a real one; a spec hitting such a false positive documents it in
+  ``MechanismSpec.liveness_waiver``.)
+
+Custom ``predict``/``update`` hooks trace into the jaxpr like any other
+code, so a hook that smuggles in an undeclared axis (say a blend weight
+read from ``ax.table_ema``) is caught even though the spec's constructor
+— which only knows the engine-imposed ``_REQUIRED_AXES`` list — cannot
+see it.
+
+Results are cached per ``(spec, static shape)`` (:func:`axis_liveness` is
+``lru_cache``'d; specs are frozen/hashable and hook functions compare by
+identity), so the registration-time check, the ``run_grid`` dispatch
+guard and the CI report all share one trace per spec per process.
+"""
+from __future__ import annotations
+
+import functools
+import warnings
+from dataclasses import dataclass
+from typing import Dict, FrozenSet, List, Optional, Tuple, Union
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+try:  # jax >= 0.4.16 re-exports the stable jaxpr types here
+    from jax.extend.core import ClosedJaxpr, Jaxpr, Literal
+except ImportError:  # pragma: no cover - older jax
+    from jax.core import ClosedJaxpr, Jaxpr, Literal
+
+from repro.core import mechanisms as MECH
+from repro.core import simulate as SIM
+from repro.core import workloads as WL
+from repro.core.mechanisms import MechanismSpec
+from repro.core.simulate import SimConfig
+
+# The audit point: the smallest static shape the engine accepts. Liveness
+# is a property of the trace *structure*, not of array extents, so a
+# 2-CU/2-WF/2-epoch scan over a 4-block program sees exactly the same
+# data-flow graph as a production shape — at ~100x less tracing work.
+TINY_CONFIG = SimConfig(n_cu=2, n_wf=2, n_epochs=2, entries=8,
+                        offset_blocks=1)
+
+
+@functools.lru_cache(maxsize=1)
+def _tiny_program() -> WL.Program:
+    return WL._finalize("audit",
+                        np.linspace(40.0, 80.0, 4),
+                        np.linspace(20.0, 40.0, 4),
+                        np.linspace(0.1, 0.5, 4))
+
+
+class AxisLivenessError(ValueError):
+    """A mechanism's trace depends on an axis its spec does not declare:
+    deduplicated grid dispatch would broadcast wrong results."""
+
+
+class DeadAxisWarning(UserWarning):
+    """A declared exec axis the trace never reads: correct but wasteful
+    (the grid dedup keeps equivalence classes apart for nothing)."""
+
+
+# ---------------------------------------------------------------------------
+# jaxpr dependency walk
+# ---------------------------------------------------------------------------
+#
+# ``_matrix(jaxpr)`` returns, for every output variable of ``jaxpr``, the
+# frozenset of *input positions* it (transitively) depends on. Sub-jaxprs
+# are analyzed once and composed (memoized by object identity within one
+# walk), so a scan body is walked a single time no matter how many
+# fixpoint iterations the carry needs.
+
+_Deps = FrozenSet[int]
+
+
+def _apply(m: _Deps, ind: List[_Deps]) -> _Deps:
+    return frozenset().union(*(ind[i] for i in m)) if m else frozenset()
+
+
+def _sub_closed(params: dict) -> List[ClosedJaxpr]:
+    """The sub-jaxprs an equation carries in its params (pjit's ``jaxpr``,
+    custom_jvp's ``call_jaxpr``, remat's open ``jaxpr``, ...)."""
+    subs = []
+    for v in params.values():
+        if isinstance(v, ClosedJaxpr):
+            subs.append(v)
+        elif isinstance(v, Jaxpr):
+            subs.append(ClosedJaxpr(v, []))
+    return subs
+
+
+def _matrix(jaxpr: Jaxpr, memo: dict) -> List[_Deps]:
+    key = id(jaxpr)
+    if key in memo:
+        return memo[key]
+    env: Dict[object, _Deps] = {}
+    for i, v in enumerate(jaxpr.invars):
+        env[v] = frozenset((i,))
+    for v in jaxpr.constvars:
+        env[v] = frozenset()
+
+    def read(a) -> _Deps:
+        return frozenset() if isinstance(a, Literal) \
+            else env.get(a, frozenset())
+
+    for eqn in jaxpr.eqns:
+        ind = [read(v) for v in eqn.invars]
+        for v, d in zip(eqn.outvars, _eqn_deps(eqn, ind, memo)):
+            env[v] = d
+    res = [read(v) for v in jaxpr.outvars]
+    memo[key] = res
+    return res
+
+
+def _scan_deps(eqn, ind: List[_Deps], memo: dict) -> List[_Deps]:
+    """carry-out/ys deps of ``lax.scan``: fixpoint over the carry (state
+    threaded across iterations accumulates dependencies until stable)."""
+    p = eqn.params
+    mat = _matrix(p["jaxpr"].jaxpr, memo)
+    nc, ncar = p["num_consts"], p["num_carry"]
+    consts, carry, xs = ind[:nc], list(ind[nc:nc + ncar]), ind[nc + ncar:]
+    while True:
+        body_out = [_apply(m, consts + carry + xs) for m in mat]
+        new = [carry[i] | body_out[i] for i in range(ncar)]
+        if new == carry:
+            break
+        carry = new
+    return carry + body_out[ncar:]
+
+
+def _cond_deps(eqn, ind: List[_Deps], memo: dict) -> List[_Deps]:
+    """union over branches; the predicate taints every output."""
+    pred, ops = ind[0], ind[1:]
+    outs: Optional[List[_Deps]] = None
+    for br in eqn.params["branches"]:
+        o = [_apply(m, ops) for m in _matrix(br.jaxpr, memo)]
+        outs = o if outs is None else [a | b for a, b in zip(outs, o)]
+    return [pred | o for o in outs]
+
+
+def _while_deps(eqn, ind: List[_Deps], memo: dict) -> List[_Deps]:
+    """carry fixpoint over the body; the cond predicate (which decides the
+    iteration count, and therefore every value) taints every output."""
+    p = eqn.params
+    cnc, bnc = p["cond_nconsts"], p["body_nconsts"]
+    cmat = _matrix(p["cond_jaxpr"].jaxpr, memo)
+    bmat = _matrix(p["body_jaxpr"].jaxpr, memo)
+    cconsts, bconsts = ind[:cnc], ind[cnc:cnc + bnc]
+    carry = list(ind[cnc + bnc:])
+    while True:
+        out = [_apply(m, bconsts + carry) for m in bmat]
+        new = [carry[i] | out[i] for i in range(len(carry))]
+        if new == carry:
+            break
+        carry = new
+    pd = _apply(cmat[0], cconsts + carry)
+    return [c | pd for c in carry]
+
+
+def _eqn_deps(eqn, ind: List[_Deps], memo: dict) -> List[_Deps]:
+    name = eqn.primitive.name
+    if name == "scan":
+        return _scan_deps(eqn, ind, memo)
+    if name == "cond":
+        return _cond_deps(eqn, ind, memo)
+    if name == "while":
+        return _while_deps(eqn, ind, memo)
+    subs = _sub_closed(eqn.params)
+    if len(subs) == 1 and len(subs[0].jaxpr.invars) == len(ind):
+        # pjit / closed_call / custom_jvp / custom_vjp / remat: compose
+        # through the sub-jaxpr precisely (inputs map positionally)
+        return [_apply(m, ind) for m in _matrix(subs[0].jaxpr, memo)]
+    # unknown structure: conservative — every output taints on every input
+    # (can only create false liveness, never hide real liveness)
+    u = frozenset().union(*ind) if ind else frozenset()
+    return [u] * len(eqn.outvars)
+
+
+# ---------------------------------------------------------------------------
+# The audit
+# ---------------------------------------------------------------------------
+
+
+@dataclass(frozen=True)
+class AuditResult:
+    """Derived-vs-declared liveness for one mechanism."""
+    name: str
+    declared: Tuple[str, ...]                    # spec.exec_axes
+    derived: Tuple[str, ...]                     # union over outputs
+    per_output: Tuple[Tuple[str, Tuple[str, ...]], ...]  # channel -> axes
+    waiver: Optional[str] = None                 # spec.liveness_waiver
+
+    @property
+    def under_declared(self) -> Tuple[str, ...]:
+        """Axes the trace reads but the spec omits (dedup-UNSOUND)."""
+        return tuple(a for a in self.derived if a not in self.declared)
+
+    @property
+    def over_declared(self) -> Tuple[str, ...]:
+        """Declared axes the trace never reads (dedup opportunity lost)."""
+        return tuple(a for a in self.declared if a not in self.derived)
+
+    @property
+    def exact(self) -> bool:
+        return self.declared == self.derived
+
+    @property
+    def sound(self) -> bool:
+        """Safe for deduplicated grid dispatch."""
+        return not self.under_declared or self.waiver is not None
+
+
+def _leaf_axes(ax: SIM.SimAxes) -> List[str]:
+    """Axis field name of every flattened SimAxes leaf, in flatten order
+    (the nested PowerAxes regime contributes one tag — ``power`` — for
+    each of its scalar leaves)."""
+    names: List[str] = []
+    for f, v in zip(ax._fields, ax):
+        names += [f] * len(jax.tree_util.tree_leaves(v))
+    return names
+
+
+@functools.lru_cache(maxsize=256)
+def axis_liveness(mech: Union[str, MechanismSpec],
+                  static_cfg: Optional[SimConfig] = None) -> AuditResult:
+    """Derive the axes each output channel of ``mech``'s scan genuinely
+    depends on, by abstract evaluation at a tiny static shape (no
+    compile). Cached per ``(spec, static)``.
+
+    The audited object is the mechanism's *specialized* trace
+    (``_scan_sim`` with the concrete spec): that is the semantics the
+    grid dedup broadcasts, and — unlike the shared traced-id family,
+    where every estimator is computed and ``jnp.where``-selected, making
+    all axes appear live — it contains exactly the mechanism's own math.
+    """
+    spec = MECH.resolve(mech)
+    cfg = TINY_CONFIG if static_cfg is None else static_cfg
+    st = cfg.static_part()
+    ax = cfg.axes()
+    leaves, treedef = jax.tree_util.tree_flatten(ax)
+    leaf_names = _leaf_axes(ax)
+    prog = _tiny_program()
+
+    def traced(*ax_leaves):
+        axx = jax.tree_util.tree_unflatten(treedef, list(ax_leaves))
+        return SIM._scan_sim(prog, jnp.int32(prog.n_blocks), jnp.int32(0),
+                             st, axx, spec)
+
+    closed, out_shape = jax.make_jaxpr(traced, return_shape=True)(*leaves)
+    mat = _matrix(closed.jaxpr, {})
+    keys = sorted(out_shape)  # dict pytrees flatten in sorted-key order
+    assert len(mat) == len(keys), (len(mat), keys)
+    per_out = {k: frozenset(leaf_names[i] for i in m)
+               for k, m in zip(keys, mat)}
+    derived = frozenset().union(*per_out.values()) if per_out else frozenset()
+
+    def order(s):  # canonical SimAxes field order, like exec_axes
+        return tuple(a for a in MECH.SIM_AXES_FIELDS if a in s)
+
+    return AuditResult(
+        name=spec.name, declared=spec.exec_axes, derived=order(derived),
+        per_output=tuple((k, order(v)) for k, v in sorted(per_out.items())),
+        waiver=spec.liveness_waiver)
+
+
+def verify_spec_axes(mech: Union[str, MechanismSpec],
+                     static_cfg: Optional[SimConfig] = None) -> AuditResult:
+    """Audit ``mech`` and enforce the declaration contract: raise
+    :class:`AxisLivenessError` on under-declaration (unless the spec
+    carries a documented ``liveness_waiver``), warn
+    :class:`DeadAxisWarning` on over-declaration naming the dead axes."""
+    res = axis_liveness(mech, static_cfg)
+    under, over = res.under_declared, res.over_declared
+    if under and res.waiver is None:
+        culprits = [f"  {ch}: depends on {missing}" for ch, axes in
+                    res.per_output
+                    for missing in [tuple(a for a in axes if a in under)]
+                    if missing]
+        raise AxisLivenessError(
+            f"mechanism {res.name!r} UNDER-declares exec_axes: its trace "
+            f"depends on {under} but exec_axes={res.declared} omits "
+            "them. Deduplicated grid dispatch (run_grid(dedup=True)) "
+            "would broadcast one scan across grid points that differ on "
+            "these axes — silently wrong results. Per-channel liveness:\n"
+            + "\n".join(culprits) +
+            f"\nFix: add {under} to the spec's exec_axes (costing only "
+            "dedup opportunity if the auditor over-approximated), or — "
+            "ONLY for a documented false positive of the conservative "
+            "jaxpr walk — set liveness_waiver explaining why.")
+    if under and res.waiver is not None:
+        warnings.warn(
+            f"mechanism {res.name!r} under-declares {under} under waiver: "
+            f"{res.waiver}", DeadAxisWarning, stacklevel=2)
+    if over:
+        warnings.warn(
+            f"mechanism {res.name!r} over-declares exec_axes: {over} "
+            f"is dead in its trace (declared {res.declared}, derived "
+            f"{res.derived}). Correct but wasteful — grid points that "
+            "differ only on a dead axis each get their own scan "
+            "(DISPATCH_ROWS shows the extra rows). Drop the axis from "
+            "exec_axes to let the dedup collapse them.",
+            DeadAxisWarning, stacklevel=2)
+    return res
+
+
+def require_dedup_sound(mech: Union[str, MechanismSpec]) -> None:
+    """Dispatch-time guard for ``run_grid(dedup=True)``: raise
+    :class:`AxisLivenessError` if ``mech``'s trace reads an undeclared
+    axis. Warning-free (over-declaration is flagged at registration/CI,
+    not per dispatch) and cached, so the hot path pays one tiny trace per
+    spec per process."""
+    res = axis_liveness(mech)
+    if not res.sound:
+        verify_spec_axes(mech)  # raises with the full diagnostic
+
+
+def audit_registry(static_cfg: Optional[SimConfig] = None
+                   ) -> List[AuditResult]:
+    """Audit every registered mechanism (the CI report entry point)."""
+    return [axis_liveness(s, static_cfg) for s in MECH.specs()]

@@ -1,0 +1,482 @@
+"""Trace-hazard linter: an AST pass with repo-specific rules for the ways
+JAX code in this codebase can go quietly wrong.
+
+Rules
+-----
+``REPRO001`` **host sync on tracers** — ``float()``/``int()``/``bool()``/
+    ``.item()``/``.tolist()``/``np.asarray()``/``np.array()`` applied to
+    a value inside a traced context. Under ``jit`` these either fail at
+    trace time or (worse, under ``io_callback``-style wrappers) silently
+    synchronize the device per call. Conversions of shape/static values
+    (``int(x.shape[0])``, ``len(...)``) are exempt.
+``REPRO002`` **Python control flow on traced values** — ``if``/``while``/
+    ``assert`` whose test calls into ``jnp``/``lax`` (e.g. ``if
+    jnp.any(mask):``). Inside a trace this raises a
+    ``TracerBoolConversionError`` at best; at worst the branch is taken
+    on the *tracer's* truthiness during tracing and baked into the
+    compiled graph. Use ``jnp.where``/``lax.cond``.
+``REPRO003`` **``np.`` where ``jnp.`` is required** — a ``numpy``
+    computation inside a traced context constant-folds the tracer's
+    *abstract* value or raises; dtype constructors and scalar constants
+    (``np.float32(...)``, ``np.pi``) are exempt, as is ``np.asarray``
+    (reported as REPRO001, the sharper diagnosis).
+``REPRO004`` **non-donated scan carry** — a ``jax.jit``-decorated
+    function that runs ``lax.scan`` but declares no ``donate_argnums``:
+    the caller's carry buffers stay pinned for the whole dispatch (the
+    sweep layer's grid executables donate; see ``sweep._grid_exec``).
+    Advisory — a carry built in-trace has nothing to donate; waive it.
+``REPRO005`` **dict-ordering hazard in pytree construction** — a dict
+    built with non-literal keys (comprehension, ``dict(zip(...))``)
+    inside a traced context. Dict pytrees flatten in *sorted-key* order;
+    two construction sites whose key sets differ — or race — produce
+    structurally different pytrees and silent cache misses or crossed
+    channels.
+``REPRO006`` **unguarded module-level mutable state** — a module-level
+    ``dict``/``list``/``set``/``Counter``/``defaultdict`` mutated
+    somewhere in the module without a surrounding ``with <lock>:`` block.
+    The DVFS service mutates sweep-layer counters from dispatch threads;
+    unlocked read-modify-write increments drop updates.
+
+Traced-context detection is deliberately syntactic and conservative: a
+function is *traced* if it (a) is decorated with ``jit`` (directly or via
+``functools.partial(jax.jit, ...)``), (b) is passed to a JAX transform or
+control-flow combinator (``jit``/``vmap``/``pmap``/``grad``/``scan``/
+``cond``/``while_loop``/``fori_loop``/``switch``/``shard_map``/
+``pallas_call``/``checkpoint``/``remat``/``custom_jvp``/``custom_vjp``),
+(c) is lexically nested inside a traced function, or (d) is a same-module
+function called from a traced function (propagated to a fixpoint). This
+catches the engine's real traced surface (scan bodies, hook functions,
+jitted dispatchers) without pretending to be a type checker.
+
+Waivers
+-------
+Intentional violations carry an inline waiver naming the rule and a
+reason::
+
+    x = float(dbg_val)  # repro: waive[REPRO001] interpret-mode host read
+
+on the flagged line or the line directly above. A file-level waiver
+(``# repro: waive-file[REPRO004] <reason>``, anywhere in the file's first
+comment block) silences a rule for the whole file. Waived findings stay
+in the machine-readable report with ``waived: true`` so CI can count —
+but not fail on — them.
+"""
+from __future__ import annotations
+
+import ast
+import re
+from dataclasses import dataclass, field
+from pathlib import Path
+from typing import Dict, Iterable, List, Optional, Sequence, Set
+
+RULES: Dict[str, str] = {
+    "REPRO001": "host sync on tracer (float()/.item()/np.asarray in "
+                "traced code)",
+    "REPRO002": "Python if/while/assert on a traced value",
+    "REPRO003": "np. computation where jnp. is required in traced code",
+    "REPRO004": "jitted scan without donate_argnums (carry stays pinned)",
+    "REPRO005": "dict with non-literal keys in traced pytree "
+                "construction (sorted-key flatten order hazard)",
+    "REPRO006": "module-level mutable state mutated without a lock",
+}
+
+# JAX transform / control-flow entry points whose function-valued
+# arguments trace (attribute name is enough: jax.jit, lax.scan, ...)
+_TRANSFORMS = {
+    "jit", "vmap", "pmap", "grad", "value_and_grad", "jacfwd", "jacrev",
+    "scan", "cond", "while_loop", "fori_loop", "switch", "associative_scan",
+    "shard_map", "pallas_call", "checkpoint", "remat", "custom_jvp",
+    "custom_vjp", "named_call", "make_jaxpr", "eval_shape",
+}
+
+_HOST_SYNC_CALLS = {"float", "int", "bool", "complex"}
+_HOST_SYNC_METHODS = {"item", "tolist", "__array__"}
+_NP_HOST_FUNCS = {"asarray", "array"}
+# numpy names that are static/constant-producing, fine inside a trace
+_NP_STATIC_OK = {
+    "float32", "float64", "float16", "int32", "int64", "int8", "int16",
+    "uint8", "uint32", "uint64", "bool_", "dtype", "pi", "e", "inf", "nan",
+    "newaxis", "ndim", "shape", "isscalar", "issubdtype", "finfo", "iinfo",
+}
+_MUTATING_METHODS = {
+    "append", "extend", "insert", "add", "update", "setdefault", "pop",
+    "popitem", "remove", "discard", "clear", "subtract",
+}
+_MUTABLE_CTORS = {"dict", "list", "set", "Counter", "OrderedDict",
+                  "defaultdict", "deque"}
+
+_WAIVE_RE = re.compile(r"#\s*repro:\s*waive\[([A-Z0-9, ]+)\]")
+_WAIVE_FILE_RE = re.compile(r"#\s*repro:\s*waive-file\[([A-Z0-9, ]+)\]")
+
+
+@dataclass(frozen=True)
+class Finding:
+    rule: str
+    path: str
+    line: int
+    col: int
+    msg: str
+    context: str = ""          # enclosing function, if any
+    waived: bool = False
+
+    def format(self) -> str:
+        w = " (waived)" if self.waived else ""
+        ctx = f" [{self.context}]" if self.context else ""
+        return f"{self.path}:{self.line}:{self.col}: {self.rule}{w} " \
+               f"{self.msg}{ctx}"
+
+
+def _call_name(node: ast.AST) -> Optional[str]:
+    """Terminal name of a call target: ``jax.jit`` -> ``jit``."""
+    if isinstance(node, ast.Attribute):
+        return node.attr
+    if isinstance(node, ast.Name):
+        return node.id
+    return None
+
+
+def _root_name(node: ast.AST) -> Optional[str]:
+    """Leftmost name of an attribute chain: ``np.linalg.norm`` -> ``np``."""
+    while isinstance(node, ast.Attribute):
+        node = node.value
+    return node.id if isinstance(node, ast.Name) else None
+
+
+def _is_jit_decorator(dec: ast.AST) -> bool:
+    """``@jax.jit``, ``@jit``, ``@functools.partial(jax.jit, ...)``."""
+    if _call_name(dec) == "jit":
+        return True
+    if isinstance(dec, ast.Call):
+        if _call_name(dec.func) == "jit":
+            return True
+        if _call_name(dec.func) == "partial" and dec.args \
+                and _call_name(dec.args[0]) == "jit":
+            return True
+    return False
+
+
+def _decorator_donates(dec: ast.AST) -> bool:
+    if isinstance(dec, ast.Call):
+        return any(kw.arg in ("donate_argnums", "donate_argnames")
+                   for kw in dec.keywords)
+    return False
+
+
+_FUNC_NODES = (ast.FunctionDef, ast.AsyncFunctionDef, ast.Lambda)
+
+
+class _Parents(ast.NodeVisitor):
+    """Annotate every node with its parent (ast has no uplinks)."""
+
+    def __init__(self, tree: ast.AST):
+        self.parent: Dict[ast.AST, Optional[ast.AST]] = {tree: None}
+        self.visit(tree)
+
+    def generic_visit(self, node: ast.AST):
+        for child in ast.iter_child_nodes(node):
+            self.parent[child] = node
+        super().generic_visit(node)
+
+
+def _enclosing_funcs(node: ast.AST, parents: Dict) -> List[ast.AST]:
+    out = []
+    cur = parents.get(node)
+    while cur is not None:
+        if isinstance(cur, _FUNC_NODES):
+            out.append(cur)
+        cur = parents.get(cur)
+    return out
+
+
+def _traced_functions(tree: ast.Module, parents: Dict) -> Set[ast.AST]:
+    """The set of function nodes considered traced (see module doc)."""
+    funcs = [n for n in ast.walk(tree) if isinstance(n, _FUNC_NODES)]
+    by_name: Dict[str, List[ast.AST]] = {}
+    for f in funcs:
+        if not isinstance(f, ast.Lambda):
+            by_name.setdefault(f.name, []).append(f)
+
+    traced: Set[ast.AST] = set()
+    for f in funcs:
+        if not isinstance(f, ast.Lambda) and \
+                any(_is_jit_decorator(d) for d in f.decorator_list):
+            traced.add(f)
+    # functions (by name or inline) passed to a transform
+    for call in ast.walk(tree):
+        if not isinstance(call, ast.Call) or \
+                _call_name(call.func) not in _TRANSFORMS:
+            continue
+        for arg in list(call.args) + [kw.value for kw in call.keywords]:
+            if isinstance(arg, ast.Lambda):
+                traced.add(arg)
+            elif isinstance(arg, ast.Name):
+                traced.update(by_name.get(arg.id, ()))
+
+    # fixpoint: lexical nesting + same-module calls from traced bodies
+    while True:
+        grew = False
+        for f in funcs:
+            if f in traced:
+                continue
+            if any(e in traced for e in _enclosing_funcs(f, parents)):
+                traced.add(f)
+                grew = True
+        for f in list(traced):
+            for call in ast.walk(f):
+                if isinstance(call, ast.Call) and \
+                        isinstance(call.func, ast.Name):
+                    for g in by_name.get(call.func.id, ()):
+                        if g not in traced:
+                            traced.add(g)
+                            grew = True
+        if not grew:
+            return traced
+
+
+def _expr_touches_traced_math(node: ast.AST) -> bool:
+    """Does this expression call into jnp/lax (a traced-value producer)?"""
+    for sub in ast.walk(node):
+        if isinstance(sub, (ast.Call, ast.Attribute)):
+            root = _root_name(sub.func if isinstance(sub, ast.Call) else sub)
+            if root in ("jnp", "lax"):
+                return True
+    return False
+
+
+def _under_lock(node: ast.AST, parents: Dict) -> bool:
+    """Is ``node`` inside a ``with <something lock-like>:`` block?"""
+    cur = parents.get(node)
+    while cur is not None:
+        if isinstance(cur, ast.With):
+            for item in cur.items:
+                for sub in ast.walk(item.context_expr):
+                    if isinstance(sub, (ast.Name, ast.Attribute)):
+                        name = sub.attr if isinstance(sub, ast.Attribute) \
+                            else sub.id
+                        if "lock" in name.lower():
+                            return True
+        cur = parents.get(cur)
+    return False
+
+
+def _fn_label(node: ast.AST, parents: Dict) -> str:
+    encl = _enclosing_funcs(node, parents)
+    names = [f.name for f in reversed(encl) if not isinstance(f, ast.Lambda)]
+    return ".".join(names)
+
+
+@dataclass
+class _FileLint:
+    path: str
+    source: str
+    findings: List[Finding] = field(default_factory=list)
+
+    def __post_init__(self):
+        self.lines = self.source.splitlines()
+        self.tree = ast.parse(self.source, filename=self.path)
+        self.parents = _Parents(self.tree).parent
+        self.traced = _traced_functions(self.tree, self.parents)
+        self.file_waivers: Set[str] = set()
+        for ln in self.lines:
+            m = _WAIVE_FILE_RE.search(ln)
+            if m:
+                self.file_waivers.update(
+                    r.strip() for r in m.group(1).split(","))
+
+    # -- waiver lookup ------------------------------------------------------
+
+    def _line_waivers(self, line: int) -> Set[str]:
+        out: Set[str] = set()
+        for ln in (line, line - 1):
+            if 1 <= ln <= len(self.lines):
+                m = _WAIVE_RE.search(self.lines[ln - 1])
+                if m:
+                    out.update(r.strip() for r in m.group(1).split(","))
+        return out
+
+    def emit(self, rule: str, node: ast.AST, msg: str):
+        waived = rule in self.file_waivers or \
+            rule in self._line_waivers(node.lineno)
+        self.findings.append(Finding(
+            rule, self.path, node.lineno, node.col_offset, msg,
+            context=_fn_label(node, self.parents), waived=waived))
+
+    def in_traced(self, node: ast.AST) -> bool:
+        return any(f in self.traced for f in
+                   _enclosing_funcs(node, self.parents))
+
+    # -- the pass -----------------------------------------------------------
+
+    def run(self) -> List[Finding]:
+        self._module_state_rule()
+        for node in ast.walk(self.tree):
+            if isinstance(node, ast.Call):
+                self._call_rules(node)
+            elif isinstance(node, (ast.If, ast.While, ast.Assert)):
+                self._branch_rule(node)
+            elif isinstance(node, (ast.DictComp, ast.Dict)):
+                self._dict_rule(node)
+            elif isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef)):
+                self._donate_rule(node)
+        return self.findings
+
+    def _call_rules(self, node: ast.Call):
+        traced = self.in_traced(node)
+        fn = node.func
+        # REPRO001: host conversions on (potential) tracers
+        if traced and isinstance(fn, ast.Name) \
+                and fn.id in _HOST_SYNC_CALLS and node.args:
+            arg = node.args[0]
+            src = ast.unparse(arg)
+            if not (isinstance(arg, ast.Constant) or ".shape" in src
+                    or "len(" in src or "ndim" in src):
+                self.emit("REPRO001", node,
+                          f"{fn.id}({src}) forces a host sync if the "
+                          "operand is traced; compute in jnp or hoist "
+                          "out of the jitted path")
+        if traced and isinstance(fn, ast.Attribute) \
+                and fn.attr in _HOST_SYNC_METHODS:
+            self.emit("REPRO001", node,
+                      f".{fn.attr}() on a traced value synchronizes the "
+                      "host; keep device values device-side")
+        if isinstance(fn, ast.Attribute) and _root_name(fn) == "np":
+            if traced and fn.attr in _NP_HOST_FUNCS:
+                self.emit("REPRO001", node,
+                          f"np.{fn.attr}() materializes on host inside "
+                          "traced code; use jnp.asarray (stays abstract)")
+            # REPRO003: numpy compute in traced code
+            elif traced and fn.attr not in _NP_STATIC_OK \
+                    and fn.attr not in _NP_HOST_FUNCS:
+                self.emit("REPRO003", node,
+                          f"np.{fn.attr} in traced code operates on "
+                          "concrete arrays only — use jnp."
+                          f"{fn.attr} so the op traces")
+        # REPRO005 (dict(zip(...)) form)
+        if self.in_traced(node) and isinstance(fn, ast.Name) \
+                and fn.id == "dict" and node.args \
+                and isinstance(node.args[0], ast.Call) \
+                and _call_name(node.args[0].func) == "zip":
+            self.emit("REPRO005", node,
+                      "dict(zip(...)) in traced code builds a pytree "
+                      "whose key set is data-dependent; dict pytrees "
+                      "flatten in sorted-key order — use a literal key "
+                      "set so the treedef is static")
+
+    def _branch_rule(self, node):
+        if not self.in_traced(node):
+            return
+        test = node.test
+        if _expr_touches_traced_math(test):
+            kind = type(node).__name__.lower()
+            self.emit("REPRO002", node,
+                      f"Python {kind} on a jnp/lax expression "
+                      f"({ast.unparse(test)[:60]}): inside a trace this "
+                      "is TracerBoolConversionError at best — use "
+                      "jnp.where / lax.cond")
+
+    def _dict_rule(self, node):
+        if not self.in_traced(node):
+            return
+        if isinstance(node, ast.DictComp):
+            self.emit("REPRO005", node,
+                      "dict comprehension in traced code: the key set "
+                      "(and so the pytree treedef, which flattens "
+                      "sorted) is runtime data — prefer literal keys")
+        elif isinstance(node, ast.Dict):
+            bad = [k for k in node.keys
+                   if k is not None and not isinstance(k, ast.Constant)]
+            if bad:
+                self.emit("REPRO005", node,
+                          f"dict with non-literal key "
+                          f"({ast.unparse(bad[0])}) in traced pytree "
+                          "construction: flatten order is sorted-by-key "
+                          "and must be static")
+
+    def _donate_rule(self, node):
+        jit_decs = [d for d in node.decorator_list if _is_jit_decorator(d)]
+        if not jit_decs or any(_decorator_donates(d) for d in jit_decs):
+            return
+        has_scan = any(
+            isinstance(c, ast.Call) and _call_name(c.func) == "scan"
+            for c in ast.walk(node))
+        if has_scan:
+            self.emit("REPRO004", node,
+                      f"jitted {node.name}() runs lax.scan without "
+                      "donate_argnums: a caller-built carry stays "
+                      "pinned for the whole dispatch (waive if the "
+                      "carry is built in-trace)")
+
+    def _module_state_rule(self):
+        # module-level mutable containers...
+        mutables: Dict[str, ast.AST] = {}
+        for stmt in self.tree.body:
+            targets = []
+            if isinstance(stmt, ast.Assign):
+                targets = stmt.targets
+                value = stmt.value
+            elif isinstance(stmt, ast.AnnAssign) and stmt.value is not None:
+                targets, value = [stmt.target], stmt.value
+            else:
+                continue
+            is_mut = isinstance(value, (ast.Dict, ast.List, ast.Set,
+                                        ast.DictComp, ast.ListComp,
+                                        ast.SetComp)) or (
+                isinstance(value, ast.Call)
+                and _call_name(value.func) in _MUTABLE_CTORS)
+            if not is_mut:
+                continue
+            for t in targets:
+                if isinstance(t, ast.Name):
+                    mutables[t.id] = stmt
+        if not mutables:
+            return
+        # ... mutated anywhere in the module without a lock
+        flagged: Set[str] = set()
+        for node in ast.walk(self.tree):
+            name = None
+            if isinstance(node, ast.Call) \
+                    and isinstance(node.func, ast.Attribute) \
+                    and node.func.attr in _MUTATING_METHODS \
+                    and isinstance(node.func.value, ast.Name):
+                name = node.func.value.id
+            elif isinstance(node, (ast.Assign, ast.AugAssign)):
+                tgts = node.targets if isinstance(node, ast.Assign) \
+                    else [node.target]
+                for t in tgts:
+                    if isinstance(t, ast.Subscript) \
+                            and isinstance(t.value, ast.Name):
+                        name = t.value.id
+            if name in mutables and name not in flagged \
+                    and not _under_lock(node, self.parents):
+                flagged.add(name)
+                self.emit("REPRO006", node,
+                          f"module-level mutable {name!r} mutated "
+                          "without a lock: dispatch threads (DVFSService) "
+                          "make unlocked read-modify-write lose updates "
+                          "— guard with a module Lock or waive if "
+                          "provably single-threaded")
+
+
+def lint_source(source: str, path: str = "<string>") -> List[Finding]:
+    """Lint one source string; returns findings (waived ones included,
+    marked)."""
+    return _FileLint(path, source).run()
+
+
+def lint_paths(paths: Sequence[Path],
+               exclude: Iterable[str] = ()) -> List[Finding]:
+    """Lint ``.py`` files under the given files/directories."""
+    files: List[Path] = []
+    for p in map(Path, paths):
+        files += sorted(p.rglob("*.py")) if p.is_dir() else [p]
+    out: List[Finding] = []
+    for f in files:
+        if any(x in str(f) for x in exclude):
+            continue
+        out += lint_source(f.read_text(), str(f))
+    return out
+
+
+def violations(findings: Iterable[Finding]) -> List[Finding]:
+    """The findings that should fail a check (un-waived)."""
+    return [f for f in findings if not f.waived]

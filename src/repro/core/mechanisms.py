@@ -85,6 +85,7 @@ paper set (the default mechanism suite of ``run_suite``/``run_grid``).
 """
 from __future__ import annotations
 
+import threading
 from dataclasses import dataclass
 from typing import Callable, Dict, Optional, Tuple, Union
 
@@ -139,6 +140,13 @@ class MechanismSpec:
     hit_telemetry: bool = False              # emits the hit_rate channel
     predict: Optional[Callable] = None       # custom predictor hook
     update: Optional[Callable] = None        # custom estimator hook
+    # Documented waiver for a FALSE under-declaration reported by the
+    # axis-liveness auditor (repro.analysis.deps): the conservative jaxpr
+    # walk can over-approximate through exotic primitives. Setting this
+    # downgrades the auditor's hard error to a warning carrying this
+    # text. Never use it to silence a REAL under-declaration — that is
+    # exactly the dedup-unsoundness the auditor exists to prevent.
+    liveness_waiver: Optional[str] = None
 
     def __post_init__(self):
         assert self.family in FAMILIES, \
@@ -219,10 +227,15 @@ class MechanismSpec:
 # ---------------------------------------------------------------------------
 
 _REGISTRY: Dict[str, MechanismSpec] = {}
+# The DVFS service registers/uses mechanisms from dispatch threads; all
+# registry mutations take this lock (reads of individual entries are
+# safe: dict get/set are atomic and specs are immutable values).
+_REG_LOCK = threading.Lock()
 
 
 def register(spec: MechanismSpec, *,
-             allow_override: bool = False) -> MechanismSpec:
+             allow_override: bool = False,
+             verify_axes: Optional[bool] = None) -> MechanismSpec:
     """Add ``spec`` to the registry and return it.
 
     Duplicate names raise unless ``allow_override=True`` (builtins can
@@ -230,6 +243,20 @@ def register(spec: MechanismSpec, *,
     User-registered mechanisms cannot claim a traced id: the traced fork
     family is a closed, bitwise-frozen set; custom mechanisms dispatch as
     their own specialized executable (exactly like oracle does).
+
+    ``verify_axes`` runs the axis-liveness auditor
+    (:func:`repro.analysis.deps.verify_spec_axes`) on the spec before it
+    enters the registry: the spec's scan is abstract-evaled at a tiny
+    static shape (no compile, ~100–400 ms once per spec per process —
+    the result is cached and shared with the ``run_grid`` dispatch
+    guard) and its true axis dependencies are checked against the
+    declared ``exec_axes``. Under-declaration — the dedup-unsound
+    direction — raises :class:`repro.analysis.deps.AxisLivenessError`
+    and the spec is NOT registered; over-declaration warns naming the
+    dead axis. The default (``None``) audits exactly the specs whose
+    declarations are *not* already covered by the test suite: customs
+    (anything outside ``BUILTIN_NAMES``) are verified, builtins —
+    asserted exact in ``tests/test_analysis.py`` — are not re-traced.
 
     Cache note: compiled executables are keyed on the spec value, and
     hook functions compare by identity — re-registering with freshly
@@ -249,14 +276,27 @@ def register(spec: MechanismSpec, *,
             "(they are part of the bitwise dispatch contract)"
         assert spec.family != "oracle", \
             "the oracle family is the builtin fork oracle"
-    _REGISTRY[spec.name] = spec
+    if verify_axes is None:
+        verify_axes = spec.name not in BUILTIN_NAMES
+    if verify_axes:
+        # lazy: mechanisms is the dependency root (simulate imports it);
+        # the auditor imports simulate to trace the scan body
+        from repro.analysis.deps import verify_spec_axes
+        verify_spec_axes(spec)  # raises AxisLivenessError: not registered
+    with _REG_LOCK:
+        if spec.name in _REGISTRY and (
+                not allow_override or spec.name in BUILTIN_NAMES):
+            raise ValueError(
+                f"mechanism {spec.name!r} is already registered")
+        _REGISTRY[spec.name] = spec
     return spec
 
 
 def unregister(name: str) -> None:
     """Remove a user-registered mechanism (builtins are permanent)."""
     assert name not in BUILTIN_NAMES, f"cannot unregister builtin {name!r}"
-    _REGISTRY.pop(name, None)
+    with _REG_LOCK:
+        _REGISTRY.pop(name, None)
 
 
 def get(name: str) -> MechanismSpec:
@@ -353,23 +393,48 @@ for _s in (
     MechanismSpec("oracle", "oracle", _CTRL, traced_id=7,
                   label="fork oracle"),
 ):
+    # repro: waive[REPRO006] import-time builtin registration, no threads yet
     _REGISTRY[_s.name] = _s
 del _s
 
 assert names() == BUILTIN_NAMES
 
 
-def mechanism_table() -> str:
-    """The registry as a markdown table (embedded in the README)."""
-    rows = ["| name | family | traced id | live axes | label |",
-            "|---|---|---|---|---|"]
+def mechanism_table(verify: bool = True) -> str:
+    """The registry as a markdown table (embedded in the README).
+
+    With ``verify=True`` (the default; ``python -m repro.core.mechanisms``
+    uses it) each row's live-axes cell is stamped against the
+    axis-liveness auditor: ``✓`` means the auditor derived *exactly* the
+    declared set from the spec's jaxpr, ``~`` an over-declaration (a
+    declared-but-dead axis), ``waived`` a documented auditor waiver —
+    so the README table is evidence, not just a claim."""
+    marks = {}
+    if verify:
+        from repro.analysis.deps import axis_liveness
+        for s in specs():
+            res = axis_liveness(s)
+            if res.under_declared:
+                marks[s.name] = "waived" if res.waiver else "✗ UNDER"
+            else:
+                marks[s.name] = "✓" if res.exact else "~ over"
+    head = "| name | family | traced id | live axes | verified | label |" \
+        if verify else "| name | family | traced id | live axes | label |"
+    rows = [head, "|---|---|" + "---|" * (head.count("|") - 3)]
     for s in specs():
         tid = "—" if s.traced_id is None else str(s.traced_id)
         axes = ", ".join(a for a in s.exec_axes if a != "n_ep")
-        rows.append(f"| `{s.name}` | {s.family} | {tid} | {axes} "
-                    f"| {s.label} |")
+        cells = [f"`{s.name}`", s.family, tid, axes]
+        if verify:
+            cells.append(marks[s.name])
+        cells.append(s.label)
+        rows.append("| " + " | ".join(cells) + " |")
     return "\n".join(rows)
 
 
 if __name__ == "__main__":
-    print(mechanism_table())
+    # under `python -m` this file is the `__main__` module, a second
+    # instance whose specs the canonical registry (which the auditor
+    # imports) would not recognize — render via the canonical module
+    from repro.core.mechanisms import mechanism_table as _table
+    print(_table())

@@ -9,9 +9,8 @@ hardware table of Table I (128 entries, ~328B/instance).
 """
 from __future__ import annotations
 
-from typing import Dict, NamedTuple, Tuple
+from typing import NamedTuple, Tuple
 
-import jax
 import jax.numpy as jnp
 
 

@@ -81,6 +81,7 @@ import collections
 import dataclasses
 import functools
 import itertools
+import threading
 import warnings
 from typing import Dict, List, Optional, Sequence, Tuple, Union
 
@@ -95,8 +96,8 @@ from repro.core import power as PWR
 from repro.core import simulate as SIM
 from repro.launch.mesh import grid_mesh
 from repro.core.mechanisms import MechanismSpec
-from repro.core.simulate import (MECHANISMS, SimAxes, SimConfig, SimStatic,
-                                 ednp, prediction_accuracy)
+from repro.core.simulate import (MECHANISMS, SimConfig, SimStatic, ednp,
+                                 prediction_accuracy)
 from repro.core.workloads import Program
 
 # Back-compat alias: the SimAxes fields a static-frequency mechanism's
@@ -142,6 +143,21 @@ TRACE_COUNTS: collections.Counter = collections.Counter()
 # ``exec_axes`` make a grid axis dead (e.g. reactive mechanisms on a
 # table_ema-only axis).
 DISPATCH_ROWS: collections.Counter = collections.Counter()
+
+# Counter increments are read-modify-write: the DVFSService dispatches
+# grids from worker threads, so unlocked `+=` would drop updates. Every
+# mutation of the two counters above takes this lock; snapshot reads
+# (``dict(TRACE_COUNTS)``) are safe without it.
+_COUNTER_LOCK = threading.Lock()
+
+
+def reset_counters() -> None:
+    """Zero ``TRACE_COUNTS`` and ``DISPATCH_ROWS`` atomically. Tests and
+    benchmarks use this instead of ad-hoc ``.clear()`` calls so the reset
+    cannot interleave with a concurrent dispatch's increment."""
+    with _COUNTER_LOCK:
+        TRACE_COUNTS.clear()
+        DISPATCH_ROWS.clear()
 
 
 def pad_program(prog: Program, p_max: int) -> Program:
@@ -205,7 +221,8 @@ def _grid_exec(st: SimStatic, n_dev: int,
 
     @functools.partial(jax.jit, donate_argnums=(0,))
     def dispatch(carry0, progs, p_log, axes, seeds, mech_ids):
-        TRACE_COUNTS[family] += 1
+        with _COUNTER_LOCK:  # trace-time side effect; threads dispatch
+            TRACE_COUNTS[family] += 1
 
         def shard_fn(carry0_s, progs_s, p_log_s, axes_s, seeds_s,
                      mech_ids_s):
@@ -314,7 +331,8 @@ def _run_family(st: SimStatic, n_dev: int,
     """Dispatch one executable family over pre-flattened grid operands."""
     progs_flat, p_log_flat, axes_flat, n_flat = operands
     family = "grid_forks" if mechanism is None else f"grid_{mechanism.name}"
-    DISPATCH_ROWS[family] += n_flat * max(int(mech_ids.shape[0]), 1)
+    with _COUNTER_LOCK:
+        DISPATCH_ROWS[family] += n_flat * max(int(mech_ids.shape[0]), 1)
     # the initial scan carry is rebuilt per dispatch: it is donated to the
     # executable, which invalidates its buffers
     carry0 = _carry_builder(st)(p_log_flat)
@@ -433,6 +451,16 @@ def run_grid(programs: Union[Dict[str, Program], Sequence[Program]],
         names_w = [p.name for p in progs]
     assert progs, "run_grid needs at least one program"
     specs = [MECH.resolve(m) for m in mechanisms]
+    if dedup:
+        # Refuse under-declared specs BEFORE any dispatch: dedup
+        # broadcasts one scan across every grid point agreeing on a
+        # spec's declared live axes, so a trace reading an undeclared
+        # axis would get silently wrong results. The audit (a tiny
+        # make_jaxpr, no compile) is cached per spec per process —
+        # builtins and repeat grids pay nothing after the first call.
+        from repro.analysis.deps import require_dedup_sound
+        for s in specs:
+            require_dedup_sound(s)
     assert static_cfg.n_cu % static_cfg.cus_per_domain == 0
     axis_names, points = _grid_points(axes_grid)
     keys = [tuple(p[n] for n in axis_names) for p in points]

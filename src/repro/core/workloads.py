@@ -21,7 +21,7 @@ FwdSoft L2-thrash coupling, ...).
 from __future__ import annotations
 
 from dataclasses import dataclass
-from typing import Dict, List, Tuple
+from typing import Dict, Tuple
 
 import jax
 import jax.numpy as jnp

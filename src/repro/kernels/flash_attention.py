@@ -11,7 +11,6 @@ Validated in interpret mode against ``repro.kernels.ref.attention_ref``.
 from __future__ import annotations
 
 import functools
-from typing import Optional
 
 import jax
 import jax.numpy as jnp

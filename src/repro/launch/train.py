@@ -13,11 +13,9 @@ DVFS telemetry (simulated per-device frequency schedule + energy report).
 from __future__ import annotations
 
 import argparse
-import dataclasses
 import time
 
 import jax
-import numpy as np
 
 from repro.configs import TRAIN_4K, get_config, get_smoke_config
 from repro.configs.base import ShapeConfig, TrainConfig

@@ -10,9 +10,6 @@ materialized only per (q-block × kv) tile, never (S × S).
 """
 from __future__ import annotations
 
-import functools
-from typing import Optional, Tuple
-
 import jax
 import jax.numpy as jnp
 from jax import lax

@@ -14,13 +14,13 @@ a spec from the leaf's path name + shape, so new params pick up rules by name.
 """
 from __future__ import annotations
 
-from typing import Any, Dict, Tuple
+from typing import Any, Dict
 
 import jax
 import numpy as np
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
-from repro.configs.base import ModelConfig, ShapeConfig
+from repro.configs.base import ModelConfig
 
 
 def _axis_size(mesh_axes: Dict[str, int], name) -> int:

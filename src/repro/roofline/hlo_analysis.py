@@ -17,7 +17,6 @@ This gives per-device totals (the module is the per-device SPMD program).
 """
 from __future__ import annotations
 
-import json
 import re
 from dataclasses import dataclass, field
 from typing import Dict, List, Tuple

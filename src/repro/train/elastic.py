@@ -15,7 +15,7 @@ testable and the dry-run can exercise every re-mesh transition.
 from __future__ import annotations
 
 from dataclasses import dataclass, field
-from typing import List, Optional
+from typing import List
 
 
 @dataclass

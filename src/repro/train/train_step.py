@@ -11,7 +11,6 @@ State is a plain dict so spec trees mirror it trivially.
 """
 from __future__ import annotations
 
-import functools
 from typing import Any, Dict, Tuple
 
 import jax

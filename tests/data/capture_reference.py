@@ -21,7 +21,7 @@ import jax
 import numpy as np
 
 from repro.core.simulate import MECHANISMS, SimConfig
-from repro.core.sweep import run_grid, run_suite
+from repro.core.sweep import run_grid
 
 OUT = Path(__file__).resolve().parent / "grid_reference.npz"
 SIM = SimConfig(n_cu=16, n_wf=12, n_epochs=48)

@@ -1,0 +1,349 @@
+"""Tests for ``repro.analysis``: the jaxpr axis-liveness auditor (every
+builtin's declared ``exec_axes`` must be *derived*, not trusted; deliberate
+under-/over-declared mutants must be caught at registration AND at
+``run_grid(dedup=True)`` dispatch) and the trace-hazard linter (each rule
+REPRO001–006 fires on a minimal synthetic snippet, stays quiet on the
+clean variant, and honors waivers). Plus the wiring: the verified
+mechanism table and the machine-readable report the CI lane consumes."""
+import textwrap
+
+import pytest
+
+from repro.analysis import deps, lint, report
+from repro.analysis.deps import (AxisLivenessError, DeadAxisWarning,
+                                 axis_liveness, verify_spec_axes)
+from repro.core import mechanisms as MECH
+from repro.core import simulate as SIM
+from repro.core.mechanisms import MechanismSpec
+
+CTRL = ("epoch_us", "sigma", "cap_per_ghz", "membw", "obj", "n_ep", "power")
+
+
+def _sneaky_predict(carry, ctx, st, ax):
+    # reads table_ema without declaring it — the dedup-unsound direction
+    i0 = carry.react_i0 * (1.0 + 0.1 * ax.table_ema)
+    return SIM.predict_instr(i0, carry.react_sens, st, ax)
+
+
+def _honest_predict(carry, ctx, st, ax):
+    return SIM.predict_instr(carry.react_i0, carry.react_sens, st, ax)
+
+
+# ---------------------------------------------------------------------------
+# Axis-liveness auditor
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("name", MECH.BUILTIN_NAMES)
+def test_builtin_declarations_are_derived_exactly(name):
+    """THE acceptance criterion: for every builtin, the auditor's derived
+    liveness equals the hand-declared exec_axes exactly — no waivers, no
+    under- or over-declaration anywhere in the paper set."""
+    res = axis_liveness(name)
+    assert res.waiver is None
+    assert res.exact, (
+        f"{name}: declared={res.declared} derived={res.derived} "
+        f"under={res.under_declared} over={res.over_declared}")
+    # and the union really is per-output: every channel's axes are a
+    # subset of the derived set and at least one channel is non-empty
+    assert res.per_output
+    for ch, axes in res.per_output:
+        assert set(axes) <= set(res.derived), (ch, axes)
+
+
+def test_under_declared_mutant_rejected_at_registration():
+    """A custom hook smuggling in an undeclared axis must be rejected by
+    the default registration-time audit, with the culprit axis named, and
+    must NOT end up in the registry."""
+    spec = MechanismSpec("mut_under", "reactive", CTRL,
+                         predict=_sneaky_predict)
+    with pytest.raises(AxisLivenessError, match="table_ema"):
+        MECH.register(spec)
+    assert "mut_under" not in MECH.names()
+    # the diagnostic names at least one output channel it flows into
+    res = axis_liveness(spec)
+    assert res.under_declared == ("table_ema",)
+    assert not res.sound
+    assert any("table_ema" in axes for _, axes in res.per_output)
+
+
+def test_under_declared_mutant_refused_by_run_grid(progs_one):
+    """Even a spec that dodged the registration audit (verify_axes=False)
+    is refused by run_grid(dedup=True) BEFORE any deduped dispatch —
+    and runs fine with dedup=False, where no broadcast can lie."""
+    from repro.core.sweep import run_grid
+    spec = MechanismSpec("mut_under2", "reactive", CTRL,
+                         predict=_sneaky_predict)
+    MECH.register(spec, verify_axes=False)
+    try:
+        cfg = SIM.SimConfig(n_cu=4, n_wf=4, n_epochs=8)
+        grid = {"table_ema": [0.3, 0.5]}
+        with pytest.raises(AxisLivenessError, match="table_ema"):
+            run_grid(progs_one, cfg, grid, ("mut_under2",))
+        res = run_grid(progs_one, cfg, grid, ("mut_under2",), dedup=False)
+        assert len(res) == 2
+    finally:
+        MECH.unregister("mut_under2")
+
+
+def test_over_declared_mutant_warns_naming_dead_axis():
+    """Over-declaration is correct-but-wasteful: registration succeeds
+    with a DeadAxisWarning naming the dead axis."""
+    spec = MechanismSpec("mut_over", "reactive", CTRL + ("table_ema",),
+                         predict=_honest_predict)
+    with pytest.warns(DeadAxisWarning, match="table_ema"):
+        MECH.register(spec)
+    try:
+        assert "mut_over" in MECH.names()
+        res = axis_liveness(spec)
+        assert res.over_declared == ("table_ema",)
+        assert res.sound  # over-declaration never breaks the dedup
+    finally:
+        MECH.unregister("mut_over")
+
+
+def test_waiver_downgrades_under_declaration():
+    """A documented liveness_waiver turns the hard error into a warning
+    carrying the waiver text (for auditor false positives only)."""
+    spec = MechanismSpec("mut_waived", "reactive", CTRL,
+                         predict=_sneaky_predict,
+                         liveness_waiver="test: deliberate mutant")
+    with pytest.warns(DeadAxisWarning, match="deliberate mutant"):
+        res = verify_spec_axes(spec)
+    assert res.under_declared == ("table_ema",)
+    assert res.sound  # waived => dispatchable
+
+
+def test_audit_registry_covers_all_builtins():
+    results = deps.audit_registry()
+    assert {r.name for r in results} >= set(MECH.BUILTIN_NAMES)
+    assert all(r.sound for r in results)
+
+
+def test_mechanism_table_has_verified_column():
+    table = MECH.mechanism_table()
+    assert "| verified |" in table
+    # every builtin row is ✓ (exact) — the README table is evidence
+    rows = [r for r in table.splitlines() if r.startswith("| `")]
+    assert len(rows) >= len(MECH.BUILTIN_NAMES)
+    for name in MECH.BUILTIN_NAMES:
+        row = next(r for r in rows if f"`{name}`" in r)
+        assert "✓" in row, row
+    # the unverified variant still renders (no tracing)
+    assert "| verified |" not in MECH.mechanism_table(verify=False)
+
+
+@pytest.fixture(scope="module")
+def progs_one():
+    from repro.core.workloads import get_workload
+    return {"comd": get_workload("comd", P=128)}
+
+
+# ---------------------------------------------------------------------------
+# Trace-hazard linter
+# ---------------------------------------------------------------------------
+
+
+def _rules(src):
+    return sorted({f.rule for f in lint.lint_source(textwrap.dedent(src))
+                   if not f.waived})
+
+
+def test_repro001_host_sync_in_jitted_fn():
+    src = """
+    import jax, numpy as np
+    @jax.jit
+    def f(x):
+        return float(x) + np.asarray(x).sum() + x.item()
+    """
+    assert _rules(src) == ["REPRO001"]
+    # shape reads are static — exempt
+    assert _rules("""
+    import jax
+    @jax.jit
+    def f(x):
+        return int(x.shape[0])
+    """) == []
+
+
+def test_repro002_python_branch_on_traced_value():
+    src = """
+    import jax, jax.numpy as jnp
+    @jax.jit
+    def f(x):
+        if jnp.any(x > 0):
+            return x
+        return -x
+    """
+    assert _rules(src) == ["REPRO002"]
+    # plain-python condition in untraced code: quiet
+    assert _rules("""
+    def g(n):
+        if n > 0:
+            return n
+    """) == []
+
+
+def test_repro003_numpy_in_traced_code():
+    src = """
+    import jax, numpy as np
+    @jax.jit
+    def f(x):
+        return np.tanh(x)
+    """
+    assert _rules(src) == ["REPRO003"]
+    # dtype constructors / constants are exempt
+    assert _rules("""
+    import jax, numpy as np
+    @jax.jit
+    def f(x):
+        return x * np.float32(2.0) + np.pi
+    """) == []
+
+
+def test_repro004_jitted_scan_without_donation():
+    src = """
+    import jax
+    from jax import lax
+    @jax.jit
+    def f(carry, xs):
+        return lax.scan(lambda c, x: (c + x, c), carry, xs)
+    """
+    assert _rules(src) == ["REPRO004"]
+    assert _rules("""
+    import functools, jax
+    from jax import lax
+    @functools.partial(jax.jit, donate_argnums=(0,))
+    def f(carry, xs):
+        return lax.scan(lambda c, x: (c + x, c), carry, xs)
+    """) == []
+
+
+def test_repro005_dict_ordering_hazards():
+    src = """
+    import jax
+    @jax.jit
+    def f(x, keys):
+        return {k: x for k in keys}
+    """
+    assert _rules(src) == ["REPRO005"]
+    assert "REPRO005" in _rules("""
+    import jax
+    @jax.jit
+    def f(x, names):
+        return dict(zip(names, [x, x]))
+    """)
+    # literal keys are a static treedef: quiet
+    assert _rules("""
+    import jax
+    @jax.jit
+    def f(x):
+        return {"a": x, "b": -x}
+    """) == []
+
+
+def test_repro006_unlocked_module_state():
+    src = """
+    COUNTS = {}
+    def bump(k):
+        COUNTS[k] = COUNTS.get(k, 0) + 1
+    """
+    assert _rules(src) == ["REPRO006"]
+    # guarded by a lock: quiet
+    assert _rules("""
+    import threading
+    COUNTS = {}
+    _LOCK = threading.Lock()
+    def bump(k):
+        with _LOCK:
+            COUNTS[k] = COUNTS.get(k, 0) + 1
+    """) == []
+
+
+def test_traced_context_propagates_through_local_calls():
+    """A helper called from a jitted function is traced too (fixpoint
+    propagation), even without its own decorator."""
+    src = """
+    import jax, numpy as np
+    def helper(x):
+        return np.tanh(x)
+    @jax.jit
+    def f(x):
+        return helper(x)
+    """
+    assert _rules(src) == ["REPRO003"]
+
+
+def test_scan_body_lambda_is_traced():
+    src = """
+    import numpy as np
+    from jax import lax
+    def run(xs):
+        return lax.scan(lambda c, x: (c, np.log(x)), 0.0, xs)
+    """
+    assert _rules(src) == ["REPRO003"]
+
+
+def test_waivers_line_and_file():
+    line = """
+    import jax
+    @jax.jit
+    def f(x):
+        return float(x)  # repro: waive[REPRO001] test waiver
+    """
+    findings = lint.lint_source(textwrap.dedent(line))
+    assert [f.rule for f in findings] == ["REPRO001"]
+    assert findings[0].waived
+    filewide = """
+    # repro: waive-file[REPRO006] single-threaded module
+    STATE = {}
+    def bump(k):
+        STATE[k] = 1
+    """
+    findings = lint.lint_source(textwrap.dedent(filewide))
+    assert all(f.waived for f in findings)
+    assert lint.violations(findings) == []
+
+
+def test_lint_rules_table_is_complete():
+    assert sorted(lint.RULES) == [f"REPRO00{i}" for i in range(1, 7)]
+
+
+# ---------------------------------------------------------------------------
+# Report / CI wiring
+# ---------------------------------------------------------------------------
+
+
+def test_report_schema_and_ok():
+    rep = report.build_report()
+    assert rep["schema"] == 1
+    names = {r["name"] for r in rep["liveness"]["results"]}
+    assert names >= set(MECH.BUILTIN_NAMES)
+    assert rep["liveness"]["unsound"] == []
+    # the shipped tree must be lint-clean modulo waivers — this IS the CI
+    # gate, asserted here so tier-1 catches regressions before the lane
+    assert rep["lint"]["violations"] == 0, rep["lint"]["findings"]
+    assert rep["ok"]
+    # JSON-serializable end to end
+    assert "liveness" in report.to_json(rep)
+    assert "OK" in report.render_text(rep)
+
+
+def test_source_tree_has_no_unwaived_findings():
+    from pathlib import Path
+    root = Path(__file__).resolve().parents[1]
+    findings = lint.lint_paths([root / "src" / "repro"])
+    assert lint.violations(findings) == [], \
+        [f.format() for f in lint.violations(findings)]
+
+
+def test_audit_never_perturbs_reference_numerics():
+    """The auditor only abstract-evals: running it must not change the
+    grid reference contract (byte-identity is asserted by test_grid's
+    reference comparison; here we pin that the audit compiles nothing
+    new into the sweep dispatch families)."""
+    from repro.core import sweep as SW
+    SW.reset_counters()
+    deps.audit_registry()
+    assert dict(SW.TRACE_COUNTS) == {}
+    assert dict(SW.DISPATCH_ROWS) == {}

@@ -62,7 +62,7 @@ def test_grid_fork_family_executable_count(progs):
     compiled *inside this test* — a cached fixture grid would make the
     count vacuous."""
     sim = dataclasses.replace(SIM, n_cu=8)
-    SW.TRACE_COUNTS.clear()
+    SW.reset_counters()
     run_grid(progs, sim, GRID_2X2, MECHS)
     fork_traces = {k: v for k, v in SW.TRACE_COUNTS.items()
                    if k in ("grid_forks", "grid_oracle")}
@@ -81,8 +81,7 @@ def test_static_mech_dedup_rows_and_broadcast(progs):
     grid = {"epoch_us": [1.0, 10.0],
             "objective": ["ed2p", "edp", "perfcap05"]}
     W, G, C = len(WORKLOADS), 6, 2
-    SW.TRACE_COUNTS.clear()
-    SW.DISPATCH_ROWS.clear()
+    SW.reset_counters()
     res = run_grid(progs, sim, grid, ("static17", "pcstall"))
     assert SW.DISPATCH_ROWS["grid_forks"] == W * G
     assert SW.DISPATCH_ROWS["grid_static17"] == W * C   # deduped rows
@@ -112,7 +111,7 @@ def test_static_dedup_coupled_epoch_counts(progs):
     slices its logical prefix."""
     points = [{"epoch_us": 1.0, "n_epochs": 24, "objective": "ed2p"},
               {"epoch_us": 1.0, "n_epochs": 48, "objective": "edp"}]
-    SW.DISPATCH_ROWS.clear()
+    SW.reset_counters()
     res = run_grid(progs, SIM, points, ("static17",))
     assert SW.DISPATCH_ROWS["grid_static17"] == len(WORKLOADS)  # one class
     for pt in points:

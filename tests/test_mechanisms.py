@@ -210,15 +210,19 @@ def test_duplicate_and_reserved_registration():
     with pytest.raises(AssertionError, match="cannot unregister builtin"):
         MECH.unregister("oracle")
     # user registrations CAN be replaced with allow_override, and removed
+    # (verify_axes=False: the dummy hook is never meant to trace — the
+    # registration-time audit would otherwise abstract-eval it)
     try:
         MECH.register(MechanismSpec("tmp_dup", "reactive", FULL_AXES,
-                                    predict=lambda *a: None))
+                                    predict=lambda *a: None),
+                      verify_axes=False)
         with pytest.raises(ValueError, match="already registered"):
             MECH.register(MechanismSpec("tmp_dup", "reactive", FULL_AXES,
-                                        predict=lambda *a: None))
+                                        predict=lambda *a: None),
+                          verify_axes=False)
         MECH.register(MechanismSpec("tmp_dup", "reactive", FULL_AXES,
                                     predict=lambda *a: None),
-                      allow_override=True)
+                      allow_override=True, verify_axes=False)
     finally:
         MECH.unregister("tmp_dup")
     assert "tmp_dup" not in MECH.names()
@@ -296,7 +300,7 @@ def test_reactive_dedup_on_table_ema_axis(progs):
     sim = dataclasses.replace(SIM, n_cu=12)  # SimStatic unique to this test
     grid = {"table_ema": [0.3, 0.5, 0.7]}
     W, G = len(WORKLOADS), 3
-    SW.DISPATCH_ROWS.clear()
+    SW.reset_counters()
     res = run_grid(progs, sim, grid, ("crisp", "accreac", "pcstall",
                                       "oracle"))
     # reactive group: W x 1 class x 2 mechs; pc group: W x G x 1 mech
@@ -334,7 +338,7 @@ def test_dedup_flag_disables_collapsing(progs):
     grid = {"table_ema": [0.3, 0.5]}
     W, G = len(WORKLOADS), 2
     a = run_grid(progs, sim, grid, ("crisp",))
-    SW.DISPATCH_ROWS.clear()
+    SW.reset_counters()
     b = run_grid(progs, sim, grid, ("crisp",), dedup=False)
     assert SW.DISPATCH_ROWS["grid_forks"] == W * G
     for key in a:
@@ -384,7 +388,7 @@ def test_custom_mechanism_through_engine_and_grid(progs):
         # a real prediction: finite nonneg error, mechanism actually picks
         # varied frequencies once warmed up
         assert np.unique(tr["fidx"]).size > 1
-        SW.DISPATCH_ROWS.clear()
+        SW.reset_counters()
         grid = run_grid(progs, SIM, {"table_ema": [0.3, 0.5]},
                         ("toy_blend",))
         # table-free by declaration: one class, rows not multiplied

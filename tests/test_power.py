@@ -172,13 +172,13 @@ def test_power_axis_splits_dedup_rows(progs):
     sim = dataclasses.replace(SIM, n_cu=12, n_wf=8, n_epochs=24)
     pws = [PowerConfig(), PowerConfig(lat_per_us=4e-1)]
     W = len(WORKLOADS)
-    SW.DISPATCH_ROWS.clear()
+    SW.reset_counters()
     run_grid(progs, sim, {"power": pws, "objective": ["ed2p", "edp"]},
              ("static17", "crisp", "pcstall"))
     # static: 2 power classes (objective dead); fork mechs: all 4 points
     assert SW.DISPATCH_ROWS["grid_static17"] == W * 2
     assert SW.DISPATCH_ROWS["grid_forks"] == W * 4 * 2
-    SW.DISPATCH_ROWS.clear()
+    SW.reset_counters()
     res = run_grid(progs, sim, {"power": pws, "table_ema": [0.3, 0.5]},
                    ("crisp", "pcstall"))
     # crisp: table_ema dead -> 2 power classes; pcstall: all 4 points
@@ -266,7 +266,7 @@ def test_ivr_regime_grid_two_fork_family_compiles(progs):
                PowerConfig(lat_per_us=4e-2),       # 40ns @ 1us
                PowerConfig(lat_per_us=4e-1)]       # 400ns @ 1us
     grid_axes = {"power": regimes, "epoch_us": [1.0, 10.0]}
-    SW.TRACE_COUNTS.clear()
+    SW.reset_counters()
     res = run_grid(progs, sim, grid_axes, ("crisp", "pcstall", "oracle"))
     fork_compiles = sum(v for k, v in SW.TRACE_COUNTS.items()
                         if k in ("grid_forks", "grid_oracle"))

@@ -1,6 +1,5 @@
 """Substrate tests: data pipeline determinism, checkpoint/restore +
 fault-tolerant resume, optimizer, elastic policies, sharding specs."""
-import dataclasses
 import tempfile
 
 import jax
@@ -9,7 +8,7 @@ import numpy as np
 import pytest
 
 from repro.configs import ARCH_IDS, get_config, get_smoke_config
-from repro.configs.base import ShapeConfig, TrainConfig, shapes_for
+from repro.configs.base import ShapeConfig, TrainConfig
 from repro.data.pipeline import make_batch
 from repro.models import sharding as shard
 from repro.optim import adamw
