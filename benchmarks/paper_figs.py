@@ -26,6 +26,9 @@ Figures:
   tab01   hardware table overhead
   fig_ivr_regime  ED2P vs IVR transition-latency regime x epoch length
                   (the power axis: one run_grid over PowerConfig points)
+  fig_learned     learned predictors (trained on oracle traces) vs
+                  PCSTALL vs reactive vs oracle over all Table II
+                  workloads, half of them held out from training
 """
 from __future__ import annotations
 
@@ -325,6 +328,80 @@ def fig_ivr_regime() -> Dict:
     return _cache("fig_ivr_regime", run)
 
 
+def fig_learned() -> Dict:
+    """Learned predictors vs PCSTALL vs reactive vs oracle (the ROADMAP's
+    learned-predictor item; the Ilager et al. arXiv:2004.08177 line).
+
+    Trains both heads on the ``repro.learn`` factory dataset — 8 of the
+    16 Table II workloads x 2 seeds x {1, 10} us granularities, oracle
+    choices as labels — freezes + registers them as ``family='pc'``
+    specs, and deploys them over ALL 16 workloads at the training shape.
+    The other 8 workloads never appear in training, so the
+    ``*_heldout`` aggregates are honestly out-of-sample. Reports
+    per-epoch frequency-choice agreement with the oracle's deployed
+    trace (the predict-don't-react headline metric), prediction accuracy
+    and its delta vs PCSTALL, and ED2P vs static 1.7."""
+    def run():
+        from repro.core.workloads import WORKLOAD_TABLE
+        from repro.learn import dataset as LDS
+        from repro.learn import mechanism as LMECH
+        from repro.learn import train as LTR
+        dcfg = LDS.DatasetConfig()
+        data, meta = LDS.generate_dataset(dcfg)
+        _, val_mask = LDS.split_masks(data)
+        out: Dict = {"train": {
+            "runs": len(meta["runs"]), "rows": int(data["x"].shape[0]),
+            "reactive_choice_acc_val":
+                LTR.reactive_choice_baseline(data, meta, val_mask)}}
+        mechs = ["static17", "crisp", "pcstall"]
+        learned = []
+        for kind, steps, name in (("linear", 600, "learned_lin"),
+                                  ("mlp", 900, "learned_mlp")):
+            params, curves = LTR.fit(data, meta, kind=kind, steps=steps)
+            LMECH.register_learned(name, params, allow_override=True)
+            learned.append(name)
+            mechs.append(name)
+            out["train"][name] = {
+                "first_loss": curves["probe"][0],
+                "final_loss": curves["probe"][-1],
+                "val_mse": curves.get("val_mse"),
+                "val_choice_acc": curves.get("val_choice_acc")}
+        mechs.append("oracle")
+        try:
+            wls = list(WORKLOAD_TABLE)
+            sim = dataclasses.replace(dcfg.sim(), n_epochs=400)
+            grid = run_suite(_progs(wls), sim, tuple(mechs))
+            warm = 50
+            agree = {m: {w: float(np.mean(
+                grid[w][m]["fidx"][warm:] == grid[w]["oracle"]["fidx"][warm:]))
+                for w in wls} for m in mechs if m != "oracle"}
+            heldout = [w for w in wls if w not in dcfg.workloads]
+            out["choice_agreement"] = agree
+            out["choice_agreement_mean"] = {
+                m: float(np.mean(list(v.values())))
+                for m, v in agree.items()}
+            out["choice_agreement_heldout"] = {
+                m: float(np.mean([v[w] for w in heldout]))
+                for m, v in agree.items()}
+            r = suite_metrics(None, sim, tuple(mechs), n=2, traces=grid)
+            gm = lambda m, ws: float(np.exp(np.mean(
+                [np.log(r[w][m]["ednp_norm"]) for w in ws])))
+            out["ed2p_geomean"] = {m: gm(m, wls) for m in mechs
+                                   if m != "static17"}
+            out["ed2p_geomean_heldout"] = {m: gm(m, heldout) for m in mechs
+                                           if m != "static17"}
+            acc = {m: float(np.mean([r[w][m]["accuracy"] for w in wls]))
+                   for m in mechs if m != "static17"}
+            out["accuracy_mean"] = acc
+            out["accuracy_delta_vs_pcstall"] = {
+                m: acc[m] - acc["pcstall"] for m in learned}
+        finally:
+            for name in learned:
+                MECH.unregister(name)
+        return out
+    return _cache("fig_learned", run)
+
+
 def tab01_overhead() -> Dict:
     """Hardware storage overhead of PCSTALL (paper Table I)."""
     entries, wf = 128, 40
@@ -348,6 +425,7 @@ ALL_FIGS = {
     "fig18a_energy_caps": fig18a_energy_caps,
     "fig18b_granularity": fig18b_granularity,
     "fig_ivr_regime": fig_ivr_regime,
+    "fig_learned": fig_learned,
     "tab01_overhead": tab01_overhead,
 }
 

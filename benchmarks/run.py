@@ -19,7 +19,10 @@ the grid_ivr benchmark sweeps whole IVR/hardware regimes (the traced
 the serve_stream benchmark drives a trace-driven request stream through
 the live ``DVFSService`` (sustained jobs/sec + p99 dispatch latency,
 <= 2 fork-family compiles asserted, streamed rows bitwise vs the one-shot
-``run_grid`` loop, plus forced 1-/2-device subprocess arms in full mode).
+``run_grid`` loop, plus forced 1-/2-device subprocess arms in full mode),
+and the learn benchmark times the learned-predictor pipeline end to end
+(run_grid labeled-data factory, jit AdamW step, frozen-spec deployment on
+held-out workloads with interleaved learned-vs-pcstall dispatch timings).
 Results are also written to ``BENCH_sweep.json`` at the repo root so the
 speedups are recorded in the repo's perf trajectory.
 
@@ -764,6 +767,167 @@ def _bench_serve_stream(quick: bool = False):
     return rows, record
 
 
+def _bench_learn(quick: bool = False):
+    """Learned-predictor pipeline: the run_grid labeled-data factory, the
+    AdamW fit, and frozen-spec deployment through the unmodified grid
+    dispatch.
+
+    Two records. ``learn_train``: dataset-factory wall time and rows/s,
+    the jit train step's compile vs steady time, and the fit's final/val
+    losses plus offline frequency-choice accuracy against the reactive
+    baseline on the val split. ``learn_eval``: deployed per-epoch
+    frequency-choice agreement with oracle on workloads HELD OUT from
+    training (learned heads vs the crisp reactive baseline and PCSTALL),
+    prediction-accuracy delta vs PCSTALL, ED2P vs static 1.7, and
+    interleaved A/B/A/B dispatch timings (min per side, bench-box
+    protocol) of the learned spec against the builtin pcstall it rides
+    beside — the ParamHook path must not tax the grid dispatch. The
+    learned spec's fork-compile bound and dedup row accounting are
+    asserted, not assumed. Returns (rows, (train_record, eval_record))."""
+    import jax
+    import jax.numpy as jnp
+    import numpy as np
+    from repro.core import sweep as SW
+    from repro.core.simulate import SimConfig
+    from repro.core.sweep import run_suite, suite_metrics
+    from repro.core.workloads import get_workload
+    from repro.learn import dataset as LDS
+    from repro.learn import mechanism as LMECH
+    from repro.learn import models as LM
+    from repro.learn import train as LTR
+
+    if quick:
+        dcfg = LDS.DatasetConfig(workloads=("comd", "xsbench"), seeds=(0,),
+                                 epoch_us=(1.0,), n_cu=8, n_epochs=64,
+                                 warmup=8, val_frac=0.5)
+        steps, kinds, eval_wls, eval_ep, reps = \
+            40, ("linear",), ["lulesh", "hacc"], 64, 2
+    else:
+        dcfg = LDS.DatasetConfig()
+        steps, kinds, eval_wls, eval_ep, reps = \
+            400, ("linear", "mlp"), \
+            ["quickS", "snapc", "BwdBN", "FwdSoft"], 300, 3
+    rows = []
+
+    t0 = time.perf_counter()
+    data, meta = LDS.generate_dataset(dcfg)
+    t_data = time.perf_counter() - t0
+    n_rows = int(data["x"].shape[0])
+    rows.append(("learn_dataset_factory", t_data * 1e6,
+                 f"us total ({n_rows / t_data:.0f} labeled rows/s via "
+                 "run_grid)"))
+    _, val_mask = LDS.split_masks(data)
+    train_rec = {"rows": n_rows, "runs": len(meta["runs"]),
+                 "dataset_factory_s": t_data,
+                 "rows_per_s": n_rows / t_data,
+                 "reactive_choice_acc_val":
+                     LTR.reactive_choice_baseline(data, meta, val_mask)}
+
+    # jit train-step micro: compile once vs steady (train_step idiom)
+    tc = LTR.default_tc("linear", steps)
+    step_fn, _ = LTR.make_train_step(
+        "linear", tc, np.zeros(2, np.float32), np.ones(2, np.float32))
+    p0 = LM.init_linear(0)
+    from repro.optim import adamw
+    state = {"params": jax.tree.map(jnp.asarray, p0),
+             "opt": adamw.init(p0), "step": jnp.zeros((), jnp.int32)}
+    bs = min(4096, n_rows)
+    batch = {"x": jnp.asarray(data["x"][:bs]),
+             "react": jnp.asarray(data["x"][:bs, list(LM.REACT_COLS)]),
+             "y": jnp.asarray(data["y"][:bs])}
+
+    def one_step():
+        nonlocal state
+        state, m = step_fn(state, dict(batch))
+        jax.block_until_ready(m["loss"])
+    t_compile = _time_once(one_step)
+    t_step = min(_time_once(one_step) for _ in range(5))
+    rows.append(("learn_train_step_compile", t_compile * 1e6,
+                 "us first call (trace+compile; paid once)"))
+    rows.append(("learn_train_step", t_step * 1e6,
+                 f"us/step steady-state (batch {bs})"))
+    train_rec.update(step_compile_ms=t_compile * 1e3,
+                     step_us=t_step * 1e6, batch_size=bs)
+
+    specs = {}
+    for kind in kinds:
+        t0 = time.perf_counter()
+        params, curves = LTR.fit(data, meta, kind=kind, steps=steps)
+        t_fit = time.perf_counter() - t0
+        name = "learned_lin" if kind == "linear" else "learned_mlp"
+        specs[name] = LMECH.make_learned_spec(name, params)
+        train_rec[name] = {
+            "fit_s": t_fit, "steps": steps,
+            "final_loss": curves["probe"][-1],
+            "first_loss": curves["probe"][0],
+            "val_mse": curves.get("val_mse"),
+            "val_choice_acc": curves.get("val_choice_acc")}
+        rows.append((f"learn_fit_{kind}", t_fit * 1e6,
+                     f"us for {steps} AdamW steps (probe loss "
+                     f"{curves['probe'][0]:.3f}->{curves['probe'][-1]:.3f})"))
+
+    # --- deployment eval on held-out workloads --------------------------
+    mechs = ("static17", "crisp", "pcstall", *specs.values(), "oracle")
+    progs = {w: get_workload(w) for w in eval_wls}
+    sim = SimConfig(n_cu=dcfg.n_cu, n_epochs=eval_ep,
+                    objective=dcfg.objective)
+    SW.reset_counters()
+    grid = run_suite(progs, sim, mechs)
+    fork_compiles = sum(SW.TRACE_COUNTS.get(k, 0)
+                        for k in ("grid_forks", "grid_oracle"))
+    assert fork_compiles <= 2, dict(SW.TRACE_COUNTS)
+    for name in specs:
+        assert SW.DISPATCH_ROWS[f"grid_{name}"] == len(eval_wls), \
+            dict(SW.DISPATCH_ROWS)
+
+    warm = min(50, eval_ep // 4)
+    agree = {m: float(np.mean([np.mean(
+        grid[w][m]["fidx"][warm:] == grid[w]["oracle"]["fidx"][warm:])
+        for w in eval_wls]))
+        for m in ("crisp", "pcstall", *specs)}
+    r = suite_metrics(None, sim, mechs, n=2, traces=grid)
+    gm = {m: float(np.exp(np.mean([np.log(r[w][m]["ednp_norm"])
+                                   for w in eval_wls])))
+          for m in ("crisp", "pcstall", *specs, "oracle")}
+    acc = {m: float(np.mean([r[w][m]["accuracy"] for w in eval_wls]))
+           for m in ("crisp", "pcstall", *specs)}
+    eval_rec = {"workloads_heldout": eval_wls,
+                "held_out_of_training": [w for w in eval_wls
+                                         if w not in dcfg.workloads],
+                "choice_agreement_vs_oracle": agree,
+                "accuracy": acc,
+                "accuracy_delta_vs_pcstall": {
+                    m: acc[m] - acc["pcstall"] for m in specs},
+                "ed2p_vs_static17": gm,
+                "fork_family_compiles": fork_compiles}
+    for name in specs:
+        rows.append((f"learn_eval_{name}", 0.0,
+                     f"choice-agreement {agree[name]:.3f} vs reactive "
+                     f"{agree['crisp']:.3f} (heldout); ED2P {gm[name]:.3f}"))
+
+    # --- interleaved A/B: learned spec vs builtin pcstall dispatch ------
+    spec_lin = specs["learned_lin"]
+
+    def side_a():
+        run_suite(progs, sim, (spec_lin,))
+
+    def side_b():
+        run_suite(progs, sim, ("pcstall",))
+    side_a(), side_b()  # both warm
+    ta, tb = [], []
+    for _ in range(reps):
+        ta.append(_time_once(side_a))
+        tb.append(_time_once(side_b))
+    eval_rec["dispatch_s_learned_lin"] = min(ta)
+    eval_rec["dispatch_s_pcstall"] = min(tb)
+    eval_rec["dispatch_overhead_vs_pcstall"] = min(ta) / min(tb)
+    rows.append(("learn_dispatch_learned_lin", min(ta) * 1e6,
+                 f"us/suite interleaved ({min(ta) / min(tb):.2f}x pcstall)"))
+    rows.append(("learn_dispatch_pcstall", min(tb) * 1e6,
+                 "us/suite interleaved baseline"))
+    return rows, (train_rec, eval_rec)
+
+
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--figs", default=None,
@@ -776,6 +940,8 @@ def main() -> None:
                     help="skip the run_grid-vs-per-point-loop benchmark")
     ap.add_argument("--skip-serve", action="store_true",
                     help="skip the streaming-service benchmark")
+    ap.add_argument("--skip-learn", action="store_true",
+                    help="skip the learned-predictor pipeline benchmark")
     ap.add_argument("--quick", action="store_true",
                     help="CI smoke mode: tiny sweep, no figures, <=30s")
     args = ap.parse_args()
@@ -813,6 +979,12 @@ def main() -> None:
         sys.stdout.flush()
     if not args.skip_serve:
         rows, bench["serve_stream"] = _bench_serve_stream(args.quick)
+        for name, us, derived in rows:
+            print(f"{name},{us:.1f},{derived}")
+        sys.stdout.flush()
+    if not args.skip_learn:
+        rows, (bench["learn_train"], bench["learn_eval"]) = \
+            _bench_learn(args.quick)
         for name, us, derived in rows:
             print(f"{name},{us:.1f},{derived}")
         sys.stdout.flush()
@@ -868,6 +1040,14 @@ def main() -> None:
                 if isinstance(v, dict) and "pcstall" in v and "@1us" in k)
             summary += " finest_paying=" + ",".join(
                 f"{r}:{T}" for r, T in res["finest_paying_epoch_us"].items())
+        elif name == "fig_learned":
+            d = res["choice_agreement_heldout"]
+            summary = "heldout-agree " + " ".join(
+                f"{m}={d[m]:.2f}" for m in
+                ("crisp", "pcstall", "learned_lin", "learned_mlp")) + \
+                " ed2p lin=" + \
+                f"{res['ed2p_geomean']['learned_lin']:.2f}" + \
+                f" mlp={res['ed2p_geomean']['learned_mlp']:.2f}"
         else:
             summary = "ok"
         print(f"{name},{dt:.0f},{summary}")

@@ -73,6 +73,23 @@ hooks — counter-driven table updates and lookup hit telemetry (the
 ``predict`` can read a live ``carry.table`` without reimplementing the
 estimator plumbing.
 
+Parameterized hooks
+-------------------
+Compiled executables are keyed on the spec *value* and plain hook
+functions compare by identity, which leaves a predictor parameterized by
+weights (a learned model, a tunable blend) two bad options: rebind a
+fresh closure per weight set (new identity — a fresh executable family
+per registration even for bit-identical weights) or mutate a shared
+closure cell (the cached executable keeps the OLD weights baked in as
+trace constants — silently stale results). :class:`ParamHook` is the
+supported contract for this case: it binds a stable module-level hook
+function to a ``{name: array}`` parameter dict and compares/hashes by
+``(function identity, parameter shape/dtype/bytes)``. Equal-valued
+parameters hit every spec-keyed cache; any changed byte makes an unequal
+spec and compiles a fresh specialized family; and neither case can
+perturb the shared builtin fork family, whose executables key on no
+custom spec at all (regression-tested in ``tests/test_learn.py``).
+
 The registry
 ------------
 :func:`register` validates and adds a spec (duplicate names error unless
@@ -87,7 +104,9 @@ from __future__ import annotations
 
 import threading
 from dataclasses import dataclass
-from typing import Callable, Dict, Optional, Tuple, Union
+from typing import Callable, Dict, Mapping, Optional, Tuple, Union
+
+import numpy as np
 
 from repro.core import power as PWR
 
@@ -222,6 +241,56 @@ class MechanismSpec:
         return tuple(a for a in self.config_axes if a != "n_epochs")
 
 
+class ParamHook:
+    """A predict/update hook parameterized by arrays, compared by VALUE.
+
+    Binds a stable module-level hook function ``fn`` to a flat
+    ``{name: array}`` parameter dict and calls it as
+    ``fn(*hook_args, params=params)`` — the hook closes over the host
+    numpy arrays, which JAX traces in as constants (frozen weights).
+
+    Equality and hashing cover ``(fn identity, per-parameter name/shape/
+    dtype/bytes)``, which is exactly the key the executable caches need:
+
+    * re-creating a spec around equal-valued parameters (e.g. reloading
+      the same frozen-weights artifact) compares equal, so every
+      spec-keyed cache — ``sweep._grid_exec``, the dedup-audit cache,
+      ``resolve`` — HITS and nothing retraces;
+    * changing any parameter byte makes an unequal spec, so the value
+      gets its OWN freshly-compiled specialized family and can never
+      alias a stale executable with old weights baked in;
+    * the shared builtin fork family keys on no custom spec either way,
+      so weight swaps cannot retrace it.
+
+    Parameters are defensively converted with ``np.asarray`` and keyed in
+    sorted-name order; pass plain numpy (or nested-free jnp) arrays.
+    """
+
+    __slots__ = ("fn", "params", "_key", "_hash")
+
+    def __init__(self, fn: Callable, params: Mapping[str, "np.ndarray"]):
+        self.fn = fn
+        self.params = {k: np.asarray(params[k]) for k in sorted(params)}
+        self._key = (fn, tuple(
+            (k, v.shape, v.dtype.str, v.tobytes())
+            for k, v in self.params.items()))
+        self._hash = hash(self._key)
+
+    def __call__(self, *args, **kw):
+        return self.fn(*args, params=self.params, **kw)
+
+    def __eq__(self, other):
+        return isinstance(other, ParamHook) and self._key == other._key
+
+    def __hash__(self):
+        return self._hash
+
+    def __repr__(self):
+        shapes = {k: v.shape for k, v in self.params.items()}
+        name = getattr(self.fn, "__name__", repr(self.fn))
+        return f"ParamHook({name}, {shapes})"
+
+
 # ---------------------------------------------------------------------------
 # Registry
 # ---------------------------------------------------------------------------
@@ -263,7 +332,11 @@ def register(spec: MechanismSpec, *,
     created lambdas makes a new jit entry per registration (the old
     executable stays cached for the process lifetime). In long-running
     processes reuse hook *functions* and pass varying parameters through
-    carry state or SimAxes, not by rebinding closures."""
+    carry state or SimAxes — or, for weights that are genuinely part of
+    the mechanism's identity (learned predictors), wrap the hook in
+    :class:`ParamHook`, which compares by parameter value so equal
+    weights reuse the cached executable and changed weights compile
+    their own."""
     if spec.name in _REGISTRY:
         if not allow_override or spec.name in BUILTIN_NAMES:
             raise ValueError(

@@ -184,7 +184,18 @@ def objective_weights(objective: str) -> np.ndarray:
 
     EDP/ED^2P set ``pbar_weight`` to the delay exponent n (the online
     Lagrangian marginal-cost weight) and divide by the rate; perf-cap
-    objectives drop both and penalize infeasible frequencies instead."""
+    objectives drop both and penalize infeasible frequencies instead.
+
+    ``deadline<pct>`` is the deadline-aware energy objective in the
+    Ilager et al. style (arXiv:2004.08177): minimize power — including
+    the online average-power term, which keeps sustained draw low across
+    phases — subject to holding at least ``1 - pct/100`` of the
+    max-frequency rate (the per-epoch deadline slack). It differs from
+    ``perfcap<pct>`` exactly by the ``pbar_weight`` term: perf-cap
+    minimizes instantaneous power alone under the same feasibility
+    penalty. New objectives lower here into the FIXED (3,) vector — the
+    traced graph never changes, so they sweep through ``run_grid`` like
+    any other ``objective`` axis value with zero dispatch edits."""
     if objective == "edp":
         return np.asarray([1.0, 1.0, 0.0], np.float32)
     if objective == "ed2p":
@@ -192,6 +203,12 @@ def objective_weights(objective: str) -> np.ndarray:
     if objective.startswith("perfcap"):
         capf = 1.0 - float(objective[-2:]) / 100.0
         return np.asarray([0.0, 0.0, capf], np.float32)
+    if objective.startswith("deadline"):
+        pct = objective[len("deadline"):]
+        if len(pct) != 2 or not pct.isdigit():
+            raise ValueError(objective)
+        capf = 1.0 - float(pct) / 100.0
+        return np.asarray([1.0, 0.0, capf], np.float32)
     raise ValueError(objective)
 
 
@@ -205,7 +222,7 @@ class SimConfig:
     offset_blocks: int = 8        # blocks/entry: 128 entries cover a 1024-block loop
     cus_per_table: int = 1
     cus_per_domain: int = 1
-    objective: str = "ed2p"       # 'edp' | 'ed2p' | 'perfcap05' | 'perfcap10'
+    objective: str = "ed2p"       # 'edp'|'ed2p'|'perfcap<pct>'|'deadline<pct>'
     sigma: float = 0.06           # same-PC iteration noise (Fig 10 ~10%)
     cap_per_ghz: float = 5500.0   # CU issue capacity, instr/us per GHz
     membw: float = 160_000.0      # shared-path capacity, instr-traffic/us

@@ -10,14 +10,72 @@ losses actually decrease during the integration tests.
 """
 from __future__ import annotations
 
+import json
 from dataclasses import dataclass
-from typing import Dict, Iterator, Sequence, Tuple
+from pathlib import Path
+from typing import Dict, Iterator, Optional, Sequence, Tuple
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
 from repro.configs.base import ModelConfig, ShapeConfig
+
+
+def stream_rng(seed: int, i: int) -> np.random.Generator:
+    """Element ``i`` of deterministic stream ``seed``, with no sequential
+    state: the generator is derived from ``(seed, i)`` alone, so any
+    consumer — trace replay, dataset shuffling, split permutation — can
+    draw element ``i`` without generating the first ``i - 1``. This is
+    the single counter-based contract shared by ``dvfs_request_stream``
+    and ``repro.learn`` (training draws and trace replay come from the
+    same machinery, per the reproducibility story above)."""
+    return np.random.default_rng((seed, i))
+
+
+def train_val_split(n_items: int, *, val_frac: float = 0.25,
+                    seed: int = 0) -> Tuple[np.ndarray, np.ndarray]:
+    """Deterministic seeded train/val index split.
+
+    Returns sorted ``(train_idx, val_idx)`` int64 arrays partitioning
+    ``range(n_items)``. Counter-based (``stream_rng(seed, n_items)``), so
+    the same ``(n_items, val_frac, seed)`` yields the same split on every
+    host and process — no RNG state to carry around. Validation gets
+    ``round(n_items * val_frac)`` items, at least 1 (and at most
+    ``n_items - 1``) whenever ``0 < val_frac`` and ``n_items > 1``."""
+    if not 0.0 <= val_frac < 1.0:
+        raise ValueError(f"val_frac must be in [0, 1), got {val_frac}")
+    perm = stream_rng(seed, n_items).permutation(n_items)
+    n_val = int(round(n_items * val_frac))
+    if val_frac > 0.0 and n_items > 1:
+        n_val = min(max(n_val, 1), n_items - 1)
+    return np.sort(perm[n_val:]), np.sort(perm[:n_val])
+
+
+def export_npz(path, arrays: Dict[str, np.ndarray],
+               meta: Optional[dict] = None) -> Path:
+    """Deterministic npz export: keys written in sorted order, optional
+    ``meta`` dict serialized as canonical (sorted-keys) JSON under the
+    ``__meta__`` key. ``np.savez`` stamps fixed zip timestamps, so the
+    same payload produces a bitwise-identical file — the property the
+    dataset-determinism tests assert."""
+    out = {k: np.ascontiguousarray(arrays[k]) for k in sorted(arrays)}
+    if meta is not None:
+        blob = json.dumps(meta, sort_keys=True).encode("utf-8")
+        out["__meta__"] = np.frombuffer(blob, dtype=np.uint8)
+    path = Path(path)
+    path.parent.mkdir(parents=True, exist_ok=True)
+    np.savez(path, **out)
+    return path
+
+
+def load_npz(path) -> Tuple[Dict[str, np.ndarray], Optional[dict]]:
+    """Inverse of :func:`export_npz`: ``(arrays, meta_or_None)``."""
+    with np.load(path) as f:
+        arrays = {k: f[k] for k in f.files if k != "__meta__"}
+        meta = (json.loads(f["__meta__"].tobytes().decode("utf-8"))
+                if "__meta__" in f.files else None)
+    return arrays, meta
 
 
 @dataclass(frozen=True)
@@ -107,7 +165,7 @@ def dvfs_request_stream(n_requests: int, *, seed: int = 0,
     names = tuple(workloads)
     progs = {n: get_workload(n) for n in names}
     for i in range(n_requests):
-        rng = np.random.default_rng((seed, i))
+        rng = stream_rng(seed, i)
         name = names[int(rng.integers(len(names)))]
         axes = {"epoch_us": float(epoch_us[int(rng.integers(len(epoch_us)))]),
                 "objective": objectives[int(rng.integers(len(objectives)))]}

@@ -1,0 +1,45 @@
+"""Learned-predictor subsystem: trace-driven training of ``family="pc"``
+DVFS mechanisms.
+
+The pipeline is train -> freeze -> register -> sweep:
+
+1. ``learn.dataset`` runs ``run_grid`` over workloads x seeds x epoch
+   granularities as a labeled-data factory (oracle choices are the
+   labels) with deterministic by-run train/val splits;
+2. ``learn.models`` + ``learn.train`` fit a linear I(f) head (Ilager et
+   al., arXiv:2004.08177) and a tiny MLP with the seed's cosine-LR AdamW,
+   folding feature normalization into the frozen raw-space weights;
+3. ``learn.mechanism`` registers the frozen weights as ``learned_lin`` /
+   ``learned_mlp`` pc-family specs (ParamHook: value-keyed, audit-clean,
+   zero engine edits) that sweep like any builtin.
+
+``python -m repro.learn`` runs the miniature end-to-end pipeline (the CI
+learn lane's entry point).
+"""
+from repro.learn.dataset import (DatasetConfig, choice_accuracy,
+                                 generate_dataset, load_dataset,
+                                 save_dataset, select_fidx, split_masks)
+from repro.learn.mechanism import (LEARNED_AXES, epoch_features,
+                                   learned_predict, learned_update,
+                                   make_learned_spec, register_learned)
+from repro.learn.models import (APPLY, FEATURE_NAMES, INIT, N_FEATURES,
+                                N_TARGETS, REACT_BETA, REACT_COLS,
+                                TARGET_NAMES, apply_model, fold_norm,
+                                init_linear, init_mlp, kind_of,
+                                linear_apply, mlp_apply, predict_targets)
+from repro.learn.train import (default_tc, fit, load_weights,
+                               make_train_step, norm_stats,
+                               reactive_choice_baseline, save_weights)
+
+__all__ = [
+    "DatasetConfig", "choice_accuracy", "generate_dataset", "load_dataset",
+    "save_dataset", "select_fidx", "split_masks",
+    "LEARNED_AXES", "epoch_features", "learned_predict", "learned_update",
+    "make_learned_spec", "register_learned",
+    "APPLY", "FEATURE_NAMES", "INIT", "N_FEATURES", "N_TARGETS",
+    "REACT_BETA", "REACT_COLS", "TARGET_NAMES", "apply_model",
+    "fold_norm", "init_linear", "init_mlp", "kind_of", "linear_apply",
+    "mlp_apply", "predict_targets",
+    "default_tc", "fit", "load_weights", "make_train_step", "norm_stats",
+    "reactive_choice_baseline", "save_weights",
+]

@@ -1,0 +1,92 @@
+"""End-to-end learned-predictor pipeline CLI (the CI learn lane).
+
+    PYTHONPATH=src python -m repro.learn --mini --steps 300 --out /tmp/learn
+
+Generates a (miniature) factory dataset, trains the requested head(s),
+freezes + registers the weights, and proves the deployment contract by
+dispatching the registered spec through an unmodified ``run_grid`` —
+asserting the fork-family compile bound and dedup row accounting on the
+way. Exits nonzero on any violated invariant, so the lane is a real
+check, not a smoke."""
+from __future__ import annotations
+
+import argparse
+import json
+from pathlib import Path
+
+import numpy as np
+
+from repro.core import mechanisms as MECH
+from repro.core import sweep as SW
+from repro.learn import dataset as LDS
+from repro.learn import mechanism as LMECH
+from repro.learn import train as LTR
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(prog="python -m repro.learn")
+    ap.add_argument("--mini", action="store_true",
+                    help="miniature dataset (2 workloads x 1 seed, 8 CUs)")
+    ap.add_argument("--steps", type=int, default=300)
+    ap.add_argument("--kind", choices=("linear", "mlp", "both"),
+                    default="linear")
+    ap.add_argument("--out", type=Path, default=Path("learn_artifacts"))
+    args = ap.parse_args(argv)
+
+    cfg = LDS.DatasetConfig()
+    if args.mini:
+        cfg = LDS.DatasetConfig(workloads=("comd", "xsbench"), seeds=(0,),
+                                epoch_us=(1.0,), n_cu=8, n_epochs=120,
+                                warmup=16, val_frac=0.25)
+    data, meta = LDS.generate_dataset(cfg)
+    LDS.save_dataset(args.out / "dataset.npz", data, meta)
+    _, val_mask = LDS.split_masks(data)
+    if not val_mask.any():       # mini split may hold out zero runs
+        val_mask = ~val_mask
+    report = {"rows": int(data["x"].shape[0]),
+              "runs": len(meta["runs"]),
+              "reactive_choice_acc": LTR.reactive_choice_baseline(
+                  data, meta, val_mask)}
+
+    kinds = ("linear", "mlp") if args.kind == "both" else (args.kind,)
+    for kind in kinds:
+        params, curves = LTR.fit(data, meta, kind=kind, steps=args.steps)
+        assert curves["probe"][-1] < curves["probe"][0], \
+            f"{kind}: probe loss did not decrease: {curves['probe']}"
+        LTR.save_weights(args.out / f"weights_{kind}.npz", params,
+                         extra_meta={"steps": args.steps})
+        name = "learned_lin" if kind == "linear" else "learned_mlp"
+        spec = LMECH.register_learned(name, params, allow_override=True)
+
+        # deployment contract: unmodified grid dispatch, bounded compiles,
+        # dedup accounting (the learned pc spec consumes every axis)
+        SW.reset_counters()
+        from repro.core.workloads import get_workload
+        progs = {w: get_workload(w) for w in cfg.workloads[:2]}
+        sim = cfg.sim()
+        grid = SW.run_grid(progs, sim, {"objective": ["ed2p", "deadline05"]},
+                           ("crisp", "pcstall", spec.name))
+        fork_compiles = sum(v for k, v in SW.TRACE_COUNTS.items()
+                            if k == "grid_forks")
+        assert fork_compiles <= 2, SW.TRACE_COUNTS
+        W, G = len(progs), 2
+        assert SW.DISPATCH_ROWS[f"grid_{spec.name}"] == W * G, \
+            dict(SW.DISPATCH_ROWS)
+        tr = grid[("ed2p",)][cfg.workloads[0]][spec.name]
+        report[kind] = {
+            "first_loss": curves["probe"][0],
+            "final_loss": curves["probe"][-1],
+            "val_mse": curves.get("val_mse"),
+            "val_choice_acc": curves.get("val_choice_acc"),
+            "deployed_mean_f": float(
+                np.take(meta["freqs_ghz"], tr["fidx"].astype(int)).mean()),
+        }
+        MECH.unregister(name)
+
+    (args.out / "report.json").write_text(json.dumps(report, indent=2))
+    print(json.dumps(report, indent=2))
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

@@ -1,0 +1,164 @@
+"""Predictor models for the learned DVFS mechanisms.
+
+Two deliberately tiny heads map a per-CU feature vector to the per-CU
+``(i0, sens)`` linear-rate pair the engine's ``predict_instr`` lowering
+consumes — the same representation every builtin predictor speaks:
+
+* ``linear`` — the Ilager et al. starting point (arXiv:2004.08177): one
+  affine map from runtime telemetry to the I(f) model. 16 weights; the
+  frozen artifact is a single matmul inside the scan body.
+* ``mlp`` — one tanh hidden layer, for the nonlinear phase structure the
+  linear head cannot express (DSO-style static+dynamic feature fusion,
+  arXiv:2407.13096, motivates the mixed feature set below).
+
+Both heads are residual over the reactive EMA digest — the deployed
+prediction is ``react_(i0, sens) + net(features)`` (see
+:func:`predict_targets`) so zero weights reproduce the reactive
+baseline exactly and training only learns where the PC-table features
+beat reaction.
+
+Training happens in standardized feature/target space (AdamW behaves far
+better there), but the deployed hook must be a pure function of RAW
+engine features — so :func:`fold_norm` folds the standardization affine
+into the weights at freeze time and the frozen artifact needs no side
+statistics.
+
+The feature vector (order is the contract between ``learn.dataset``
+offline reconstruction and ``learn.mechanism`` online computation):
+
+====  ===========  ======================================================
+ idx   name         per-CU semantics
+====  ===========  ======================================================
+ 0     pc_i0        PC-table i0 lookup at the current blocks, WF-summed
+ 1     pc_sens      PC-table sens lookup, WF-summed
+ 2     react_i0     EMA(beta=REACT_BETA) of the exact fork-linear i0
+ 3     react_sens   EMA of the exact fork-linear sensitivity
+ 4     f_prev       previous epoch's chosen frequency (GHz)
+ 5     pbar         online average power e_acc / t_acc (the Pbar term)
+ 6     hit          PC-table hit rate (stall/hit telemetry)
+====  ===========  ======================================================
+"""
+from __future__ import annotations
+
+from typing import Dict
+
+import jax.numpy as jnp
+import numpy as np
+
+FEATURE_NAMES = ("pc_i0", "pc_sens", "react_i0", "react_sens",
+                 "f_prev", "pbar", "hit")
+N_FEATURES = len(FEATURE_NAMES)
+TARGET_NAMES = ("i0_rate", "sens_rate")
+N_TARGETS = len(TARGET_NAMES)
+
+# EMA weight of the per-epoch exact fork-linear digest maintained in
+# carry.react_* by the learned update hook; learn.dataset reproduces the
+# same recursion offline so train-time and deploy-time features agree.
+REACT_BETA = 0.5
+
+Params = Dict[str, np.ndarray]
+
+
+def init_linear(seed: int = 0) -> Params:
+    """Near-zero init: the folded-norm output starts at the target mean."""
+    rng = np.random.default_rng((seed, N_FEATURES))
+    w = rng.standard_normal((N_FEATURES, N_TARGETS)).astype(np.float32)
+    return {"w": 0.01 * w, "b": np.zeros((N_TARGETS,), np.float32)}
+
+
+def linear_apply(params: Params, x: jnp.ndarray) -> jnp.ndarray:
+    return x @ jnp.asarray(params["w"]) + jnp.asarray(params["b"])
+
+
+def init_mlp(seed: int = 0, hidden: int = 24) -> Params:
+    rng = np.random.default_rng((seed, hidden))
+    w1 = rng.standard_normal((N_FEATURES, hidden)).astype(np.float32)
+    w2 = rng.standard_normal((hidden, N_TARGETS)).astype(np.float32)
+    return {"w1": w1 * np.sqrt(2.0 / N_FEATURES, dtype=np.float32),
+            "b1": np.zeros((hidden,), np.float32),
+            "w2": 0.01 * w2,
+            "b2": np.zeros((N_TARGETS,), np.float32)}
+
+
+def mlp_apply(params: Params, x: jnp.ndarray) -> jnp.ndarray:
+    h = jnp.tanh(x @ jnp.asarray(params["w1"]) + jnp.asarray(params["b1"]))
+    return h @ jnp.asarray(params["w2"]) + jnp.asarray(params["b2"])
+
+
+def kind_of(params: Params) -> str:
+    """Infer the head from the parameter keys (the frozen artifact is a
+    flat array dict; the keys are disjoint between heads by design)."""
+    return "linear" if "w" in params else "mlp"
+
+
+def apply_model(params: Params, x: jnp.ndarray) -> jnp.ndarray:
+    """Dispatch on parameter keys — a Python-level (trace-static) branch."""
+    return (linear_apply if kind_of(params) == "linear" else mlp_apply)(
+        params, x)
+
+
+APPLY = {"linear": linear_apply, "mlp": mlp_apply}
+INIT = {"linear": init_linear, "mlp": init_mlp}
+
+# Residual head contract: the network predicts a CORRECTION to the
+# reactive EMA digest, not (i0, sens) from scratch. The react features
+# are already an unbiased one-step predictor (the reactive baseline
+# scores ~0.84 frequency-choice agreement on factory datasets); asking a
+# single shared head to regress absolute rates instead makes it smooth
+# across workloads and lose per-workload calibration — observed as large
+# offline sens bias on individual workloads that the objective lowering
+# amplifies into wrong frequency picks. With the residual form, zero
+# weights ARE the reactive baseline, weight decay anchors deployment
+# there, and training only spends capacity where the PC-table features
+# genuinely improve on reaction (anticipating phase changes the EMA
+# lags). Columns follow TARGET_NAMES order: (react_i0, react_sens).
+REACT_COLS = (FEATURE_NAMES.index("react_i0"),
+              FEATURE_NAMES.index("react_sens"))
+
+# Trust region on the learned correction: |delta| <= TRUST * |react|.
+# The react digest is the one feature pair whose offline reconstruction
+# is EXACT (the update hook runs the identical recursion online); the
+# others are proxies (pc table) or policy-coupled (f_prev, pbar). The
+# clamp bounds how far a proxy-feature misprediction can push the
+# deployed closed loop from the reactive envelope: predictions live in
+# [1-TRUST, 1+TRUST] x react, so the learned mechanism degrades to
+# reactive behavior instead of diverging (pre-clamp versions pinned
+# f_max on workloads whose online features left the training manifold).
+TRUST_RADIUS = 0.15
+
+
+def predict_targets(params: Params, x: jnp.ndarray) -> jnp.ndarray:
+    """The deployed prediction: reactive digest + trust-clamped residual.
+
+    Single definition shared by the online hook (``learn.mechanism``),
+    offline evaluation (``learn.train``) and the figures, so the residual
+    contract cannot drift between them."""
+    x = jnp.asarray(x)
+    react = x[..., list(REACT_COLS)]
+    delta = apply_model(params, x)
+    lim = TRUST_RADIUS * jnp.abs(react)
+    return react + jnp.clip(delta, -lim, lim)
+
+
+def fold_norm(params: Params, mu_x: np.ndarray, sd_x: np.ndarray,
+              mu_y: np.ndarray, sd_y: np.ndarray) -> Params:
+    """Fold feature/target standardization into the weights.
+
+    Training computes ``y_n = f(x_n)`` with ``x_n = (x - mu_x) / sd_x``
+    and ``y = y_n * sd_y + mu_y``; the returned parameters satisfy
+    ``apply(folded, x) == apply(trained, x_n) * sd_y + mu_y`` exactly (up
+    to float32 rounding), so the frozen hook consumes raw engine features
+    with no normalization constants riding along."""
+    mu_x, sd_x = (np.asarray(a, np.float32) for a in (mu_x, sd_x))
+    mu_y, sd_y = (np.asarray(a, np.float32) for a in (mu_y, sd_y))
+    p = {k: np.asarray(v, np.float32) for k, v in params.items()}
+    if kind_of(p) == "linear":
+        w = (p["w"] / sd_x[:, None]) * sd_y[None, :]
+        b = p["b"] * sd_y + mu_y - mu_x @ w
+        return {"w": w.astype(np.float32), "b": b.astype(np.float32)}
+    w1 = p["w1"] / sd_x[:, None]
+    b1 = p["b1"] - mu_x @ w1
+    w2 = p["w2"] * sd_y[None, :]
+    b2 = p["b2"] * sd_y + mu_y
+    return {"w1": w1.astype(np.float32), "b1": b1.astype(np.float32),
+            "w2": w2.astype(np.float32), "b2": b2.astype(np.float32)}

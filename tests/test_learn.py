@@ -1,0 +1,429 @@
+"""Tests for the learned-predictor subsystem (repro.learn) and its
+supporting contracts: the shared deterministic stream/split/export
+machinery in data.pipeline, dataset determinism (same seed -> bitwise
+npz), the e2e tiny-train smoke, the ParamHook value-keyed hook contract
+(swapping same-shape weights must NOT retrace the fork family; equal
+weights must not retrace anything), learned-spec registration through
+the audited grid path (dedup soundness, run_grid vs per-point dispatch,
+DISPATCH_ROWS accounting, fork-compile bound), and the deadline-aware
+objective lowering round-trip."""
+import numpy as np
+import pytest
+
+from repro.core import mechanisms as MECH
+from repro.core import sweep as SW
+from repro.core.mechanisms import ParamHook
+from repro.core.simulate import SimConfig, objective_weights, run_sim
+from repro.core.sweep import run_grid, run_suite
+from repro.core.workloads import get_workload
+from repro.data import pipeline as PIPE
+from repro.learn import dataset as LDS
+from repro.learn import mechanism as LMECH
+from repro.learn import models as LM
+from repro.learn import train as LTR
+
+WORKLOADS = ("comd", "xsbench")
+TINY = LDS.DatasetConfig(workloads=WORKLOADS, seeds=(0,), epoch_us=(1.0,),
+                         n_cu=8, n_epochs=64, warmup=8, val_frac=0.5)
+
+
+@pytest.fixture(scope="module")
+def progs():
+    return {w: get_workload(w) for w in WORKLOADS}
+
+
+@pytest.fixture(scope="module")
+def tiny_data():
+    return LDS.generate_dataset(TINY)
+
+
+def _init_params(kind="linear", seed=0):
+    """Deterministic untrained weights — dispatch tests don't need a fit."""
+    return LM.INIT[kind](seed)
+
+
+# ---------------------------------------------------------------------------
+# data.pipeline: shared stream/split/export machinery
+# ---------------------------------------------------------------------------
+
+
+def test_stream_rng_counter_based():
+    a = PIPE.stream_rng(7, 3).integers(0, 1 << 30, size=8)
+    b = PIPE.stream_rng(7, 3).integers(0, 1 << 30, size=8)
+    np.testing.assert_array_equal(a, b)
+    c = PIPE.stream_rng(7, 4).integers(0, 1 << 30, size=8)
+    assert not np.array_equal(a, c)
+
+
+def test_dvfs_request_stream_uses_shared_stream():
+    """Trace replay and training draw from the same counter machinery:
+    request i is a pure function of (seed, i)."""
+    r1 = list(PIPE.dvfs_request_stream(3, seed=5))
+    r2 = list(PIPE.dvfs_request_stream(3, seed=5))
+    for (p1, a1, t1), (p2, a2, t2) in zip(r1, r2):
+        assert p1.name == p2.name and a1 == a2 and t1 == t2
+
+
+def test_train_val_split_deterministic_partition():
+    tr, va = PIPE.train_val_split(20, val_frac=0.25, seed=3)
+    tr2, va2 = PIPE.train_val_split(20, val_frac=0.25, seed=3)
+    np.testing.assert_array_equal(tr, tr2)
+    np.testing.assert_array_equal(va, va2)
+    assert len(va) == 5 and len(tr) == 15
+    assert not set(tr) & set(va)
+    assert sorted([*tr, *va]) == list(range(20))
+    # a different seed moves the boundary; sizes are invariant
+    tr3, va3 = PIPE.train_val_split(20, val_frac=0.25, seed=4)
+    assert len(va3) == 5 and set(va3) != set(va)
+
+
+def test_train_val_split_edges():
+    tr, va = PIPE.train_val_split(2, val_frac=0.1, seed=0)
+    assert len(va) == 1 and len(tr) == 1      # at least one of each
+    tr, va = PIPE.train_val_split(5, val_frac=0.0, seed=0)
+    assert len(va) == 0 and len(tr) == 5
+    with pytest.raises(ValueError):
+        PIPE.train_val_split(5, val_frac=1.0, seed=0)
+
+
+def test_export_npz_roundtrip_and_meta(tmp_path):
+    arrays = {"b": np.arange(6).reshape(2, 3), "a": np.ones(4, np.float32)}
+    meta = {"k": [1, 2], "name": "x"}
+    p = PIPE.export_npz(tmp_path / "d.npz", arrays, meta)
+    got, got_meta = PIPE.load_npz(p)
+    assert got_meta == meta
+    for k, v in arrays.items():
+        np.testing.assert_array_equal(got[k], v)
+
+
+# ---------------------------------------------------------------------------
+# dataset: determinism + schema
+# ---------------------------------------------------------------------------
+
+
+def test_dataset_determinism_bitwise(tmp_path, tiny_data):
+    """Same DatasetConfig -> bitwise-identical npz artifact."""
+    data1, meta1 = tiny_data
+    data2, meta2 = LDS.generate_dataset(TINY)
+    LDS.save_dataset(tmp_path / "a.npz", data1, meta1)
+    LDS.save_dataset(tmp_path / "b.npz", data2, meta2)
+    a = (tmp_path / "a.npz").read_bytes()
+    b = (tmp_path / "b.npz").read_bytes()
+    assert a == b
+
+
+def test_dataset_schema_and_split(tiny_data):
+    data, meta = tiny_data
+    n = data["x"].shape[0]
+    n_runs = len(meta["runs"])
+    assert data["x"].shape == (n, LM.N_FEATURES)
+    assert data["y"].shape == (n, LM.N_TARGETS)
+    assert data["fidx"].shape == (n,)
+    assert data["fidx"].min() >= 0
+    assert data["fidx"].max() < len(meta["freqs_ghz"])
+    # two behavior-policy trajectories (oracle + pcstall) per run
+    expected = n_runs * 2 * (TINY.n_epochs - TINY.warmup) * TINY.n_cu
+    assert n == expected
+    assert data["policy"].shape == (n,)
+    assert set(np.unique(data["policy"])) == {0, 1}
+    assert (data["policy"] == 0).sum() == (data["policy"] == 1).sum()
+    for k in ("x", "y", "t_us"):
+        assert np.isfinite(data[k]).all(), k
+    # by-run split: every run lands in exactly one side, and both policy
+    # trajectories of a run land on the same side (no leakage)
+    tr_mask, va_mask = LDS.split_masks(data)
+    assert (tr_mask ^ va_mask).all()
+    assert n_runs == len(TINY.workloads) * len(TINY.seeds) * \
+        len(TINY.epoch_us)
+
+
+def test_dataset_labels_match_select_mirror(tiny_data):
+    """The offline objective mirror reproduces the oracle's own choices
+    from the exact per-epoch (i0, sens) targets on most oracle-trajectory
+    rows — the mirror and the labels speak the same objective. The
+    pcstall-trajectory labels ARE the mirror by construction, so there
+    they must agree exactly."""
+    data, meta = tiny_data
+    pbar = data["x"][:, list(meta["feature_names"]).index("pbar")]
+    f = LDS.select_fidx(data["y"][:, 0], data["y"][:, 1], pbar,
+                        data["t_us"], meta)
+    orc = data["policy"] == 0
+    agree = float(np.mean(f[orc] == data["fidx"][orc]))
+    assert agree > 0.5, agree
+    np.testing.assert_array_equal(f[~orc], data["fidx"][~orc])
+
+
+# ---------------------------------------------------------------------------
+# training: e2e smoke
+# ---------------------------------------------------------------------------
+
+
+def test_tiny_train_loss_decreases(tiny_data):
+    """50 AdamW steps on 2 workloads: the deterministic probe loss (the
+    jitter-free training objective on a fixed batch) strictly decreases
+    and the frozen artifact is raw-space (folded normalization)."""
+    data, meta = tiny_data
+    params, curves = LTR.fit(data, meta, kind="linear", steps=50, seed=0)
+    probe = curves["probe"]
+    assert probe[-1] < probe[0], probe
+    assert np.mean(probe[-3:]) < np.mean(probe[:3])
+    assert len(curves["loss"]) == 50
+    assert set(params) == {"w", "b"}
+    # folded weights reproduce normalized-space inference on raw inputs
+    x = data["x"][:64]
+    mu_x, sd_x = curves["norm"]["mu_x"], curves["norm"]["sd_x"]
+    mu_y, sd_y = curves["norm"]["mu_y"], curves["norm"]["sd_y"]
+    unfolded = LM.fold_norm(params, np.zeros_like(mu_x),
+                            np.ones_like(sd_x), np.zeros_like(mu_y),
+                            np.ones_like(sd_y))
+    np.testing.assert_allclose(
+        np.asarray(LM.apply_model(unfolded, x)),
+        np.asarray(LM.apply_model(params, x)), rtol=1e-5, atol=1e-5)
+
+
+def test_fit_deterministic(tiny_data):
+    data, meta = tiny_data
+    p1, c1 = LTR.fit(data, meta, kind="linear", steps=20, seed=0)
+    p2, c2 = LTR.fit(data, meta, kind="linear", steps=20, seed=0)
+    assert c1["loss"] == c2["loss"]
+    for k in p1:
+        np.testing.assert_array_equal(p1[k], p2[k])
+
+
+def test_weights_artifact_roundtrip(tmp_path):
+    params = _init_params("mlp")
+    p = LTR.save_weights(tmp_path / "w.npz", params,
+                         extra_meta={"steps": 7})
+    got, meta = LTR.load_weights(p)
+    assert meta["kind"] == "mlp" and meta["steps"] == 7
+    for k in params:
+        np.testing.assert_array_equal(got[k], params[k])
+
+
+def test_fold_norm_linear_exact():
+    rng = np.random.default_rng(0)
+    params = {"w": rng.standard_normal((LM.N_FEATURES, 2)).astype(np.float32),
+              "b": rng.standard_normal(2).astype(np.float32)}
+    mu_x = rng.standard_normal(LM.N_FEATURES).astype(np.float32)
+    sd_x = rng.uniform(0.5, 2.0, LM.N_FEATURES).astype(np.float32)
+    mu_y = rng.standard_normal(2).astype(np.float32)
+    sd_y = rng.uniform(0.5, 2.0, 2).astype(np.float32)
+    x = rng.standard_normal((32, LM.N_FEATURES)).astype(np.float32)
+    folded = LM.fold_norm(params, mu_x, sd_x, mu_y, sd_y)
+    want = np.asarray(LM.linear_apply(params, (x - mu_x) / sd_x)) \
+        * sd_y + mu_y
+    np.testing.assert_allclose(np.asarray(LM.linear_apply(folded, x)),
+                               want, rtol=1e-4, atol=1e-4)
+
+
+def test_fold_norm_mlp_exact():
+    rng = np.random.default_rng(1)
+    params = LM.init_mlp(1, hidden=8)
+    params = {k: rng.standard_normal(v.shape).astype(np.float32)
+              for k, v in params.items()}
+    mu_x = rng.standard_normal(LM.N_FEATURES).astype(np.float32)
+    sd_x = rng.uniform(0.5, 2.0, LM.N_FEATURES).astype(np.float32)
+    mu_y = rng.standard_normal(2).astype(np.float32)
+    sd_y = rng.uniform(0.5, 2.0, 2).astype(np.float32)
+    x = rng.standard_normal((32, LM.N_FEATURES)).astype(np.float32)
+    folded = LM.fold_norm(params, mu_x, sd_x, mu_y, sd_y)
+    want = np.asarray(LM.mlp_apply(params, (x - mu_x) / sd_x)) * sd_y + mu_y
+    np.testing.assert_allclose(np.asarray(LM.mlp_apply(folded, x)),
+                               want, rtol=1e-4, atol=1e-4)
+
+
+def test_predict_targets_residual_trust_region():
+    """The deployed prediction is the reactive digest plus a correction
+    clamped to TRUST_RADIUS x |react|: zero weights reproduce the react
+    columns exactly, and arbitrarily large weights cannot leave the
+    trust envelope (the closed-loop stability guarantee)."""
+    rng = np.random.default_rng(2)
+    x = np.abs(rng.standard_normal((64, LM.N_FEATURES))
+               ).astype(np.float32) * 100.0
+    react = x[:, list(LM.REACT_COLS)]
+    zero = {"w": np.zeros((LM.N_FEATURES, 2), np.float32),
+            "b": np.zeros((2,), np.float32)}
+    np.testing.assert_array_equal(
+        np.asarray(LM.predict_targets(zero, x)), react)
+    huge = {"w": np.full((LM.N_FEATURES, 2), 1e6, np.float32),
+            "b": np.full((2,), 1e6, np.float32)}
+    out = np.asarray(LM.predict_targets(huge, x))
+    lim = LM.TRUST_RADIUS * np.abs(react)
+    assert (out <= react + lim + 1e-4).all()
+    assert (out >= react - lim - 1e-4).all()
+
+
+# ---------------------------------------------------------------------------
+# ParamHook: the parameterized-hook contract
+# ---------------------------------------------------------------------------
+
+
+def test_param_hook_value_equality():
+    pa = _init_params(seed=0)
+    h1 = ParamHook(LMECH.learned_predict, pa)
+    h2 = ParamHook(LMECH.learned_predict,
+                   {k: v.copy() for k, v in pa.items()})  # fresh arrays
+    assert h1 == h2 and hash(h1) == hash(h2)
+    pb = {k: v + 1.0 for k, v in pa.items()}              # same shapes
+    h3 = ParamHook(LMECH.learned_predict, pb)
+    assert h1 != h3
+    # a different hook fn with equal params is a different hook
+    h4 = ParamHook(LMECH.learned_update, pa)
+    assert h1 != h4
+    # specs built around value-equal hooks are value-equal (cache keys)
+    s1 = LMECH.make_learned_spec("learned_eq", pa)
+    s2 = LMECH.make_learned_spec("learned_eq",
+                                 {k: v.copy() for k, v in pa.items()})
+    assert s1 == s2 and hash(s1) == hash(s2)
+    assert s1 != LMECH.make_learned_spec("learned_eq", pb)
+
+
+def test_param_hook_weight_swap_does_not_retrace_fork_family(progs):
+    """THE regression the contract exists for: swapping hook weights of
+    identical shape/dtype must not retrace the shared fork family
+    (TRACE_COUNTS["grid_forks"] delta 0 after the first compile), and
+    re-creating a spec around equal-valued weights must retrace nothing
+    at all."""
+    sim = SimConfig(n_cu=8, n_wf=8, n_epochs=24, entries=16,
+                    offset_blocks=8)
+    pa = _init_params(seed=0)
+    pb = {k: v + 0.25 for k, v in pa.items()}   # same shape/dtype
+    sa = LMECH.make_learned_spec("learned_swap", pa)
+    run_grid(progs, sim, [{}], ("crisp", sa))   # warm fork family + A
+
+    SW.reset_counters()
+    sb = LMECH.make_learned_spec("learned_swap", pb)
+    run_grid(progs, sim, [{}], ("crisp", sb))
+    assert SW.TRACE_COUNTS.get("grid_forks", 0) == 0, \
+        dict(SW.TRACE_COUNTS)
+    # the new weights get their OWN specialized compile (never a stale
+    # aliased executable)
+    assert SW.TRACE_COUNTS.get("grid_learned_swap", 0) == 1, \
+        dict(SW.TRACE_COUNTS)
+
+    SW.reset_counters()
+    sa2 = LMECH.make_learned_spec(
+        "learned_swap", {k: v.copy() for k, v in pa.items()})
+    got = run_grid(progs, sim, [{}], ("crisp", sa2))
+    assert sum(SW.TRACE_COUNTS.values()) == 0, dict(SW.TRACE_COUNTS)
+    # and the cached executable serves the equal-valued spec bitwise
+    want = run_grid(progs, sim, [{}], ("crisp", sa))
+    for w in WORKLOADS:
+        for ch in ("work", "energy", "fidx"):
+            np.testing.assert_array_equal(
+                got[()][w]["learned_swap"][ch],
+                want[()][w]["learned_swap"][ch], err_msg=f"{w}/{ch}")
+
+
+# ---------------------------------------------------------------------------
+# learned mechanisms through the audited grid path
+# ---------------------------------------------------------------------------
+
+
+def test_learned_specs_register_audited():
+    """Registration runs the axis-liveness audit; the learned hooks
+    genuinely consume every declared axis."""
+    for name, kind in (("learned_lin", "linear"), ("learned_mlp", "mlp")):
+        spec = LMECH.register_learned(name, _init_params(kind))
+        try:
+            assert spec.exec_axes == MECH.SIM_AXES_FIELDS
+            assert MECH.get(name) == spec
+            from repro.analysis.deps import (axis_liveness,
+                                             require_dedup_sound)
+            res = axis_liveness(spec)
+            assert not res.under_declared, res
+            assert not res.over_declared, res
+            require_dedup_sound(spec)
+        finally:
+            MECH.unregister(name)
+
+
+def test_learned_grid_matches_per_point_and_dedup(progs):
+    """Grid rows equal per-point dispatch; DISPATCH_ROWS shows the pc
+    spec scanning once per grid point (every axis live) while a static
+    collapses the objective axis — and the whole mixed sweep stays within
+    the fork-family compile bound."""
+    sim = SimConfig(n_cu=8, n_wf=8, n_epochs=24, entries=16,
+                    offset_blocks=8)
+    spec = LMECH.make_learned_spec("learned_t", _init_params(seed=3))
+    objs = ["ed2p", "deadline05"]
+    SW.reset_counters()
+    grid = run_grid(progs, sim, {"objective": objs},
+                    ("static17", "crisp", "pcstall", "oracle", spec))
+    fork_family = sum(SW.TRACE_COUNTS.get(k, 0)
+                      for k in ("grid_forks", "grid_oracle"))
+    assert fork_family <= 2, dict(SW.TRACE_COUNTS)
+    W, G = len(progs), len(objs)
+    assert SW.DISPATCH_ROWS["grid_learned_t"] == W * G
+    assert SW.DISPATCH_ROWS["grid_static17"] == W          # obj collapsed
+    assert SW.DISPATCH_ROWS["grid_forks"] == W * G * 2     # crisp+pcstall
+    import jax
+    for obj in objs:
+        import dataclasses
+        want = run_suite(progs, dataclasses.replace(sim, objective=obj),
+                         (spec,))
+        for w in WORKLOADS:
+            for ch in ("work", "energy", "fidx", "hit_rate"):
+                got = grid[(obj,)][w]["learned_t"][ch]
+                ref = want[w]["learned_t"][ch]
+                if jax.local_device_count() == 1:
+                    np.testing.assert_array_equal(
+                        got, ref, err_msg=f"{obj}/{w}/{ch}")
+                else:
+                    np.testing.assert_allclose(
+                        got, ref, rtol=1e-5, atol=1e-5,
+                        err_msg=f"{obj}/{w}/{ch}")
+
+
+def test_learned_run_sim_trace_schema(progs):
+    """run_sim accepts the spec by value and emits the pc-family trace
+    schema including hit telemetry; the learned controller actually
+    exercises the ladder rather than pinning one frequency."""
+    sim = SimConfig(n_cu=8, n_wf=8, n_epochs=48, entries=16,
+                    offset_blocks=8)
+    tr = run_sim(progs["comd"], sim,
+                 LMECH.make_learned_spec("learned_s", _init_params(seed=1)))
+    assert {"work", "energy", "err", "fidx", "true_sens",
+            "hit_rate"} <= set(tr)
+    assert tr["fidx"].shape == (sim.n_epochs, sim.n_cu)
+    assert np.isfinite(tr["work"]).all()
+
+
+# ---------------------------------------------------------------------------
+# deadline-aware objective lowering
+# ---------------------------------------------------------------------------
+
+
+def test_deadline_objective_lowering_roundtrip():
+    np.testing.assert_array_equal(objective_weights("deadline05"),
+                                  np.asarray([1.0, 0.0, 0.95], np.float32))
+    np.testing.assert_array_equal(objective_weights("deadline10"),
+                                  np.asarray([1.0, 0.0, 0.90], np.float32))
+    # distinct from perfcap by exactly the Pbar Lagrangian term
+    np.testing.assert_array_equal(
+        objective_weights("deadline05") - objective_weights("perfcap05"),
+        np.asarray([1.0, 0.0, 0.0], np.float32))
+    for bad in ("deadline", "deadline5", "deadline123", "deadlineXY"):
+        with pytest.raises(ValueError):
+            objective_weights(bad)
+
+
+def test_deadline_objective_sweeps_like_any_axis(progs):
+    """deadline<pct> rides the existing objective axis: live for
+    selecting mechanisms (distinct traces), collapsed for statics."""
+    sim = SimConfig(n_cu=8, n_wf=8, n_epochs=32, entries=16,
+                    offset_blocks=8)
+    SW.reset_counters()
+    grid = run_grid(progs, sim, {"objective": ["ed2p", "deadline05"]},
+                    ("static17", "crisp"))
+    assert SW.DISPATCH_ROWS["grid_static17"] == len(progs)
+    tr_a = grid[("ed2p",)]["comd"]["crisp"]
+    tr_b = grid[("deadline05",)]["comd"]["crisp"]
+    assert not np.array_equal(tr_a["fidx"], tr_b["fidx"])
+    # statics are broadcast bitwise across the collapsed axis
+    np.testing.assert_array_equal(
+        grid[("ed2p",)]["comd"]["static17"]["energy"],
+        grid[("deadline05",)]["comd"]["static17"]["energy"])
+    # the deadline constraint binds: sustained rate stays near the cap
+    f_dead = grid[("deadline05",)]["comd"]["crisp"]["fidx"]
+    assert f_dead.mean() > grid[("ed2p",)]["comd"]["crisp"]["fidx"].mean()
