@@ -56,9 +56,18 @@ Results are cached per ``(spec, static shape)`` (:func:`axis_liveness` is
 ``lru_cache``'d; specs are frozen/hashable and hook functions compare by
 identity), so the registration-time check, the ``run_grid`` dispatch
 guard and the CI report all share one trace per spec per process.
+
+Since ``use_pallas`` became a grid engine mode, the registration-time
+check (:func:`verify_spec_axes` with ``static_cfg=None``) audits the
+specialized scan under BOTH engines: :data:`TINY_CONFIG` (jnp body) and
+:data:`TINY_CONFIG_V2` (the fused v2 body, traced through the
+direct-eval interpret engine so the jaxpr walk sees its real data flow).
+An axis the v2 body reads but the spec omits is rejected exactly like a
+jnp-body under-declaration.
 """
 from __future__ import annotations
 
+import dataclasses
 import functools
 import warnings
 from dataclasses import dataclass
@@ -73,6 +82,7 @@ try:  # jax >= 0.4.16 re-exports the stable jaxpr types here
 except ImportError:  # pragma: no cover - older jax
     from jax.core import ClosedJaxpr, Jaxpr, Literal
 
+from repro import kernels as KER
 from repro.core import mechanisms as MECH
 from repro.core import simulate as SIM
 from repro.core import workloads as WL
@@ -85,6 +95,17 @@ from repro.core.simulate import SimConfig
 # data-flow graph as a production shape — at ~100x less tracing work.
 TINY_CONFIG = SimConfig(n_cu=2, n_wf=2, n_epochs=2, entries=8,
                         offset_blocks=1)
+
+# The same audit point under the fused-kernel grid engine: a v2-capable
+# spec's specialized scan routes through ``kernels.epoch_fused``'s body
+# instead of the jnp scan body, and the declared-axes contract must hold
+# for THAT trace too (the grid dedup broadcasts it identically under
+# ``use_pallas="v2"``). The default :func:`verify_spec_axes` call — the
+# registration-time check — audits both configs and dedups via
+# ``AuditResult`` equality, so a spec whose v2 trace happens to fall
+# back to the jnp body (``v2_capable=False``, or no interpret engine)
+# pays nothing extra.
+TINY_CONFIG_V2 = dataclasses.replace(TINY_CONFIG, use_pallas="v2")
 
 
 @functools.lru_cache(maxsize=1)
@@ -308,13 +329,10 @@ def axis_liveness(mech: Union[str, MechanismSpec],
         waiver=spec.liveness_waiver)
 
 
-def verify_spec_axes(mech: Union[str, MechanismSpec],
-                     static_cfg: Optional[SimConfig] = None) -> AuditResult:
-    """Audit ``mech`` and enforce the declaration contract: raise
-    :class:`AxisLivenessError` on under-declaration (unless the spec
-    carries a documented ``liveness_waiver``), warn
-    :class:`DeadAxisWarning` on over-declaration naming the dead axes."""
-    res = axis_liveness(mech, static_cfg)
+def _enforce_audit(res: AuditResult, *, warn_over: bool = True) -> None:
+    """Apply the declaration contract to one :class:`AuditResult`: raise
+    :class:`AxisLivenessError` on unwaived under-declaration, warn
+    :class:`DeadAxisWarning` on over-declaration (when ``warn_over``)."""
     under, over = res.under_declared, res.over_declared
     if under and res.waiver is None:
         culprits = [f"  {ch}: depends on {missing}" for ch, axes in
@@ -335,8 +353,8 @@ def verify_spec_axes(mech: Union[str, MechanismSpec],
     if under and res.waiver is not None:
         warnings.warn(
             f"mechanism {res.name!r} under-declares {under} under waiver: "
-            f"{res.waiver}", DeadAxisWarning, stacklevel=2)
-    if over:
+            f"{res.waiver}", DeadAxisWarning, stacklevel=3)
+    if over and warn_over:
         warnings.warn(
             f"mechanism {res.name!r} over-declares exec_axes: {over} "
             f"is dead in its trace (declared {res.declared}, derived "
@@ -344,7 +362,32 @@ def verify_spec_axes(mech: Union[str, MechanismSpec],
             "differ only on a dead axis each get their own scan "
             "(DISPATCH_ROWS shows the extra rows). Drop the axis from "
             "exec_axes to let the dedup collapse them.",
-            DeadAxisWarning, stacklevel=2)
+            DeadAxisWarning, stacklevel=3)
+
+
+def verify_spec_axes(mech: Union[str, MechanismSpec],
+                     static_cfg: Optional[SimConfig] = None) -> AuditResult:
+    """Audit ``mech`` and enforce the declaration contract: raise
+    :class:`AxisLivenessError` on under-declaration (unless the spec
+    carries a documented ``liveness_waiver``), warn
+    :class:`DeadAxisWarning` on over-declaration naming the dead axes.
+
+    At the default audit point (``static_cfg=None``) the spec is audited
+    under BOTH engine modes — the jnp scan body (:data:`TINY_CONFIG`) and
+    the fused-kernel v2 body (:data:`TINY_CONFIG_V2`) — since the grid
+    dedup broadcasts whichever body ``SimStatic.use_pallas`` selects. The
+    v2 pass enforces under-declaration only (the fused body computes some
+    shared context either way, so a dead-axis warning there would be
+    noise) and is skipped when it traces identically to the jnp pass or
+    when no direct-eval interpret engine is available (a compiled
+    ``pallas_call`` is opaque to the jaxpr walk and would taint every
+    output with every axis)."""
+    res = axis_liveness(mech, static_cfg)
+    _enforce_audit(res)
+    if static_cfg is None and KER._resolve_interpret(None):
+        res2 = axis_liveness(mech, TINY_CONFIG_V2)
+        if res2 != res:
+            _enforce_audit(res2, warn_over=False)
     return res
 
 

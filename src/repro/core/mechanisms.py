@@ -166,6 +166,14 @@ class MechanismSpec:
     # text. Never use it to silence a REAL under-declaration — that is
     # exactly the dedup-unsoundness the auditor exists to prevent.
     liveness_waiver: Optional[str] = None
+    # Whether the fused v2 epoch kernel (kernels.epoch_fused) can serve
+    # this mechanism's scan. Forced False in __post_init__ for families
+    # the kernel does not model: static pins (no predict step), the fork
+    # oracle (reads this epoch's own forks), and custom predict hooks
+    # (arbitrary traced callables). Under ``use_pallas`` v2 such specs
+    # silently fall back to the jnp scan body — same numerics contract
+    # as the default path.
+    v2_capable: bool = True
 
     def __post_init__(self):
         assert self.family in FAMILIES, \
@@ -217,6 +225,8 @@ class MechanismSpec:
                 f"engine-imposed live axes {missing} in exec_axes — an "
                 "omitted live axis makes the grid dedup broadcast wrong "
                 "results")
+        if self.family in ("static", "oracle") or self.predict is not None:
+            object.__setattr__(self, "v2_capable", False)
         if not self.label:
             object.__setattr__(self, "label", self.name)
 

@@ -131,6 +131,12 @@ _ID_CTR_PC = next(s.traced_id for s in MECH.fork_specs()
 # counter models at ids 0..n-2, the fork-accurate reactive (accreac) last
 assert all(s.cu_model for s in _REACT_SPECS[:-1]) and \
     _REACT_SPECS[-1].fork_estimator, _REACT_SPECS
+# the shared traced-id executable can run the fused v2 epoch kernel only
+# if EVERY mechanism it multiplexes is v2-capable (all builtin traced
+# fork mechanisms are; the flag exists for the fallback contract of
+# oracle/custom/static specs — see MechanismSpec.v2_capable)
+_FORK_V2_CAPABLE = all(s.v2_capable for s in MECH.fork_specs()
+                       if s.is_traced)
 
 
 @dataclass(frozen=True)
@@ -152,6 +158,9 @@ class SimStatic:
     # predict/update pair), "v2" (ONE fused fork--execute epoch kernel),
     # True = auto (v2 when the mechanism/flags permit, else v1, else jnp)
     use_pallas: Union[bool, str]
+    # v2 only: tile the CU axis of the fused kernel over a
+    # (n_cu // pallas_block_cu,)-grid pallas_call pair (None = monolithic)
+    pallas_block_cu: Optional[int]
     power: PWR.PowerStatic        # ladder length (sets fork/predict shapes)
 
 
@@ -230,6 +239,8 @@ class SimConfig:
     record_wf: bool = False
     # False | True | "v1" | "v2" — Pallas kernel generation (see SimStatic)
     use_pallas: Union[bool, str] = False
+    # v2 blocked-(CU,)-grid tile size (None = monolithic kernel)
+    pallas_block_cu: Optional[int] = None
     power: PWR.PowerConfig = PWR.DEFAULT  # V/f + IVR hardware regime
     seed: int = 0
 
@@ -243,6 +254,7 @@ class SimConfig:
             cus_per_table=self.cus_per_table,
             cus_per_domain=self.cus_per_domain,
             record_wf=self.record_wf, use_pallas=self.use_pallas,
+            pallas_block_cu=self.pallas_block_cu,
             power=self.power.static_part())
 
     def axes(self) -> SimAxes:
@@ -541,17 +553,23 @@ def _scan_sim(prog: Program, p_blocks, seed, st: SimStatic, ax: SimAxes,
         is_static_f = is_custom = False
         is_pc = is_react = is_oracle = None  # resolved per-trace via mech id
     # Pallas generation select: "v2" is the fused fork--execute epoch
-    # kernel (kernels.epoch_fused) and covers exactly the builtin traced
-    # fork family — every mechanism whose epoch is the standard predict ->
-    # select -> 11-way execute -> estimate shape. record_wf emits per-WF
-    # fork channels the fused kernel does not materialize, so it stays on
-    # the unfused body. "v1" (and v2-ineligible fallback) is the PC-table
+    # kernel (kernels.epoch_fused) and covers the builtin traced fork
+    # family — every mechanism whose epoch is the standard predict ->
+    # select -> 11-way execute -> estimate shape — both as a specialized
+    # trace AND as the traced-mechanism-id executable the sweep layer
+    # vmaps (family='fork' kernel mode), so one compiled fused kernel
+    # serves every grid point. Non-capable specs (oracle/custom/static —
+    # see MechanismSpec.v2_capable) and record_wf (per-WF fork channels
+    # the fused kernel does not materialize) fall back to the unfused
+    # body. "v1" (and v2-ineligible fallback) is the PC-table
     # predict/update kernel pair; True auto-selects v2 -> v1 -> jnp.
     mode = st.use_pallas
     assert mode in (False, True, "v1", "v2"), \
         f"use_pallas must be False|True|'v1'|'v2', got {mode!r}"
-    use_pallas_v2 = (mode in (True, "v2") and static_mech
-                     and spec.is_traced and not st.record_wf)
+    use_pallas_v2 = (mode in (True, "v2") and not st.record_wf
+                     and ((static_mech and spec.is_traced
+                           and spec.v2_capable)
+                          or (not static_mech and _FORK_V2_CAPABLE)))
     use_pallas = (not use_pallas_v2 and mode in (True, "v1", "v2")
                   and static_mech and not is_static_f
                   and not is_custom and st.n_cu % st.cus_per_table == 0)
@@ -769,14 +787,25 @@ def _scan_sim(prog: Program, p_blocks, seed, st: SimStatic, ax: SimAxes,
             lat_us=lat_us, power=ax.power,
             cus_per_domain=st.cus_per_domain,
             table=carry.table, tid=tid, wf_i0=carry.wf_i0,
-            wf_sens=carry.wf_sens, table_ema=ax.table_ema,
+            wf_sens=carry.wf_sens,
+            # the (9,)-packed scal operand makes every consumer of any
+            # packed scalar depend on ALL of them in a jaxpr walk, so for
+            # specialized table-free specs the EMA rides in as a trace
+            # literal (value-unused) to keep the axis-liveness audit exact
+            table_ema=(ax.table_ema if spec is None
+                       or spec.family == "pc" else 0.0),
             offset_blocks=st.offset_blocks,
             react_i0=carry.react_i0, react_sens=carry.react_sens,
-            family=spec.family, fork_estimator=spec.fork_estimator,
-            cu_model=spec.cu_model)
+            **v2_kw)
         new = carry._replace(pos=out.pos, f_prev=out.f_sel,
                              e_acc=out.e_acc, t_acc=out.t_acc[0])
-        if spec.family == "pc":
+        if spec is None:
+            # traced-id mode advances every state group; the kernel's
+            # id-gated selects already kept the dead ones at carry values
+            new = new._replace(table=out.table, wf_i0=out.wf_i0,
+                               wf_sens=out.wf_sens, react_i0=out.react_i0,
+                               react_sens=out.react_sens)
+        elif spec.family == "pc":
             new = new._replace(table=out.table, wf_i0=out.wf_i0,
                                wf_sens=out.wf_sens)
         else:
@@ -785,7 +814,9 @@ def _scan_sim(prog: Program, p_blocks, seed, st: SimStatic, ax: SimAxes,
         ys = {"work": out.work, "energy": out.energy, "err": out.err,
               "fidx": out.fidx.astype(jnp.int8),
               "true_sens": out.true_sens}
-        if spec.family == "pc" and spec.hit_telemetry:
+        # traced-id mode emits for all (like the jnp traced family; the
+        # sweep layer filters per spec on unpack)
+        if spec is None or (spec.family == "pc" and spec.hit_telemetry):
             ys["hit_rate"] = out.hit_rate[0]
         live = ep_i < ax.n_ep
         return new, jax.tree.map(
@@ -795,6 +826,20 @@ def _scan_sim(prog: Program, p_blocks, seed, st: SimStatic, ax: SimAxes,
         # three contiguous gather rows per window side (see epoch_fused);
         # scan-invariant, hoisted out of the body
         cum_t = jnp.transpose(prog.cum3)
+        if static_mech:
+            v2_kw = dict(family=spec.family,
+                         fork_estimator=spec.fork_estimator,
+                         cu_model=spec.cu_model)
+        else:
+            # the traced-mechanism-id kernel mode: mech rides in as a
+            # traced operand, and the registry-derived id layout becomes
+            # kernel statics (counter estimators in id order, table ids)
+            v2_kw = dict(family="fork", mech=mech,
+                         react_models=tuple(
+                             s.cu_model for s in _REACT_SPECS
+                             if not s.fork_estimator),
+                         pc_ids=_PC_IDS, id_ctr_pc=_ID_CTR_PC,
+                         block_cu=st.pallas_block_cu)
     if carry0 is None:
         carry0 = init_carry(p_blocks, st)
     _, ys = lax.scan(body_v2 if use_pallas_v2 else body, carry0,

@@ -68,12 +68,24 @@ flip a frequency decision, after which traces genuinely separate).
 (tested to 1e-5 by ``tests/test_sweep.py``); comparisons *among* sweep-layer
 results need no tolerance at all (bitwise, ``tests/test_grid.py``).
 
-Pallas kernels (``SimConfig.use_pallas``) apply only to the specialized
-static-mechanism ``run_sim`` path — the grid dispatch families here always
-run the pure-jnp scan body (the traced-mechanism-id family multiplexes
-mechanism shapes a single fused kernel trace cannot), so enabling
-``use_pallas`` never perturbs suite/grid numerics or this layer's bitwise
-cross-path contract.
+Pallas kernels (``SimConfig.use_pallas``) are an *opt-in engine mode* of
+this layer: under v2 the traced-mechanism-id family scans the fused epoch
+kernel (``kernels.epoch_fused`` in its ``family="fork"`` mode, which
+multiplexes every traced mechanism behind one traced id) inside the SAME
+vmapped, shard_map'd executables — the engine switch lives in
+``simulate._scan_sim`` keyed off ``SimStatic.use_pallas``, so the ≤2
+fork-family-compile and ``DISPATCH_ROWS`` dedup contracts above are
+unchanged. Specs the kernel cannot serve (static pins, oracle, custom
+predict hooks — ``MechanismSpec.v2_capable`` is False) silently fall back
+to the jnp body inside their own specialized executables. The DEFAULT
+(``use_pallas=False``) grid path still runs the pure-jnp scan body and
+stays bitwise against ``tests/data/grid_reference.npz``; v2 results are
+held to the PR-6 aggregate tolerances instead (XLA cannot be forced to
+reproduce the fused kernel's op order; ``lean=False`` pins the exact
+reference op order for scan-equivalence tests). ``SimConfig.pallas_block_cu``
+additionally selects the blocked ``(CU,)``-grid kernel pair for large CU
+counts (fork family only, lean math; ignored on the direct-eval interpret
+engine).
 """
 from __future__ import annotations
 
@@ -696,7 +708,13 @@ class GridExecutor:
         a :class:`PendingGrid` immediately."""
         n = len(jobs)
         assert n >= 1, "dispatch needs at least one job"
-        bucket = self._bucket(n)
+        # Floor the bucket at 2 rows: a 1-row flat dispatch lets XLA fuse
+        # the degenerate leading axis and codegen f32 chains at a shifted
+        # last ulp vs the >=2-row shapes run_grid dispatches, breaking the
+        # bitwise streamed-vs-one-shot contract for batch-1 requests. The
+        # pad row is a cycled copy dropped on unpack, and ``ops[3]`` below
+        # stays the logical ``n`` so DISPATCH_ROWS accounting is unchanged.
+        bucket = max(self._bucket(n), 2)
         padded = [jobs[i % n] for i in range(bucket)]
         sims = []
         for prog, ov in padded:

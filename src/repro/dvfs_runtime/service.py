@@ -16,7 +16,11 @@ turns the sweep substrate into that service:
   — so the whole stream is served by at most one compile per family
   (<= 2 fork-family compiles with the default single bucket; the
   ``run_grid`` no-retrace contract carried over to streaming) and every
-  streamed row is bitwise-equal to the one-shot grid answer;
+  streamed row is bitwise-equal to the one-shot grid answer — at every
+  batch size, including singletons (the executor floors dispatches at 2
+  rows), and under either engine (a ``use_pallas="v2"`` config streams
+  the fused-kernel grid engine and stays bitwise vs the one-shot v2
+  grid);
 * double buffering: a depth-``depth`` semaphore bounds in-flight batches,
   so batch N+1's operand staging, host->device ``jax.device_put`` and
   donated-carry build overlap batch N's compute — dispatch itself never

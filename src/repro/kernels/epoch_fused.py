@@ -41,19 +41,25 @@ scan body even as plain XLA ops):
   (a fusion-context accident, not a contract; the reference itself is
   not bitwise reproducible across XLA fusion contexts, see ROADMAP
   "numerics CAUTION"). ``lean=True`` — the engine default — applies
-  three value-reassociating rewrites to the (NF+1, CU, WF) execute
-  batch: the epoch scale and noise factor fold into one multiply
+  three value-reassociating rewrites to the (NF, CU, WF) fork-row
+  execute batch: the epoch scale and noise factor fold into one multiply
   (``(dci + dcs f) * (T (1+sigma eps)/nb)``), the intra-CU prefix sum
   becomes a tril matmul (GEMM instead of XLA's serialised cumsum), and
   the memory-scale blend reassociates to ``alloc - am (1-scale)``.
   Measured on the 2-core bench box these take the 64-CU epoch from
-  ~1.23x to ~1.9x over the jnp scan body. The reassociations perturb
-  the float rounding, the argmin select flips on near-ties and the
-  closed loop is chaotic from there — per-epoch traces diverge but
-  aggregate work/energy deviations stay O(1e-4) relative over a
-  200-epoch run (the ``kernel_epoch`` bench record reports both). The
-  fused path is therefore *held* to aggregate tolerances and the
-  default engine path stays jnp.
+  ~1.23x to ~1.9x over the jnp scan body. The SELECTED row is excluded
+  from the rewrites even in lean mode and always runs the exact
+  reference op order: it advances the carry's program position, and one
+  ulp of position decorrelates the sin-hash noise stream O(1) from the
+  unfused body on the very first epoch. With the split, the lean
+  perturbation reaches the carry only through the estimator/table
+  state (one-ulp prediction shifts), so the argmin select flips on
+  genuine near-ties only — per-epoch traces are typically bitwise vs
+  the unfused body until such a flip, and the closed loop is chaotic
+  from there. Aggregate work/energy deviations stay O(1e-4) relative
+  over a 200-epoch run (the ``kernel_epoch``/``grid_kernel`` bench
+  records report them). The fused path is *held* to aggregate
+  tolerances and the default engine path stays jnp.
 * the ``(blk, loop, wf, cu, seed)`` sin-hash noise rides IN as an operand
   (computed by the same ``_epoch_context`` code both paths share):
   ``frac(sin(x) * 43758)`` amplifies one ulp of a differently-fused sin
@@ -84,7 +90,7 @@ mode only (see the kernels lane).
 from __future__ import annotations
 
 import functools
-from typing import NamedTuple, Optional
+from typing import NamedTuple, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -122,18 +128,32 @@ class EpochOut(NamedTuple):
 
 
 def _epoch_math(ins, *, NF, CU, WF, E, T_, ND, CPD, IPB, OFFB,
-                family, fork_estimator, cu_model, mosaic, lean):
+                family, fork_estimator, cu_model, mosaic, lean,
+                react_models=(), pc_ids=(), id_ctr_pc=0):
     """The fused epoch body: pure arrays in, tuple of arrays out, in the
     operand/output order of :func:`epoch_fused`. Runs as the Pallas kernel
     body (via the ref shim below) or evaluated directly (the interpret
     engine).
+
+    ``family='fork'`` is the traced-mechanism-id mode that serves the
+    sweep layer's shared fork executable: the mechanism id rides in as a
+    (1,) int32 operand, BOTH predictor paths and every estimator variant
+    are computed, and ``jnp.where``/``jnp.select`` on the traced id pick
+    the live one — mirroring the jnp traced scan body op-for-op.
+    ``react_models`` names the counter estimators in traced-id order,
+    ``pc_ids`` the table-maintaining ids, ``id_ctr_pc`` the counter-driven
+    pc id (pcstall).
 
     ``lean=False`` orders every op exactly as the unfused reference
     (``simulate._epoch_context``/``_steady_parts``/``_row_counters``/
     ``_select_freq`` and the ``_scan_sim`` body). ``lean=True`` (the
     engine default) applies three value-reassociating rewrites to the
     (NF+1, CU, WF) execute batch — see the module docstring."""
-    if family == "pc":
+    if family == "fork":
+        (i0r, sr, cum_t, pb, pos, ti0, tse, tcnt, wfi, wfs, ri0, rse,
+         fprev, eacc, tacc, F, tid, mech_op, eps, scal, pw_vec) = ins
+        mech = mech_op[0]
+    elif family == "pc":
         (i0r, sr, cum_t, pb, pos, ti0, tse, tcnt, wfi, wfs, fprev, eacc,
          tacc, F, tid, eps, scal, pw_vec) = ins
     else:
@@ -165,19 +185,32 @@ def _epoch_math(ins, *, NF, CU, WF, E, T_, ND, CPD, IPB, OFFB,
     # ---- predict I(f) from carry state (== _pc_lookup / _predict_instr) --
     capr = cap * F[None, :] * T * WF
     hit_rate = None
-    if family == "pc":
+    if family == "fork":
+        # both predictor paths, selected on the traced mechanism id
         idx_lu = (blk // OFFB) % E      # == predictors.table_index
-        t_i0 = ti0[tid[:, None], idx_lu]
-        t_se = tse[tid[:, None], idx_lu]
         hit = tcnt[tid[:, None], idx_lu] > 0
-        i0_cu = jnp.where(hit, t_i0, wfi).sum(-1)
-        s_cu = jnp.where(hit, t_se, wfs).sum(-1)
         hit_rate = hit.astype(jnp.float32).mean().reshape(1)
+        i0_pc = jnp.where(hit, ti0[tid[:, None], idx_lu], wfi).sum(-1)
+        s_pc = jnp.where(hit, tse[tid[:, None], idx_lu], wfs).sum(-1)
+        I_pc = jnp.clip((i0_pc[:, None] + s_pc[:, None] * F[None, :]) * T,
+                        0.0, capr)
+        I_react = jnp.clip((ri0[:, None] + rse[:, None] * F[None, :]) * T,
+                           0.0, capr)
+        I_pred = jnp.where(mech < len(react_models) + 1, I_react, I_pc)
     else:
-        i0_cu = ri0
-        s_cu = rse
-    I_pred = (i0_cu[:, None] + s_cu[:, None] * F[None, :]) * T
-    I_pred = jnp.clip(I_pred, 0.0, capr)
+        if family == "pc":
+            idx_lu = (blk // OFFB) % E  # == predictors.table_index
+            t_i0 = ti0[tid[:, None], idx_lu]
+            t_se = tse[tid[:, None], idx_lu]
+            hit = tcnt[tid[:, None], idx_lu] > 0
+            i0_cu = jnp.where(hit, t_i0, wfi).sum(-1)
+            s_cu = jnp.where(hit, t_se, wfs).sum(-1)
+            hit_rate = hit.astype(jnp.float32).mean().reshape(1)
+        else:
+            i0_cu = ri0
+            s_cu = rse
+        I_pred = (i0_cu[:, None] + s_cu[:, None] * F[None, :]) * T
+        I_pred = jnp.clip(I_pred, 0.0, capr)
 
     # ---- per-domain frequency select (op order == _select_freq) ----------
     pbar = (eacc / jnp.maximum(tacc[0], 1e-3)).reshape(ND, CPD).sum(1)
@@ -194,8 +227,16 @@ def _epoch_math(ins, *, NF, CU, WF, E, T_, ND, CPD, IPB, OFFB,
     f_sel = F[fidx]
 
     # ---- 11-way batched execute (op order == _steady_parts) --------------
+    # In lean mode the value-reassociating rewrites apply to the FORK rows
+    # only — they feed estimator telemetry, which perturbs predictions at
+    # one ulp and flips a frequency decision only on a genuine near-tie.
+    # The selected (executed) row is always computed with the exact
+    # reference op order: it advances the carry's program position, and
+    # one ulp there decorrelates the sin-hash noise stream O(1) from the
+    # unfused body on the very first epoch (observed as the whole
+    # aggregate-deviation budget of the grid A/B before this split).
     F_rows = jnp.broadcast_to(F[:, None], (NF, CU))
-    f_all = jnp.concatenate([F_rows, f_sel[None]], axis=0)
+    f_all = F_rows if lean else jnp.concatenate([F_rows, f_sel[None]], 0)
     f_b = f_all[..., :, None]
     est_instr = (i0_l + s_l * f_b) * T
     nblk = jnp.clip((est_instr / IPB).astype(jnp.int32) + 1, 1, P)
@@ -233,18 +274,38 @@ def _epoch_math(ins, *, NF, CU, WF, E, T_, ND, CPD, IPB, OFFB,
         steady = alloc * (1.0 - mfw * (1.0 - scale[..., None, None]))
     c_f = steady[:NF]                   # (NF,CU,WF) fork rows
     I_f = c_f.sum(-1).T                 # (CU,NF)
-    st_sel = steady[NF]                 # the executed mixed row
+    if lean:
+        # exact selected row: same shared gathers, reference op order
+        est_s = (i0_l + s_l * f_sel[:, None]) * T
+        nblk_s = jnp.clip((est_s / IPB).astype(jnp.int32) + 1, 1, P)
+        gi_s = blk + nblk_s
+        nb_s = nblk_s.astype(jnp.float32)
+        i0w_s = (c_i0[gi_s] - lo_i0) / nb_s
+        sw_s = (c_se[gi_s] - lo_se) / nb_s
+        mfw_s = (c_mf[gi_s] - lo_mf) / nb_s
+        d_s = (i0w_s + sw_s * f_sel[:, None]) * T
+        d_s = d_s * (1.0 + sigma * eps)
+        C_s = cap * f_sel * T
+        b_s = jnp.cumsum(d_s, axis=-1) - d_s
+        a_s = jnp.clip(C_s[:, None] - b_s, 0.0, d_s)
+        tr_s = (a_s * mfw_s).sum()
+        sc_s = jnp.minimum(1.0, membw * T / jnp.maximum(tr_s, 1e-6))
+        st_sel = a_s * (1.0 - mfw_s * (1.0 - sc_s))
+    else:
+        i0w_s, sw_s, mfw_s = i0w[NF], sw[NF], mfw[NF]
+        d_s, a_s = demand[NF], alloc[NF]
+        st_sel = steady[NF]             # the executed mixed row
 
     # ---- selected-row counters (op order == _row_counters) ---------------
-    q = alloc[NF] / jnp.maximum(demand[NF], 1e-6)
+    q = a_s / jnp.maximum(d_s, 1e-6)
     plen = (P * IPB).astype(jnp.float32)
     tentative = pos + st_sel
     group_min = tentative.min(axis=-1)
     boundary = (jnp.floor(group_min / plen) + 1.0) * plen
     committed = jnp.minimum(st_sel,
                             jnp.maximum(boundary[:, None] - pos, 0.0))
-    core_frac = sw[NF] * f_sel[:, None] \
-        / jnp.maximum(i0w[NF] + sw[NF] * f_sel[:, None], 1e-6)
+    core_frac = sw_s * f_sel[:, None] \
+        / jnp.maximum(i0w_s + sw_s * f_sel[:, None], 1e-6)
 
     # ---- transition overhead, telemetry, energy (== _scan_sim body) ------
     trans = (f_sel != fprev)
@@ -259,16 +320,10 @@ def _epoch_math(ins, *, NF, CU, WF, E, T_, ND, CPD, IPB, OFFB,
 
     # ---- estimate + state update -----------------------------------------
     ctrs = {"committed": st_sel, "steady": st_sel, "core_frac": core_frac,
-            "issue_q": q, "mem_frac": mfw[NF]}
+            "issue_q": q, "mem_frac": mfw_s}
     tsens = (I_f[:, -1] - I_f[:, 0]) / ((F[-1] - F[0]) * T)
-    if family == "pc":
-        if fork_estimator:              # accpc: exact per-WF linear model
-            s_wf = (c_f[-1] - c_f[0]) / (F[-1] - F[0])
-            i0_wf = c_f[0] - s_wf * F[0]
-        else:                           # pcstall: counter-driven
-            i0_wf, s_wf = EST.wf_stall_estimate(ctrs, f_sel)
-        i0_wf, s_wf = i0_wf / T, s_wf / T
-        tbl0 = PRED.PCTable(ti0, tse, tcnt)
+
+    def _tbl_update(tbl0, i0_wf, s_wf):
         if mosaic:
             # scatter-free update: one-hot slot mask contracted per CU,
             # then a (T, CU) table-assignment matmul — arbitrary tid maps,
@@ -289,13 +344,46 @@ def _epoch_math(ins, *, NF, CU, WF, E, T_, ND, CPD, IPB, OFFB,
             inew = jnp.where(cnt > 0, isum / jnp.maximum(cnt, 1), 0.0)
             fresh = (tbl0.count == 0) & (cnt > 0)
             blend = jnp.where(fresh, 1.0, jnp.where(cnt > 0, ema, 0.0))
-            tbl = PRED.PCTable(tbl0.i0 * (1 - blend) + inew * blend,
-                               tbl0.sens * (1 - blend) + snew * blend,
-                               tbl0.count + cnt)
-        else:
-            # interpret/direct mode is XLA anyway: reuse the reference
-            # packed scatter-add verbatim (bit-compatible collision sums)
-            tbl = PRED.table_update(tbl0, tid, idx_lu, i0_wf, s_wf, ema)
+            return PRED.PCTable(tbl0.i0 * (1 - blend) + inew * blend,
+                                tbl0.sens * (1 - blend) + snew * blend,
+                                tbl0.count + cnt)
+        # interpret/direct mode is XLA anyway: reuse the reference
+        # packed scatter-add verbatim (bit-compatible collision sums)
+        return PRED.table_update(tbl0, tid, idx_lu, i0_wf, s_wf, ema)
+
+    if family == "fork":
+        # every estimator variant, selected on the traced id — the op
+        # order mirrors the jnp traced scan body (ctrs already carries
+        # the estimator view: committed == steady)
+        n_react = len(react_models) + 1
+        cu_ests = [EST.cu_estimate(ctrs, f_sel, m) for m in react_models]
+        sens_ar = (I_f[:, -1] - I_f[:, 0]) / ((F[-1] - F[0]) * T)
+        i0_ar = I_f[:, 0] / T - sens_ar * F[0]
+        sel = [mech == k for k in range(n_react)]
+        r_i0 = jnp.select(sel, [e[0] / T for e in cu_ests] + [i0_ar], ri0)
+        r_se = jnp.select(sel, [e[1] / T for e in cu_ests] + [sens_ar], rse)
+        i0_est, s_est = EST.wf_stall_estimate(ctrs, f_sel)
+        s_tr = (c_f[-1] - c_f[0]) / (F[-1] - F[0])
+        i0_tr = c_f[0] - s_tr * F[0]
+        i0_wf = jnp.where(mech == id_ctr_pc, i0_est, i0_tr) / T
+        s_wf = jnp.where(mech == id_ctr_pc, s_est, s_tr) / T
+        tbl0 = PRED.PCTable(ti0, tse, tcnt)
+        tbl_u = _tbl_update(tbl0, i0_wf, s_wf)
+        pc_now = functools.reduce(lambda a, b: a | b,
+                                  [mech == i for i in pc_ids])
+        tbl = jax.tree.map(lambda a, b: jnp.where(pc_now, a, b), tbl_u,
+                           tbl0)
+        state = (tbl.i0, tbl.sens, tbl.count,
+                 jnp.where(pc_now, i0_wf, wfi),
+                 jnp.where(pc_now, s_wf, wfs), r_i0, r_se)
+    elif family == "pc":
+        if fork_estimator:              # accpc: exact per-WF linear model
+            s_wf = (c_f[-1] - c_f[0]) / (F[-1] - F[0])
+            i0_wf = c_f[0] - s_wf * F[0]
+        else:                           # pcstall: counter-driven
+            i0_wf, s_wf = EST.wf_stall_estimate(ctrs, f_sel)
+        i0_wf, s_wf = i0_wf / T, s_wf / T
+        tbl = _tbl_update(PRED.PCTable(ti0, tse, tcnt), i0_wf, s_wf)
         state = (tbl.i0, tbl.sens, tbl.count, i0_wf, s_wf)
     else:
         if fork_estimator:              # accreac: exact linear from forks
@@ -309,7 +397,7 @@ def _epoch_math(ins, *, NF, CU, WF, E, T_, ND, CPD, IPB, OFFB,
     outs = (pos + committed,) + state + (
         f_sel, eacc + energy, (tacc + T).reshape(1), work, energy, err,
         fidx.astype(jnp.int32), tsens)
-    if family == "pc":
+    if family in ("pc", "fork"):
         outs = outs + (hit_rate,)
     return outs
 
@@ -319,6 +407,330 @@ def _epoch_kernel(*refs, n_in, **statics):
     ins = tuple(r[...] for r in refs[:n_in])
     for o_ref, o in zip(refs[n_in:], _epoch_math(ins, **statics)):
         o_ref[...] = o
+
+
+# ---------------------------------------------------------------------------
+# Blocked (CU,)-grid fork variant
+# ---------------------------------------------------------------------------
+# At 64-256 CUs the monolithic kernel materializes the whole (NF+1, CU, WF)
+# execute batch at once; the blocked variant tiles the CU axis over a 1-D
+# Pallas grid instead. The epoch has exactly ONE cross-CU dependency chain:
+#
+#   select  -> depends only on carry state + the power budget (NOT on this
+#              epoch's execute), and each frequency domain is whole inside a
+#              block (asserted block_cu % cus_per_domain == 0) — so f_sel is
+#              block-local and EXACT;
+#   traffic -> the memory-scale reduction sums am over ALL CUs, and the
+#              table update aggregates per-table sums over ALL CUs.
+#
+# So the epoch splits into two grid passes plus a tiny jnp epilogue:
+# kernel A computes predict/select per block and accumulates the global
+# traffic (+ table-hit count); kernel B re-derives the block's execute
+# batch (duplicated compute — the win is peak memory), consumes the global
+# traffic, and advances all per-CU state, accumulating the raw per-table
+# (T, E, 3) sums; the epilogue applies the EMA blend, the pc-mode gate and
+# the time accumulator. Cross-block accumulation uses the standard Pallas
+# reduction idiom: a constant-index-map output zero-initialised at
+# program_id 0 and "+="-ed every step (grid steps are sequential on TPU
+# and in interpret mode). The two reductions re-associate float sums
+# across blocks, so blocked results are held to the same aggregate
+# tolerances as lean math (f_sel/fidx stay exactly equal to the
+# unblocked kernel — the select math is untiled-identical); the blocked
+# body implements the lean math mode only and always uses the one-hot
+# matmul table update (the only blockable formulation).
+
+
+def _fork_blk_a(i0r_r, sr_r, cum_r, pb_r, ti0_r, tse_r, tcnt_r, F_r,
+                mech_r, scal_r, pw_r, tacc_r, pos_r, wfi_r, wfs_r, ri0_r,
+                rse_r, eacc_r, tid_r, eps_r,
+                fsel_o, fidx_o, iat_o, traf_o, hit_o, *,
+                NF, BCU, WF, E, CPD, IPB, OFFB, react_models):
+    """Blocked pass A: predict + select + traffic partials for one block."""
+    f32 = jnp.float32
+    i0r, sr, cum_t = i0r_r[...], sr_r[...], cum_r[...]
+    P = pb_r[...][0]
+    ti0, tse, tcnt = ti0_r[...], tse_r[...], tcnt_r[...]
+    F, mech = F_r[...], mech_r[...][0]
+    scal, pw_vec, tacc = scal_r[...], pw_r[...], tacc_r[...]
+    pos, wfi, wfs = pos_r[...], wfi_r[...], wfs_r[...]
+    ri0, rse, eacc = ri0_r[...], rse_r[...], eacc_r[...]
+    tid, eps = tid_r[...], eps_r[...]
+    pw = PWR.PowerAxes(*[pw_vec[i]
+                         for i in range(len(PWR.PowerAxes._fields))])
+    T, sigma, cap = scal[0], scal[1], scal[2]
+    w_pbar, use_rate, capf = scal[5], scal[6], scal[7]
+
+    blk = (pos.astype(jnp.int32) // IPB) % P
+    i0_l, s_l = i0r[blk], sr[blk]
+    c_i0, c_se, c_mf = cum_t[0], cum_t[1], cum_t[2]
+    lo_i0, lo_se, lo_mf = c_i0[blk], c_se[blk], c_mf[blk]
+
+    capr = cap * F[None, :] * T * WF
+    idx_lu = (blk // OFFB) % E
+    hit = tcnt[tid[:, None], idx_lu] > 0
+    i0_pc = jnp.where(hit, ti0[tid[:, None], idx_lu], wfi).sum(-1)
+    s_pc = jnp.where(hit, tse[tid[:, None], idx_lu], wfs).sum(-1)
+    I_pc = jnp.clip((i0_pc[:, None] + s_pc[:, None] * F[None, :]) * T,
+                    0.0, capr)
+    I_react = jnp.clip((ri0[:, None] + rse[:, None] * F[None, :]) * T,
+                       0.0, capr)
+    I_pred = jnp.where(mech < len(react_models) + 1, I_react, I_pc)
+
+    NDb = BCU // CPD                    # whole domains per block
+    pbar = (eacc / jnp.maximum(tacc[0], 1e-3)).reshape(NDb, CPD).sum(1)
+    I_dom = I_pred.reshape(NDb, CPD, NF)
+    act = I_pred / (cap * F[None, :] * T * WF)
+    p_cu = PWR.power(F[None, :], act, pw)
+    P_dom = p_cu.reshape(NDb, CPD, NF).sum(1)
+    I_sum = jnp.maximum(I_dom.sum(1), 1e-3)
+    denom = jnp.where(use_rate > 0.0, I_sum, 1.0)
+    infeasible = I_sum < capf * I_sum[:, -1:]
+    cost = (P_dom + w_pbar * pbar[:, None]) / denom + 1e9 * infeasible
+    idx_dom = jnp.argmin(cost, axis=-1)
+    fidx = jnp.repeat(idx_dom, CPD)
+    f_sel = F[fidx]
+
+    # the block's slice of the 11-way execute, down to the am partials
+    F_rows = jnp.broadcast_to(F[:, None], (NF, BCU))
+    f_all = jnp.concatenate([F_rows, f_sel[None]], axis=0)
+    f_b = f_all[..., :, None]
+    est_instr = (i0_l + s_l * f_b) * T
+    nblk = jnp.clip((est_instr / IPB).astype(jnp.int32) + 1, 1, P)
+    gi = blk + nblk
+    nb = nblk.astype(f32)
+    dci = c_i0[gi] - lo_i0
+    dcs = c_se[gi] - lo_se
+    mfw = (c_mf[gi] - lo_mf) / nb
+    demand = (dci + dcs * f_b) * ((T * (1.0 + sigma * eps)) / nb)
+    C = cap * f_all * T
+    L = jnp.tril(jnp.ones((WF, WF), f32))
+    before = jax.lax.dot_general(
+        demand, L, (((2,), (1,)), ((), ()))) - demand
+    alloc = jnp.clip(C[..., :, None] - before, 0.0, demand)
+    am = alloc * mfw
+
+    fsel_o[...] = f_sel
+    fidx_o[...] = fidx.astype(jnp.int32)
+    iat_o[...] = jnp.take_along_axis(I_pred, fidx[:, None], 1)[:, 0]
+
+    @pl.when(pl.program_id(0) == 0)
+    def _init():
+        traf_o[...] = jnp.zeros(traf_o.shape, traf_o.dtype)
+        hit_o[...] = jnp.zeros(hit_o.shape, hit_o.dtype)
+    traf_o[...] += am.sum(axis=(-2, -1))
+    hit_o[...] += hit.astype(f32).sum().reshape(1)
+
+
+def _fork_blk_b(i0r_r, sr_r, cum_r, pb_r, F_r, mech_r, scal_r, pw_r,
+                traf_r, pos_r, wfi_r, wfs_r, ri0_r, rse_r, fprev_r, eacc_r,
+                tid_r, eps_r, fsel_r, fidx_r, iat_r,
+                pos_o, wfi_o, wfs_o, ri0_o, rse_o, eacc_o, work_o, en_o,
+                err_o, tsens_o, agg_o, *,
+                NF, BCU, WF, E, T_, CPD, IPB, OFFB, react_models, pc_ids,
+                id_ctr_pc):
+    """Blocked pass B: execute + counters + state advance for one block,
+    consuming the global traffic from pass A (the execute batch is
+    re-derived per block — duplicated compute, but no (NF+1, CU, WF)
+    array ever exists)."""
+    f32 = jnp.float32
+    i0r, sr, cum_t = i0r_r[...], sr_r[...], cum_r[...]
+    P = pb_r[...][0]
+    F, mech = F_r[...], mech_r[...][0]
+    scal, pw_vec = scal_r[...], pw_r[...]
+    traffic = traf_r[...]               # GLOBAL (NF+1,) sums
+    pos, wfi, wfs = pos_r[...], wfi_r[...], wfs_r[...]
+    ri0, rse = ri0_r[...], rse_r[...]
+    fprev, eacc = fprev_r[...], eacc_r[...]
+    tid, eps = tid_r[...], eps_r[...]
+    f_sel, fidx = fsel_r[...], fidx_r[...]
+    I_at_sel = iat_r[...]
+    pw = PWR.PowerAxes(*[pw_vec[i]
+                         for i in range(len(PWR.PowerAxes._fields))])
+    T, sigma, cap, membw = scal[0], scal[1], scal[2], scal[3]
+    lat = scal[8]
+
+    blk = (pos.astype(jnp.int32) // IPB) % P
+    i0_l, s_l = i0r[blk], sr[blk]
+    c_i0, c_se, c_mf = cum_t[0], cum_t[1], cum_t[2]
+    lo_i0, lo_se, lo_mf = c_i0[blk], c_se[blk], c_mf[blk]
+
+    F_rows = jnp.broadcast_to(F[:, None], (NF, BCU))
+    f_all = jnp.concatenate([F_rows, f_sel[None]], axis=0)
+    f_b = f_all[..., :, None]
+    est_instr = (i0_l + s_l * f_b) * T
+    nblk = jnp.clip((est_instr / IPB).astype(jnp.int32) + 1, 1, P)
+    gi = blk + nblk
+    nb = nblk.astype(f32)
+    dci = c_i0[gi] - lo_i0
+    dcs = c_se[gi] - lo_se
+    i0w = dci / nb
+    sw = dcs / nb
+    mfw = (c_mf[gi] - lo_mf) / nb
+    demand = (dci + dcs * f_b) * ((T * (1.0 + sigma * eps)) / nb)
+    C = cap * f_all * T
+    L = jnp.tril(jnp.ones((WF, WF), f32))
+    before = jax.lax.dot_general(
+        demand, L, (((2,), (1,)), ((), ()))) - demand
+    alloc = jnp.clip(C[..., :, None] - before, 0.0, demand)
+    am = alloc * mfw
+    scale = jnp.minimum(1.0, membw * T / jnp.maximum(traffic, 1e-6))
+    steady = alloc - am * (1.0 - scale[..., None, None])
+    c_f = steady[:NF]
+    I_f = c_f.sum(-1).T
+    st_sel = steady[NF]
+
+    q = alloc[NF] / jnp.maximum(demand[NF], 1e-6)
+    plen = (P * IPB).astype(f32)
+    tentative = pos + st_sel
+    group_min = tentative.min(axis=-1)
+    boundary = (jnp.floor(group_min / plen) + 1.0) * plen
+    committed = jnp.minimum(st_sel,
+                            jnp.maximum(boundary[:, None] - pos, 0.0))
+    core_frac = sw[NF] * f_sel[:, None] \
+        / jnp.maximum(i0w[NF] + sw[NF] * f_sel[:, None], 1e-6)
+
+    trans = (f_sel != fprev)
+    committed = committed * (1.0 - lat / T * trans[:, None])
+    I_actual = st_sel.sum(-1)
+    work = committed.sum(-1)
+    err = jnp.abs(I_at_sel - I_actual) / jnp.maximum(I_actual, 1e-3)
+    act_w = work / (cap * f_sel * T * WF)
+    energy = PWR.power(f_sel, act_w, pw) * T \
+        + PWR.transition_energy(fprev, f_sel, pw) * trans
+
+    ctrs = {"committed": st_sel, "steady": st_sel, "core_frac": core_frac,
+            "issue_q": q, "mem_frac": mfw[NF]}
+    tsens = (I_f[:, -1] - I_f[:, 0]) / ((F[-1] - F[0]) * T)
+    n_react = len(react_models) + 1
+    cu_ests = [EST.cu_estimate(ctrs, f_sel, m) for m in react_models]
+    sens_ar = (I_f[:, -1] - I_f[:, 0]) / ((F[-1] - F[0]) * T)
+    i0_ar = I_f[:, 0] / T - sens_ar * F[0]
+    sel = [mech == k for k in range(n_react)]
+    r_i0 = jnp.select(sel, [e[0] / T for e in cu_ests] + [i0_ar], ri0)
+    r_se = jnp.select(sel, [e[1] / T for e in cu_ests] + [sens_ar], rse)
+    i0_est, s_est = EST.wf_stall_estimate(ctrs, f_sel)
+    s_tr = (c_f[-1] - c_f[0]) / (F[-1] - F[0])
+    i0_tr = c_f[0] - s_tr * F[0]
+    i0_wf = jnp.where(mech == id_ctr_pc, i0_est, i0_tr) / T
+    s_wf = jnp.where(mech == id_ctr_pc, s_est, s_tr) / T
+    pc_now = functools.reduce(lambda a, b: a | b,
+                              [mech == i for i in pc_ids])
+
+    # raw per-table sums for this block (one-hot matmul; tid carries
+    # GLOBAL table ids so rows land in the right global slot, oob drops)
+    idx_lu = (blk // OFFB) % E
+    slots = jax.lax.broadcasted_iota(jnp.int32, (BCU, WF, E), 2)
+    oh = (idx_lu[:, :, None] == slots).astype(f32)
+    vals = jnp.stack([i0_wf, s_wf, jnp.ones_like(i0_wf)], axis=-1)
+    scat = jax.lax.dot_general(oh, vals, (((1,), (1,)), ((0,), (0,))))
+    t1h = (tid[None, :] ==
+           jax.lax.broadcasted_iota(jnp.int32, (T_, BCU), 0)).astype(f32)
+    agg = jax.lax.dot_general(t1h, scat.reshape(BCU, E * 3),
+                              (((1,), (0,)), ((), ()))).reshape(T_, E, 3)
+
+    pos_o[...] = pos + committed
+    wfi_o[...] = jnp.where(pc_now, i0_wf, wfi)
+    wfs_o[...] = jnp.where(pc_now, s_wf, wfs)
+    ri0_o[...] = r_i0
+    rse_o[...] = r_se
+    eacc_o[...] = eacc + energy
+    work_o[...] = work
+    en_o[...] = energy
+    err_o[...] = err
+    tsens_o[...] = tsens
+
+    @pl.when(pl.program_id(0) == 0)
+    def _init():
+        agg_o[...] = jnp.zeros(agg_o.shape, agg_o.dtype)
+    agg_o[...] += agg
+
+
+def _fork_blocked(operands, statics, *, block_cu, interpret):
+    """Run the fork-family epoch as two (CU // block_cu,)-grid
+    ``pallas_call``s plus a jnp epilogue (see the blocked-variant comment
+    above). Takes the monolithic fork operand tuple and statics dict and
+    returns the same 17-output tuple as ``_epoch_math(family='fork')``."""
+    (i0r, sr, cum_t, pb, pos, ti0, tse, tcnt, wfi, wfs, ri0, rse, fprev,
+     eacc, tacc, F, tid, mech, eps, scal, pw_vec) = operands
+    NF, CU, WF = statics["NF"], statics["CU"], statics["WF"]
+    E, T_ = statics["E"], statics["T_"]
+    f32 = jnp.float32
+    grid = (CU // block_cu,)
+
+    def full(a):
+        nd = a.ndim
+        return pl.BlockSpec(a.shape, lambda i, _n=nd: (0,) * _n)
+
+    def blk(a):
+        if a.ndim == 2:
+            return pl.BlockSpec((block_cu, a.shape[1]), lambda i: (i, 0))
+        return pl.BlockSpec((block_cu,), lambda i: (i,))
+
+    kst = dict(NF=NF, BCU=block_cu, WF=WF, E=E, CPD=statics["CPD"],
+               IPB=statics["IPB"], OFFB=statics["OFFB"],
+               react_models=statics["react_models"])
+    a_full = (i0r, sr, cum_t, pb, ti0, tse, tcnt, F, mech, scal, pw_vec,
+              tacc)
+    a_blk = (pos, wfi, wfs, ri0, rse, eacc, tid, eps)
+    f_sel, fidx, iat, traffic, hit_sum = pl.pallas_call(
+        functools.partial(_fork_blk_a, **kst),
+        grid=grid,
+        in_specs=[full(a) for a in a_full] + [blk(a) for a in a_blk],
+        out_specs=[
+            pl.BlockSpec((block_cu,), lambda i: (i,)),
+            pl.BlockSpec((block_cu,), lambda i: (i,)),
+            pl.BlockSpec((block_cu,), lambda i: (i,)),
+            pl.BlockSpec((NF + 1,), lambda i: (0,)),
+            pl.BlockSpec((1,), lambda i: (0,))],
+        out_shape=[jax.ShapeDtypeStruct((CU,), f32),
+                   jax.ShapeDtypeStruct((CU,), jnp.int32),
+                   jax.ShapeDtypeStruct((CU,), f32),
+                   jax.ShapeDtypeStruct((NF + 1,), f32),
+                   jax.ShapeDtypeStruct((1,), f32)],
+        interpret=interpret,
+    )(*(a_full + a_blk))
+
+    kst_b = dict(kst, T_=T_, pc_ids=statics["pc_ids"],
+                 id_ctr_pc=statics["id_ctr_pc"])
+    b_full = (i0r, sr, cum_t, pb, F, mech, scal, pw_vec, traffic)
+    b_blk = (pos, wfi, wfs, ri0, rse, fprev, eacc, tid, eps, f_sel, fidx,
+             iat)
+    cu1 = [(jax.ShapeDtypeStruct((CU,), f32),
+            pl.BlockSpec((block_cu,), lambda i: (i,)))] * 6
+    cu2 = [(jax.ShapeDtypeStruct((CU, WF), f32),
+            pl.BlockSpec((block_cu, WF), lambda i: (i, 0)))] * 3
+    b_out = cu2 + cu1[:2] + cu1[:1] * 5 + [
+        (jax.ShapeDtypeStruct((T_, E, 3), f32),
+         pl.BlockSpec((T_, E, 3), lambda i: (0, 0, 0)))]
+    outs = pl.pallas_call(
+        functools.partial(_fork_blk_b, **kst_b),
+        grid=grid,
+        in_specs=[full(a) for a in b_full] + [blk(a) for a in b_blk],
+        out_specs=[s for _, s in b_out],
+        out_shape=[s for s, _ in b_out],
+        interpret=interpret,
+    )(*(b_full + b_blk))
+    (pos_n, wfi_n, wfs_n, r_i0, r_se, eacc_n, work, energy, err, tsens,
+     agg) = outs
+
+    # epilogue: EMA blend of the globally-aggregated table sums + the
+    # pc-mode gate + the scalar accumulators (plain jnp — O(T*E))
+    T, ema = scal[0], scal[4]
+    isum, ssum, cnt = agg[..., 0], agg[..., 1], agg[..., 2]
+    snew = jnp.where(cnt > 0, ssum / jnp.maximum(cnt, 1), 0.0)
+    inew = jnp.where(cnt > 0, isum / jnp.maximum(cnt, 1), 0.0)
+    fresh = (tcnt == 0) & (cnt > 0)
+    blend = jnp.where(fresh, 1.0, jnp.where(cnt > 0, ema, 0.0))
+    m = mech[0]
+    pc_now = functools.reduce(lambda a, b: a | b,
+                              [m == i for i in statics["pc_ids"]])
+    nti0 = jnp.where(pc_now, ti0 * (1 - blend) + inew * blend, ti0)
+    ntse = jnp.where(pc_now, tse * (1 - blend) + snew * blend, tse)
+    ntcnt = jnp.where(pc_now, tcnt + cnt, tcnt)
+    hit_rate = (hit_sum / (CU * WF)).reshape(1)
+    return (pos_n, nti0, ntse, ntcnt, wfi_n, wfs_n, r_i0, r_se, f_sel,
+            eacc_n, (tacc + T).reshape(1), work, energy, err, fidx, tsens,
+            hit_rate)
 
 
 def _pack_scal(epoch_us, sigma, cap_per_ghz, membw, table_ema, obj, lat_us
@@ -347,6 +759,12 @@ def epoch_fused(i0_rate: jax.Array, sens_rate: jax.Array, cum_t: jax.Array,
                 # reactive family state
                 react_i0: Optional[jax.Array] = None,
                 react_sens: Optional[jax.Array] = None,
+                # fork (traced-mechanism-id) family
+                mech: Optional[jax.Array] = None,
+                react_models: Tuple[str, ...] = (),
+                pc_ids: Tuple[int, ...] = (),
+                id_ctr_pc: int = 0,
+                block_cu: Optional[int] = None,
                 # mechanism shape
                 family: str = "pc", fork_estimator: bool = False,
                 cu_model: Optional[str] = None,
@@ -365,7 +783,14 @@ def epoch_fused(i0_rate: jax.Array, sens_rate: jax.Array, cum_t: jax.Array,
     groups select the mechanism family exactly like the unfused body:
     ``family='pc'`` needs ``table/tid/wf_i0/wf_sens``, ``family='reactive'``
     needs ``react_i0/react_sens`` (+ ``cu_model`` unless
-    ``fork_estimator``).
+    ``fork_estimator``). ``family='fork'`` is the traced-mechanism-id mode
+    serving the sweep layer's shared fork executable: it needs BOTH state
+    groups plus ``mech`` (a traced scalar id), ``react_models`` (counter
+    estimator names in traced-id order), ``pc_ids`` and ``id_ctr_pc``;
+    ``block_cu`` optionally tiles the CU axis over a (CU // block_cu,)
+    Pallas grid (two passes + epilogue — see the blocked-variant comment;
+    ignored on the direct-eval interpret engine, where there is no
+    (VMEM) reason to tile and the monolithic body is the reference).
 
     ``lean`` selects the math mode: True (default) runs the reassociated
     fast body, False pins the exact reference op order (bitwise-in-engine
@@ -378,7 +803,7 @@ def epoch_fused(i0_rate: jax.Array, sens_rate: jax.Array, cum_t: jax.Array,
     """
     CU, WF = pos.shape
     NF = freqs.shape[0]
-    assert family in ("pc", "reactive"), family
+    assert family in ("pc", "reactive", "fork"), family
     assert CU % cus_per_domain == 0, (CU, cus_per_domain)
     ND = CU // cus_per_domain
     interp = _resolve_interpret(interpret)
@@ -390,7 +815,34 @@ def epoch_fused(i0_rate: jax.Array, sens_rate: jax.Array, cum_t: jax.Array,
     pb = jnp.asarray(p_blocks, jnp.int32).reshape(1)
     f32 = jnp.float32
 
-    if family == "pc":
+    if family == "fork":
+        T_, E = table.i0.shape
+        statics = dict(NF=NF, CU=CU, WF=WF, E=E, T_=T_, ND=ND,
+                       CPD=cus_per_domain, IPB=instr_per_block,
+                       OFFB=offset_blocks, family=family,
+                       fork_estimator=False, cu_model=None,
+                       react_models=tuple(react_models),
+                       pc_ids=tuple(pc_ids), id_ctr_pc=id_ctr_pc,
+                       mosaic=not interp, lean=lean)
+        operands = (i0_rate.astype(f32), sens_rate.astype(f32),
+                    cum_t.astype(f32), pb, pos.astype(f32),
+                    table.i0.astype(f32), table.sens.astype(f32),
+                    table.count.astype(f32), wf_i0.astype(f32),
+                    wf_sens.astype(f32), react_i0.astype(f32),
+                    react_sens.astype(f32), f_prev.astype(f32),
+                    e_acc.astype(f32), jnp.asarray(t_acc, f32).reshape(1),
+                    freqs.astype(f32), tid.astype(jnp.int32),
+                    jnp.asarray(mech, jnp.int32).reshape(1),
+                    eps.astype(f32), scal, pw_vec)
+        out_shape = [jax.ShapeDtypeStruct(s, d) for s, d in [
+            ((CU, WF), f32),                               # pos
+            ((T_, E), f32), ((T_, E), f32), ((T_, E), f32),  # table
+            ((CU, WF), f32), ((CU, WF), f32),              # wf_i0 / wf_sens
+            ((CU,), f32), ((CU,), f32),                    # react_i0 / sens
+            ((CU,), f32), ((CU,), f32), ((1,), f32),       # f_sel/e_acc/t_acc
+            ((CU,), f32), ((CU,), f32), ((CU,), f32),      # work/energy/err
+            ((CU,), jnp.int32), ((CU,), f32), ((1,), f32)]]  # fidx/sens/hit
+    elif family == "pc":
         T_, E = table.i0.shape
         statics = dict(NF=NF, CU=CU, WF=WF, E=E, T_=T_, ND=ND,
                        CPD=cus_per_domain, IPB=instr_per_block,
@@ -431,7 +883,17 @@ def epoch_fused(i0_rate: jax.Array, sens_rate: jax.Array, cum_t: jax.Array,
             ((CU,), f32), ((CU,), f32), ((CU,), f32),      # work/energy/err
             ((CU,), jnp.int32), ((CU,), f32)]]             # fidx/true_sens
 
-    if interp and not via_pallas:
+    if family == "fork" and block_cu is not None \
+            and (not interp or via_pallas):
+        # the blocked (CU,)-grid variant — only meaningful through a real
+        # pallas_call (direct eval has no VMEM to tile for; the monolithic
+        # body stays the interpret-engine reference)
+        assert lean, "the blocked fork kernels implement lean math only"
+        assert CU % block_cu == 0, (CU, block_cu)
+        assert block_cu % cus_per_domain == 0, (block_cu, cus_per_domain)
+        outs = _fork_blocked(operands, statics, block_cu=block_cu,
+                             interpret=interp)
+    elif interp and not via_pallas:
         # the interpret engine: the kernel body as plain XLA ops, no ref
         # simulation wrapper (see module docstring)
         outs = _epoch_math(operands, **statics)
@@ -442,6 +904,14 @@ def epoch_fused(i0_rate: jax.Array, sens_rate: jax.Array, cum_t: jax.Array,
             interpret=interp,
         )(*operands)
 
+    if family == "fork":
+        (pos_n, ti0, tse, tcnt, wfi, wfs, ri0, rse, f_sel, eacc, tacc,
+         work, energy, err, fidx, tsens, hit) = outs
+        return EpochOut(pos=pos_n, table=PRED.PCTable(ti0, tse, tcnt),
+                        wf_i0=wfi, wf_sens=wfs, react_i0=ri0,
+                        react_sens=rse, f_sel=f_sel, e_acc=eacc,
+                        t_acc=tacc, work=work, energy=energy, err=err,
+                        fidx=fidx, true_sens=tsens, hit_rate=hit)
     if family == "pc":
         (pos_n, ti0, tse, tcnt, wfi, wfs, f_sel, eacc, tacc, work, energy,
          err, fidx, tsens, hit) = outs

@@ -57,7 +57,7 @@ so validation measures held-out traces, not interleaved epochs.
 from __future__ import annotations
 
 from dataclasses import dataclass
-from typing import Dict, Tuple
+from typing import Dict, Tuple, Union
 
 import numpy as np
 
@@ -83,10 +83,17 @@ class DatasetConfig:
     objective: str = "ed2p"
     val_frac: float = 0.25
     seed: int = 0               # split stream seed
+    # Sweep engine mode: the factory's run_grid dispatch inherits the
+    # fused-kernel grid path ("v2") for free. Determinism holds per
+    # config — the jnp and v2 engines produce different (each internally
+    # bitwise-reproducible) trace streams, so the engine mode is part of
+    # a dataset's identity like any other field here.
+    use_pallas: Union[bool, str] = False
 
     def sim(self) -> SimConfig:
         return SimConfig(n_cu=self.n_cu, n_epochs=self.n_epochs,
-                         objective=self.objective)
+                         objective=self.objective,
+                         use_pallas=self.use_pallas)
 
 
 def _run_features(otr: Dict[str, np.ndarray], hit: np.ndarray, T: float,

@@ -120,6 +120,36 @@ def test_audit_registry_covers_all_builtins():
     assert all(r.sound for r in results)
 
 
+def test_builtin_declarations_exact_under_v2_engine():
+    """Dual-engine audit, v2 leg: under ``TINY_CONFIG_V2`` (the fused
+    epoch kernel as scan body) every builtin's derived liveness still
+    equals its declared exec_axes exactly — the kernel body must not
+    smuggle axes the jnp body doesn't read (e.g. the packed scalar
+    operand must not make ``table_ema`` live for table-free specs)."""
+    for name in MECH.BUILTIN_NAMES:
+        res = axis_liveness(name, deps.TINY_CONFIG_V2)
+        assert res.waiver is None
+        assert res.exact, (
+            f"{name} under v2: declared={res.declared} "
+            f"derived={res.derived} under={res.under_declared} "
+            f"over={res.over_declared}")
+
+
+def test_under_declared_spec_rejected_by_dual_audit_at_registration():
+    """Registration runs the jnp audit AND (on the interpret engine,
+    where the kernel body is a walkable jaxpr) the v2-config audit: a
+    sneaky under-declared spec is rejected with the culprit axis named,
+    and the v2-config derivation independently convicts the same axis."""
+    spec = MechanismSpec("mut_under_v2", "reactive", CTRL,
+                         predict=_sneaky_predict)
+    with pytest.raises(AxisLivenessError, match="table_ema"):
+        MECH.register(spec)
+    assert "mut_under_v2" not in MECH.names()
+    res2 = axis_liveness(spec, deps.TINY_CONFIG_V2)
+    assert res2.under_declared == ("table_ema",)
+    assert not res2.sound
+
+
 def test_mechanism_table_has_verified_column():
     table = MECH.mechanism_table()
     assert "| verified |" in table

@@ -9,6 +9,7 @@ import jax.numpy as jnp
 import numpy as np
 import pytest
 
+from repro.core import mechanisms as MECH
 from repro.core import power as PWR
 from repro.core import predictors as PRED
 from repro.core import simulate as SIM
@@ -260,6 +261,134 @@ def test_epoch_fused_exact_mode_matches_jnp_scan(monkeypatch, n_cu, n_wf):
                                            err_msg=f"{mech}/{k}")
     finally:
         jax.clear_caches()  # don't leak exact-mode traces to other tests
+
+
+# ---------------------------------------------------------------------------
+# v2 fork mode: the traced-mechanism-id kernel serving the sweep layer
+# ---------------------------------------------------------------------------
+
+# do NOT fold these into EPOCH_FAMS above — test_property draws family
+# indices against that list's layout
+FORK_SPECS = [s for s in MECH.fork_specs() if s.is_traced]
+
+
+def _fork_case(CU, WF, *, seed=0, NF=10, T=3, E=16, P=48):
+    """Operands for a ``family='fork'`` call: the pc case's args plus the
+    reactive state group and the registry-derived id statics (sans the
+    per-spec shape kwargs, which fork mode resolves from the traced id)."""
+    args, kw = _epoch_case("pc", CU, WF, seed=seed, NF=NF, T=T, E=E, P=P)
+    rng = np.random.default_rng(seed + 77)
+    kw.update(
+        family="fork",
+        react_i0=jnp.asarray(rng.uniform(0, 200, CU).astype(np.float32)),
+        react_sens=jnp.asarray(rng.uniform(0, 100, CU).astype(np.float32)),
+        react_models=tuple(s.cu_model for s in SIM._REACT_SPECS
+                           if not s.fork_estimator),
+        pc_ids=SIM._PC_IDS, id_ctr_pc=SIM._ID_CTR_PC)
+    del kw["fork_estimator"], kw["cu_model"]
+    return args, kw
+
+
+@pytest.mark.parametrize("spec", FORK_SPECS, ids=lambda s: s.name)
+def test_epoch_fused_fork_mode_matches_specialized(spec):
+    """For every traced id, the fork-mode kernel must reproduce the
+    specialized-family kernel run on identical carry state: the id-gated
+    selects change WHICH state group advances, never the math. Discrete
+    outputs exactly; floats at fusion-reassociation tolerance. The
+    non-selected state group must pass through at carry values."""
+    args, kw = _fork_case(8, 10, seed=31)
+    out_f = KEF.epoch_fused(*args, **kw, mech=jnp.int32(spec.traced_id))
+    skw = dict(kw)
+    for k in ("react_models", "pc_ids", "id_ctr_pc"):
+        del skw[k]
+    skw.update(family=spec.family, fork_estimator=spec.fork_estimator,
+               cu_model=spec.cu_model)
+    if spec.family == "reactive":
+        for k in ("table", "tid", "wf_i0", "wf_sens"):
+            del skw[k]
+    else:
+        for k in ("react_i0", "react_sens"):
+            del skw[k]
+    out_s = KEF.epoch_fused(*args, **skw)
+    np.testing.assert_array_equal(np.asarray(out_f.fidx),
+                                  np.asarray(out_s.fidx))
+    for field in ("pos", "f_sel", "e_acc", "t_acc", "work", "energy",
+                  "err", "true_sens"):
+        np.testing.assert_allclose(np.asarray(getattr(out_f, field)),
+                                   np.asarray(getattr(out_s, field)),
+                                   rtol=1e-5, atol=1e-5,
+                                   err_msg=f"{spec.name}/{field}")
+    if spec.family == "pc":
+        for f in ("i0", "sens", "count"):
+            np.testing.assert_allclose(
+                np.asarray(getattr(out_f.table, f)),
+                np.asarray(getattr(out_s.table, f)),
+                rtol=1e-5, atol=1e-5, err_msg=f"{spec.name}/table.{f}")
+        for field in ("wf_i0", "wf_sens"):
+            np.testing.assert_allclose(np.asarray(getattr(out_f, field)),
+                                       np.asarray(getattr(out_s, field)),
+                                       rtol=1e-5, atol=1e-5,
+                                       err_msg=f"{spec.name}/{field}")
+        np.testing.assert_allclose(np.asarray(out_f.hit_rate),
+                                   np.asarray(out_s.hit_rate),
+                                   rtol=1e-6, atol=1e-6)
+        # the reactive group is dead for a pc id: exact carry passthrough
+        np.testing.assert_array_equal(np.asarray(out_f.react_i0),
+                                      np.asarray(kw["react_i0"]))
+        np.testing.assert_array_equal(np.asarray(out_f.react_sens),
+                                      np.asarray(kw["react_sens"]))
+    else:
+        for field in ("react_i0", "react_sens"):
+            np.testing.assert_allclose(np.asarray(getattr(out_f, field)),
+                                       np.asarray(getattr(out_s, field)),
+                                       rtol=1e-5, atol=1e-5,
+                                       err_msg=f"{spec.name}/{field}")
+        # the table group is dead for a reactive id: exact passthrough
+        for f in ("i0", "sens", "count"):
+            np.testing.assert_array_equal(
+                np.asarray(getattr(out_f.table, f)),
+                np.asarray(getattr(kw["table"], f)), err_msg=f)
+        np.testing.assert_array_equal(np.asarray(out_f.wf_i0),
+                                      np.asarray(kw["wf_i0"]))
+        np.testing.assert_array_equal(np.asarray(out_f.wf_sens),
+                                      np.asarray(kw["wf_sens"]))
+
+
+@pytest.mark.parametrize("CU,WF,block_cu,cpd", [
+    (8, 6, 4, 1), (8, 6, 2, 1), (16, 5, 4, 1), (8, 6, 4, 2),
+])
+def test_epoch_fused_fork_blocked_matches_unblocked(CU, WF, block_cu, cpd):
+    """The blocked (CU,)-grid kernel pair (forced through
+    pallas_call(interpret) on CPU via ``via_pallas``) agrees with the
+    monolithic fork body: select is block-local and exact (fidx/f_sel
+    equal), floats within the cross-block-reassociation + fully-lean
+    tolerance; and without ``via_pallas`` the ``block_cu`` request is
+    inert on the interpret engine (bitwise the monolithic body)."""
+    args, kw = _fork_case(CU, WF, seed=CU + block_cu + cpd)
+    kw["cus_per_domain"] = cpd
+    # one reactive counter id, the fork-accurate reactive, both pc ids
+    ids = (0, SIM._N_REACT - 1) + SIM._PC_IDS
+    for mech_id in ids:
+        m = jnp.int32(mech_id)
+        a = KEF.epoch_fused(*args, **kw, mech=m)
+        b = KEF.epoch_fused(*args, **kw, mech=m, block_cu=block_cu,
+                            via_pallas=True)
+        np.testing.assert_array_equal(np.asarray(b.fidx),
+                                      np.asarray(a.fidx),
+                                      err_msg=f"mech={mech_id}")
+        np.testing.assert_array_equal(np.asarray(b.f_sel),
+                                      np.asarray(a.f_sel),
+                                      err_msg=f"mech={mech_id}")
+        for x, y in zip(_flat(a), _flat(b)):
+            if np.issubdtype(x.dtype, np.integer):
+                np.testing.assert_array_equal(x, y)
+            else:
+                np.testing.assert_allclose(
+                    y, x, rtol=2e-4, atol=2e-4,
+                    err_msg=f"mech={mech_id}")
+        c = KEF.epoch_fused(*args, **kw, mech=m, block_cu=block_cu)
+        for x, y in zip(_flat(a), _flat(c)):
+            np.testing.assert_array_equal(x, y)
 
 
 def test_epoch_fused_lean_close_to_exact_single_epoch():

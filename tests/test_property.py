@@ -159,3 +159,36 @@ def test_epoch_fused_invariants_random_state(seed, shape, fam):
     if family == "pc":
         assert np.all(np.asarray(out.table.count)
                       >= np.asarray(kw["table"].count))
+
+
+_FORK_MECHS = ("stall", "lead", "crit", "crisp", "accreac",
+               "pcstall", "accpc")
+
+
+@given(seed=st.integers(0, 2**16),
+       epoch_us=st.sampled_from([1.0, 10.0]),
+       mech=st.sampled_from(_FORK_MECHS))
+@settings(max_examples=8, deadline=None)
+def test_grid_v2_engines_agree_through_run_grid(seed, epoch_us, mech):
+    """Grid-v2 mirror of the engine-agreement sweep, driven through the
+    REAL dispatch path (run_grid) rather than a bare kernel call: for any
+    seed/point/traced mechanism, the fused-kernel engine tracks the jnp
+    engine at aggregate tolerance (per-epoch divergence is chaotic — see
+    kernels.epoch_fused). The SimStatic is fixed so hypothesis examples
+    ride one compiled executable per engine."""
+    import dataclasses
+    from repro.core.sweep import run_grid
+    sim = SimConfig(n_cu=8, n_wf=6, n_epochs=40)
+    prog = make_program("pv2", "mixed", seed % 61, P=256)
+    pt = {"epoch_us": [epoch_us]}
+    a = run_grid([prog], sim, pt, (mech,),
+                 seeds=[seed % 97])[(epoch_us,)]["pv2"][mech]
+    b = run_grid([prog], dataclasses.replace(sim, use_pallas="v2"), pt,
+                 (mech,), seeds=[seed % 97])[(epoch_us,)]["pv2"][mech]
+    assert set(a) == set(b)
+    for k in ("work", "energy"):
+        ra = float(np.sum(np.asarray(a[k])))
+        rb = float(np.sum(np.asarray(b[k])))
+        assert abs(ra - rb) / abs(ra) < 2e-3, (mech, k, ra, rb)
+    fidx_a, fidx_b = np.asarray(a["fidx"]), np.asarray(b["fidx"])
+    assert np.mean(fidx_a == fidx_b) > 0.5, mech

@@ -200,3 +200,52 @@ def test_dvfs_request_stream_deterministic():
     for prog, axes, tel in a:
         assert set(axes) <= {"epoch_us", "objective"}
         assert len(tel) == 4 and all(t > 0 for _, t in tel)
+
+
+def test_executor_batch1_bitwise_vs_oneshot(progs):
+    """Satellite acceptance: a batch-1 flat dispatch (buckets=None, one
+    job) is padded to the executor's 2-row bucket floor — a 1-row leading
+    axis lets XLA fuse it away and codegen f32 chains at a shifted last
+    ulp, which silently broke the bitwise streamed-vs-one-shot contract
+    for singleton requests. Per-job executor rows must now equal the
+    multi-row ``run_grid`` answer EXACTLY."""
+    mechs = ("pcstall", "crisp")
+    ex = GridExecutor(SIM, mechs)          # buckets=None: flat dispatch
+    ref = run_grid(progs, SIM, {"epoch_us": [1.0, 10.0],
+                                "objective": ["ed2p", "edp"]}, mechs)
+    for wl, ov in GRID2X2_JOBS:
+        res = ex.run([(progs[wl], ov)])[0]     # batch of ONE
+        want = ref[(ov["epoch_us"], ov["objective"])][wl]
+        for m in mechs:
+            for ch, v in want[m].items():
+                np.testing.assert_array_equal(
+                    np.asarray(res[m][ch]), np.asarray(v),
+                    err_msg=f"{wl}/{ov}/{m}/{ch}")
+
+
+def test_executor_streams_v2_engine_bitwise_vs_oneshot_v2(progs):
+    """Tentpole thread-through: a GridExecutor built on a ``use_pallas='v2'``
+    SimConfig inherits the fused-kernel engine — streamed micro-batches
+    equal the one-shot v2 ``run_grid`` bitwise, served by <= 2 new
+    fork-family compiles. Uses a SimStatic no other test shares
+    (n_wf=14 + v2) so the compile delta is established in-test."""
+    sim = dataclasses.replace(SIM, n_wf=14, use_pallas="v2")
+    mechs = ("pcstall", "crisp")
+    SW.reset_counters()
+    ex = GridExecutor(sim, mechs, buckets=(4,))
+    jobs = [(progs[wl], ov) for wl, ov in GRID2X2_JOBS]
+    results = []
+    for i in range(0, len(jobs), 3):
+        results.extend(ex.run(jobs[i:i + 3]))
+    ref = run_grid(progs, sim, {"epoch_us": [1.0, 10.0],
+                                "objective": ["ed2p", "edp"]}, mechs)
+    fork = {k: v for k, v in SW.TRACE_COUNTS.items()
+            if k in ("grid_forks", "grid_oracle")}
+    assert 1 <= sum(fork.values()) <= 2, fork
+    for (wl, ov), res in zip(GRID2X2_JOBS, results):
+        want = ref[(ov["epoch_us"], ov["objective"])][wl]
+        for m in mechs:
+            for ch, v in want[m].items():
+                np.testing.assert_array_equal(
+                    np.asarray(res[m][ch]), np.asarray(v),
+                    err_msg=f"{wl}/{ov}/{m}/{ch}")

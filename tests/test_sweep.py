@@ -245,3 +245,69 @@ def test_run_sim_use_pallas_v2_exact_fallbacks():
         for k in a:
             np.testing.assert_allclose(b[k], a[k], rtol=1e-4, atol=1e-4,
                                        err_msg=f"{mech}/{k}")
+
+
+def test_run_grid_use_pallas_v2_matches_jnp_aggregates(progs):
+    """Tentpole acceptance: the fused epoch kernel as a grid ENGINE mode.
+    ``use_pallas='v2'`` swaps the scan body inside the shared traced-id
+    fork executable, so a multi-point grid over every traced family still
+    compiles exactly ONE fork-family executable and dispatches exactly
+    (workloads x points x mechs) dedup-accounted rows — while the results
+    track the jnp engine at aggregate tolerance (per-epoch traces diverge
+    chaotically from lean-math argmin near-tie flips; the selected row
+    itself is exact, see the kernel docstring)."""
+    from repro.core import sweep as SW
+    sim = SimConfig(n_cu=8, n_wf=14, n_epochs=48)
+    grid = {"epoch_us": [1.0, 10.0], "objective": ["ed2p", "edp"]}
+    mechs = ("stall", "crisp", "accreac", "pcstall", "accpc")
+    ref = run_grid(progs, sim, grid, mechs)
+    SW.reset_counters()
+    v2 = run_grid(progs, dataclasses.replace(sim, use_pallas="v2"),
+                  grid, mechs)
+    assert SW.TRACE_COUNTS["grid_forks"] == 1
+    assert SW.DISPATCH_ROWS["grid_forks"] == len(WORKLOADS) * 4 * len(mechs)
+    for key in ref:
+        for wl in WORKLOADS:
+            for m in mechs:
+                a, b = ref[key][wl][m], v2[key][wl][m]
+                assert set(a) == set(b), (key, wl, m)
+                for k in ("work", "energy"):
+                    ra, rb = float(np.sum(a[k])), float(np.sum(b[k]))
+                    assert abs(ra - rb) / abs(ra) < 2e-3, \
+                        (key, wl, m, k, ra, rb)
+
+
+def test_run_grid_use_pallas_v2_fallback_specs_bitwise(progs):
+    """Specs the v2 kernel cannot serve (static: no forks; oracle:
+    forks-first selection) fall back to the unfused body under
+    ``use_pallas=True`` — BITWISE, since their executables trace the
+    identical jnp scan."""
+    sim = SimConfig(n_cu=8, n_wf=10, n_epochs=40)
+    grid = {"epoch_us": [1.0, 10.0]}
+    a = run_grid(progs, sim, grid, ("static17", "oracle"))
+    b = run_grid(progs, dataclasses.replace(sim, use_pallas=True),
+                 grid, ("static17", "oracle"))
+    for key in a:
+        for wl in WORKLOADS:
+            for m in ("static17", "oracle"):
+                for k, v in a[key][wl][m].items():
+                    np.testing.assert_array_equal(
+                        v, b[key][wl][m][k], err_msg=f"{key}/{wl}/{m}/{k}")
+
+
+def test_run_grid_v2_block_cu_inert_on_interpret(progs):
+    """``pallas_block_cu`` only selects the blocked kernel pair through a
+    real (or via_pallas-forced) pallas_call; on the direct-eval interpret
+    engine the monolithic body runs either way — bitwise."""
+    sim = SimConfig(n_cu=8, n_wf=10, n_epochs=40, use_pallas="v2")
+    grid = {"epoch_us": [1.0, 10.0]}
+    mechs = ("crisp", "pcstall")
+    a = run_grid(progs, sim, grid, mechs)
+    b = run_grid(progs, dataclasses.replace(sim, pallas_block_cu=4),
+                 grid, mechs)
+    for key in a:
+        for wl in WORKLOADS:
+            for m in mechs:
+                for k, v in a[key][wl][m].items():
+                    np.testing.assert_array_equal(
+                        v, b[key][wl][m][k], err_msg=f"{key}/{wl}/{m}/{k}")
